@@ -1,0 +1,126 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV lines (derived =
+the experiment's headline number, e.g. final validation loss).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, consensus_distance, init_state
+
+
+def run_population(
+    loss_fn: Callable,
+    params0,
+    hcfg: HDOConfig,
+    batch_fn: Callable[[np.random.Generator], Dict],
+    *,
+    steps: int,
+    eval_fn: Optional[Callable] = None,
+    eval_every: int = 10,
+    seed: int = 0,
+    param_dim: Optional[int] = None,
+) -> Dict:
+    """Runs HDO for `steps`; returns loss/metric curves + timing."""
+    step_fn = jax.jit(build_hdo_step(loss_fn, hcfg, param_dim=param_dim))
+    state = init_state(params0, hcfg)
+    rng = np.random.default_rng(seed + 1)
+    curve: List[Tuple[int, float]] = []
+    std_curve: List[Tuple[int, float]] = []
+    t_start = time.time()
+    n_calls = 0
+    for t in range(steps):
+        batches = batch_fn(rng)
+        state, metrics = step_fn(state, batches)
+        n_calls += 1
+        if t % eval_every == 0 or t == steps - 1:
+            if eval_fn is not None:
+                val = float(eval_fn(state))
+            else:
+                val = float(metrics["loss_mean"])
+            curve.append((t, val))
+            std_curve.append((t, float(metrics["loss_std"])))
+    wall = time.time() - t_start
+    return {
+        "curve": curve,
+        "std_curve": std_curve,
+        "final": curve[-1][1],
+        "us_per_call": wall / max(n_calls, 1) * 1e6,
+        "gamma": float(consensus_distance(state.params)),
+        "state": state,
+    }
+
+
+def eval_mean_model(loss_fn, eval_batch):
+    """Evaluates the population-mean model (paper: mu_t) on held-out data."""
+
+    def ev(state):
+        mu = jax.tree.map(lambda x: x.mean(0), state.params)
+        return loss_fn(mu, eval_batch)
+
+    return jax.jit(ev)
+
+
+def csv_line(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# simple models used by the paper's small-scale experiments
+# ---------------------------------------------------------------------------
+
+
+def linear_softmax_model(d: int, n_classes: int):
+    """Logistic regression (the paper's convex case, Fig 2)."""
+
+    def init(key):
+        return {"w": jnp.zeros((d, n_classes)), "b": jnp.zeros((n_classes,))}
+
+    def loss(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return init, loss
+
+
+def mlp_model(d: int, hidden: int, n_classes: int):
+    """2-hidden-layer MLP (paper Fig 6 ablation)."""
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = 1.0 / np.sqrt(d)
+        return {
+            "w1": jax.random.normal(k1, (d, hidden)) * s,
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, hidden)) / np.sqrt(hidden),
+            "b2": jnp.zeros((hidden,)),
+            "w3": jax.random.normal(k3, (hidden, n_classes)) / np.sqrt(hidden),
+            "b3": jnp.zeros((n_classes,)),
+        }
+
+    def loss(params, batch):
+        h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+        h = jax.nn.relu(h @ params["w2"] + params["b2"])
+        logits = h @ params["w3"] + params["b3"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return init, loss
+
+
+def accuracy_fn(apply_logits):
+    def acc(params, batch):
+        logits = apply_logits(params, batch)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+    return acc

@@ -1,0 +1,96 @@
+"""Run the full (architecture x input-shape x mesh) dry-run matrix.
+
+Each combination runs in a fresh subprocess (XLA device count locks at
+first jax init) and appends a JSON line to the results file.
+
+  PYTHONPATH=src python -m benchmarks.dryrun_matrix \
+      --out results/dryrun_baseline.jsonl [--multi-pod] [--archs a,b] \
+      [--shapes train_4k,...] [--gossip dense] [--timeout 1800]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "qwen1.5-0.5b", "whisper-base", "pixtral-12b", "qwen1.5-4b", "gemma2-9b",
+    "llama4-maverick-400b-a17b", "mamba2-780m", "zamba2-2.7b", "yi-9b",
+    "qwen2-moe-a2.7b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_combo(arch: str, shape: str, *, multi_pod: bool, gossip: str, rv: int,
+              timeout: int, out: str, extra_args=()) -> dict:
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--gossip", gossip, "--rv", str(rv),
+        "--out", out,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    cmd += list(extra_args)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+        if proc.returncode == 0:
+            line = [l for l in proc.stdout.splitlines() if l.startswith("{")][-1]
+            return json.loads(line)
+        report = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                  "error": proc.stderr.strip().splitlines()[-8:], "wall_s": time.time() - t0}
+    except subprocess.TimeoutExpired:
+        report = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                  "error": "timeout", "wall_s": time.time() - t0}
+    with open(out, "a") as f:
+        f.write(json.dumps(report) + "\n")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_baseline.jsonl")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--gossip", default="dense")
+    ap.add_argument("--rv", type=int, default=2)
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r.get("multi_pod", False)))
+            except Exception:
+                pass
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for multi_pod in meshes:
+        for arch in args.archs.split(","):
+            for shape in args.shapes.split(","):
+                key = (arch, shape, multi_pod)
+                if key in done:
+                    print(f"skip (done): {key}", flush=True)
+                    continue
+                t0 = time.time()
+                r = run_combo(arch, shape, multi_pod=multi_pod, gossip=args.gossip,
+                              rv=args.rv, timeout=args.timeout, out=args.out)
+                status = ("SKIP" if "skipped" in r else
+                          ("ERR " if "error" in r else "ok  "))
+                print(f"{status} {arch:28s} {shape:12s} multi_pod={multi_pod} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

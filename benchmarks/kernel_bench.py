@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: wall time of the jitted Pallas wrappers
+(interpret mode on CPU — structural check; real perf is a TPU artifact)
+and of their jnp oracles, printed as ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> None:
+    d = 1 << 16
+    coeffs = jax.random.normal(jax.random.PRNGKey(0), (8,))
+    us_k = _time(lambda: ops.zo_combine(coeffs, 7, d))
+    us_r = _time(lambda: jax.jit(lambda c: ref.zo_combine_ref(c, 7, d))(coeffs))
+    print(csv_line("kernel_zo_combine_interp", us_k, f"ref_us={us_r:.1f}"))
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    us_k = _time(lambda: ops.zo_perturb(x, 7, 1, 1e-3))
+    us_r = _time(lambda: jax.jit(lambda v: ref.zo_perturb_ref(v, 7, 1, 1e-3))(x))
+    print(csv_line("kernel_zo_perturb_interp", us_k, f"ref_us={us_r:.1f}"))
+
+    y = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    us_k = _time(lambda: ops.gossip_avg(x, y))
+    us_r = _time(lambda: jax.jit(ref.gossip_avg_ref)(x, y))
+    print(csv_line("kernel_gossip_avg_interp", us_k, f"ref_us={us_r:.1f}"))
+
+    b, s, h, p, n = 1, 512, 4, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    xs = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    Cm = jax.random.normal(ks[4], (b, s, n))
+    us_k = _time(lambda: ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=128), n=2)
+    us_r = _time(lambda: jax.jit(ref.ssd_scan_ref)(xs, dt, A, Bm, Cm), n=2)
+    print(csv_line("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.1f}"))
+
+
+if __name__ == "__main__":
+    main()

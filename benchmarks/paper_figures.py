@@ -1,0 +1,210 @@
+"""One benchmark per paper figure (CPU-reduced sizes; see DESIGN.md §7).
+
+Each function prints ``name,us_per_call,derived`` CSV lines and returns
+a dict of curves for further analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import HDOConfig
+from repro.data import brackets, synthetic
+from repro.models import build_model
+
+BASE = dict(lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False, nu=1e-3)
+
+
+def _cls_batches(task, n_agents, bsz):
+    def fn(rng):
+        xs, ys = [], []
+        for _ in range(n_agents):
+            x, y = task.sample(rng, bsz)
+            xs.append(x)
+            ys.append(y)
+        return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+
+    return fn
+
+
+def fig1_rv_count(steps: int = 120) -> Dict:
+    """Fig 1/6: number of random vectors vs convergence (biased vs
+    unbiased forward-gradient estimators), MLP on synthetic MNIST."""
+    task = synthetic.PrototypeClassification(d=64, n_classes=10, noise=0.6, seed=0)
+    init, loss = common.mlp_model(64, 32, 10)
+    xe, ye = task.eval_set(1024)
+    eval_batch = {"x": jnp.asarray(xe), "y": jnp.asarray(ye)}
+    out = {}
+    for name, kind, rv in [
+        ("biased_rv1", "multi_rv", 1),
+        ("biased_rv8", "multi_rv", 8),
+        ("biased_rv32", "multi_rv", 32),
+        ("unbiased_rv8", "fwd_grad", 8),
+    ]:
+        hcfg = HDOConfig(n_agents=4, n_zeroth=4, estimator_zo=kind, rv=rv,
+                         gossip="dense", **{**BASE, "lr": 0.02})
+        res = common.run_population(
+            loss, init(jax.random.PRNGKey(0)), hcfg,
+            _cls_batches(task, 4, 32), steps=steps,
+            eval_fn=common.eval_mean_model(loss, eval_batch))
+        print(common.csv_line(f"fig1_{name}", res["us_per_call"], round(res["final"], 4)))
+        out[name] = res["curve"]
+    return out
+
+
+def fig2_convex_populations(steps: int = 60) -> Dict:
+    """Fig 2: logistic regression, mono vs hybrid populations
+    (paper: 24 FO / 256 ZO / hybrid; reduced 4 FO / 24 ZO / hybrid)."""
+    task = synthetic.PrototypeClassification(d=64, n_classes=10, noise=0.8, seed=1)
+    init, loss = common.linear_softmax_model(64, 10)
+    xe, ye = task.eval_set(1024)
+    eval_batch = {"x": jnp.asarray(xe), "y": jnp.asarray(ye)}
+    out = {}
+    pops = [
+        ("1fo", 1, 0), ("4fo", 4, 0), ("24zo", 24, 24), ("4fo_24zo", 28, 24),
+    ]
+    for name, n, n0 in pops:
+        hcfg = HDOConfig(n_agents=n, n_zeroth=n0, estimator_zo="multi_rv", rv=8,
+                         gossip="dense" if n > 1 else "none", **{**BASE, "lr": 0.02})
+        res = common.run_population(
+            loss, init(jax.random.PRNGKey(0)), hcfg,
+            _cls_batches(task, n, 2), steps=steps,
+            eval_fn=common.eval_mean_model(loss, eval_batch))
+        print(common.csv_line(f"fig2_{name}", res["us_per_call"], round(res["final"], 4)))
+        out[name] = res["curve"]
+    return out
+
+
+def fig3_nonconvex_hybrid(steps: int = 120) -> Dict:
+    """Fig 3 (ResNet-18/CIFAR in the paper; reduced: MLP on synthetic
+    images): 1 ZO / 1 FO / 5 ZO / 1 FO + 5 ZO."""
+    task = synthetic.PrototypeImages(hw=8, channels=3, n_classes=10, noise=0.5, seed=2)
+    d = 8 * 8 * 3
+    init, loss = common.mlp_model(d, 64, 10)
+    xe, ye = task.eval_set(1024)
+    eval_batch = {"x": jnp.asarray(xe.reshape(-1, d)), "y": jnp.asarray(ye)}
+
+    def batches(n):
+        def fn(rng):
+            xs, ys = [], []
+            for _ in range(n):
+                x, y = task.sample(rng, 16)
+                xs.append(x.reshape(-1, d))
+                ys.append(y)
+            return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+
+        return fn
+
+    out = {}
+    for name, n, n0 in [("1zo", 1, 1), ("1fo", 1, 0), ("5zo", 5, 5), ("1fo_5zo", 6, 5)]:
+        hcfg = HDOConfig(n_agents=n, n_zeroth=n0, estimator_zo="fwd_grad", rv=8,
+                         gossip="dense" if n > 1 else "none", **{**BASE, "lr": 0.02})
+        res = common.run_population(loss, init(jax.random.PRNGKey(0)), hcfg,
+                                    batches(n), steps=steps,
+                                    eval_fn=common.eval_mean_model(loss, eval_batch))
+        print(common.csv_line(f"fig3_{name}", res["us_per_call"], round(res["final"], 4)))
+        out[name] = res["curve"]
+    return out
+
+
+def fig4_brackets_transformer(steps: int = 160) -> Dict:
+    """Fig 4: Transformer on the Brackets (Dyck) dataset; populations
+    1 ZO / 1 FO / 4 FO / 16 ZO / 4 FO + 16 ZO (reduced sizes)."""
+    from repro.configs.paper_tasks import brackets_transformer
+
+    cfg = dataclasses.replace(brackets_transformer(), dtype="float32")
+    model = build_model(cfg)
+    toks, labs = brackets.make_dataset(n_samples=2048, seq_len=17, seed=0)
+    toks_v, labs_v = brackets.make_dataset(n_samples=512, seq_len=17, seed=99)
+    eval_batch = {"tokens": jnp.asarray(toks_v), "labels": jnp.asarray(labs_v)}
+
+    def batches(n):
+        def fn(rng):
+            idx = rng.integers(0, len(toks), size=(n, 32))
+            return {"tokens": jnp.asarray(toks[idx]), "labels": jnp.asarray(labs[idx])}
+
+        return fn
+
+    out = {}
+    for name, n, n0 in [("1zo", 1, 1), ("1fo", 1, 0), ("4fo", 4, 0),
+                        ("8zo", 8, 8), ("2fo_8zo", 10, 8)]:
+        hcfg = HDOConfig(n_agents=n, n_zeroth=n0, estimator_zo="fwd_grad", rv=16,
+                         gossip="dense" if n > 1 else "none",
+                         lr=0.05, momentum=0.8, warmup_steps=10,
+                         cosine_steps=steps, use_cosine=True, nu=1e-4)
+        res = common.run_population(model.loss, model.init(jax.random.PRNGKey(0)),
+                                    hcfg, batches(n), steps=steps,
+                                    eval_fn=common.eval_mean_model(model.loss, eval_batch))
+        print(common.csv_line(f"fig4_{name}", res["us_per_call"], round(res["final"], 4)))
+        out[name] = res["curve"]
+    return out
+
+
+def fig5_lr_impact(steps: int = 400) -> Dict:
+    """Fig 5: learning-rate impact on the stochastic noise floor
+    (regression, 1 FO + 15 ZO reduced from 3 FO + 90 ZO)."""
+    task = synthetic.PrototypeClassification(d=64, n_classes=10, noise=0.8, seed=3)
+    init, loss = common.linear_softmax_model(64, 10)
+    xe, ye = task.eval_set(1024)
+    eval_batch = {"x": jnp.asarray(xe), "y": jnp.asarray(ye)}
+    out = {}
+    for lr in (0.005, 0.02, 0.1, 0.5):
+        hcfg = HDOConfig(n_agents=16, n_zeroth=15, estimator_zo="multi_rv", rv=8,
+                         gossip="dense", **{**BASE, "lr": lr})
+        res = common.run_population(loss, init(jax.random.PRNGKey(0)), hcfg,
+                                    _cls_batches(task, 16, 2), steps=steps,
+                                    eval_fn=common.eval_mean_model(loss, eval_batch))
+        print(common.csv_line(f"fig5_lr{lr}", res["us_per_call"], round(res["final"], 4)))
+        out[str(lr)] = res["curve"]
+    return out
+
+
+def speedup_vs_population(steps: int = 400, tau: float = 0.25) -> Dict:
+    """Theorem 1 "Speedup" paragraph: parallel-time-to-threshold should
+    shrink ~linearly (up to log factors) in the population size n.
+
+    Measures steps until the mean-model validation loss < tau for
+    hybrid populations of growing n (half FO / half ZO)."""
+    task = synthetic.PrototypeClassification(d=64, n_classes=10, noise=1.2, seed=5)
+    init, loss = common.linear_softmax_model(64, 10)
+    xe, ye = task.eval_set(1024)
+    eval_batch = {"x": jnp.asarray(xe), "y": jnp.asarray(ye)}
+    out = {}
+    base_steps = None
+    for n in (2, 4, 8, 16):
+        hcfg = HDOConfig(n_agents=n, n_zeroth=n // 2, estimator_zo="fwd_grad",
+                         rv=8, gossip="dense", **{**BASE, "lr": 0.02})
+        res = common.run_population(
+            loss, init(jax.random.PRNGKey(0)), hcfg,
+            _cls_batches(task, n, 2), steps=steps, eval_every=5,
+            eval_fn=common.eval_mean_model(loss, eval_batch))
+        hit = next((t for t, v in res["curve"] if v < tau), steps)
+        if base_steps is None:
+            base_steps = hit
+        speedup = base_steps / max(hit, 1)
+        print(common.csv_line(f"speedup_n{n}", res["us_per_call"],
+                              f"steps_to_{tau}={hit};speedup_vs_n2={speedup:.2f}"))
+        out[n] = hit
+    return out
+
+
+def fig7_consensus(steps: int = 120) -> Dict:
+    """Fig 7: loss std across nodes -> 0 for varying ZO counts (16 nodes)."""
+    task = synthetic.PrototypeClassification(d=64, n_classes=10, noise=0.6, seed=4)
+    init, loss = common.mlp_model(64, 32, 10)
+    out = {}
+    for name, n0 in [("16fo", 0), ("8zo_8fo", 8), ("16zo", 16)]:
+        hcfg = HDOConfig(n_agents=16, n_zeroth=n0, estimator_zo="fwd_grad", rv=8,
+                         gossip="dense", **{**BASE, "lr": 0.05})
+        res = common.run_population(loss, init(jax.random.PRNGKey(0)), hcfg,
+                                    _cls_batches(task, 16, 16), steps=steps)
+        final_std = res["std_curve"][-1][1]
+        print(common.csv_line(f"fig7_{name}", res["us_per_call"],
+                              f"loss_std={final_std:.4f};gamma={res['gamma']:.2e}"))
+        out[name] = res["std_curve"]
+    return out

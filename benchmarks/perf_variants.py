@@ -1,0 +1,60 @@
+"""§Perf hillclimb driver: runs labeled dry-run variants for the three
+chosen (arch x shape) pairs and appends to results/perf_variants.jsonl.
+
+Pairs (see EXPERIMENTS.md §Perf):
+  A qwen1.5-0.5b x train_4k  — most representative of the paper's technique
+  B llama4-maverick x train_4k — most collective-bound
+  C gemma2-9b x long_500k    — worst roofline fraction
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.dryrun_matrix import run_combo
+
+VARIANTS = [
+    # (label, arch, shape, extra dryrun args)
+    ("A0_baseline", "qwen1.5-0.5b", "train_4k", []),
+    ("A1_split", "qwen1.5-0.5b", "train_4k", ["--dispatch", "split"]),
+    ("A2_split_rr", "qwen1.5-0.5b", "train_4k",
+     ["--dispatch", "split", "--gossip", "rr_static"]),
+    ("A3_split_rr_remat", "qwen1.5-0.5b", "train_4k",
+     ["--dispatch", "split", "--gossip", "rr_static", "--attn-remat"]),
+    ("B0_baseline", "llama4-maverick-400b-a17b", "train_4k", []),
+    ("B1_moe_constraint", "llama4-maverick-400b-a17b", "train_4k",
+     ["--moe-constraint"]),
+    ("B2_moe_bf16mom", "llama4-maverick-400b-a17b", "train_4k",
+     ["--moe-constraint", "--momentum-dtype", "bfloat16"]),
+    ("B3_moe_bf16mom_remat", "llama4-maverick-400b-a17b", "train_4k",
+     ["--moe-constraint", "--momentum-dtype", "bfloat16", "--attn-remat"]),
+    ("C0_baseline", "gemma2-9b", "long_500k", []),
+    ("C1_window_slice", "gemma2-9b", "long_500k", ["--window-slice"]),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf_variants.jsonl")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    for label, arch, shape, extra in VARIANTS:
+        if args.only and not label.startswith(tuple(args.only.split(","))):
+            continue
+        r = run_combo(arch, shape, multi_pod=args.multi_pod, gossip="dense",
+                      rv=2, timeout=2400, out=args.out,
+                      extra_args=extra + ["--label", label])
+        ok = "ERR" if "error" in r else "ok"
+        if ok == "ok":
+            print(f"{label:24s} flops/dev={r['flops_per_device']:.3e} "
+                  f"bytes/dev={r['bytes_per_device']:.3e} "
+                  f"coll/dev={r['coll_bytes_per_device']:.3e} "
+                  f"peak={r['memory'].get('peak_memory_in_bytes', 0)/1e9:.2f}GB "
+                  f"bottleneck={r['bottleneck']}", flush=True)
+        else:
+            print(f"{label:24s} ERROR {str(r.get('error'))[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

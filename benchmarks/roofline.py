@@ -1,0 +1,78 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the
+dry-run results JSONL.
+
+  PYTHONPATH=src python -m benchmarks.roofline \
+      --in results/dryrun_baseline.jsonl [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    out = []
+    for line in open(path):
+        try:
+            out.append(json.loads(line))
+        except Exception:
+            pass
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def render(rows: List[Dict], markdown: bool = True, multi_pod=False) -> str:
+    hdr = ["arch", "shape", "t_comp", "t_mem", "t_coll", "bottleneck",
+           "useful", "peak_mem/dev", "note"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for r in rows:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if "error" in r:
+            row = [r["arch"], r["shape"], "-", "-", "-", "-", "-", "-", "ERROR"]
+        elif "skipped" in r:
+            row = [r["arch"], r["shape"], "-", "-", "-", "-", "-", "-",
+                   "skipped (full attention; DESIGN.md §4)"]
+        else:
+            mem = r.get("memory", {}).get("peak_memory_in_bytes")
+            useful = r.get("useful_ratio")
+            row = [
+                r["arch"], r["shape"],
+                fmt_s(r.get("t_compute_s")), fmt_s(r.get("t_memory_s")),
+                fmt_s(r.get("t_collective_s")), r.get("bottleneck", "-"),
+                f"{useful:.2f}" if useful else "-",
+                f"{mem/1e9:.2f}GB" if mem else "-",
+                "",
+            ]
+        lines.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun_baseline.jsonl")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.inp)
+    # keep last entry per (arch, shape, mesh)
+    last = {}
+    for r in rows:
+        last[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    print(render(list(last.values()), multi_pod=args.multi_pod))
+
+
+if __name__ == "__main__":
+    main()

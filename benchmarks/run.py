@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one benchmark per paper figure plus
+kernel microbenchmarks.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig4,...] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list: fig1,fig2,fig3,fig4,fig5,fig7,kernels")
+    ap.add_argument("--fast", action="store_true", help="fewer steps (CI)")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figures
+
+    scale = 0.25 if args.fast else 1.0
+    jobs = {
+        "fig1": lambda: paper_figures.fig1_rv_count(steps=max(20, int(120 * scale))),
+        "fig2": lambda: paper_figures.fig2_convex_populations(steps=max(16, int(60 * scale))),
+        "fig3": lambda: paper_figures.fig3_nonconvex_hybrid(steps=max(20, int(120 * scale))),
+        "fig4": lambda: paper_figures.fig4_brackets_transformer(steps=max(16, int(80 * scale))),
+        "fig5": lambda: paper_figures.fig5_lr_impact(steps=max(40, int(400 * scale))),
+        "fig7": lambda: paper_figures.fig7_consensus(steps=max(20, int(120 * scale))),
+        "speedup": lambda: paper_figures.speedup_vs_population(steps=max(60, int(400 * scale))),
+        "kernels": kernel_bench.main,
+    }
+    only = args.only.split(",") if args.only else list(jobs)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in only:
+        if name not in jobs:
+            print(f"# unknown benchmark {name}", file=sys.stderr)
+            continue
+        t1 = time.time()
+        jobs[name]()
+        print(f"# {name} done in {time.time()-t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

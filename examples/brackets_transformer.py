@@ -1,0 +1,76 @@
+"""Paper Figure 4 reproduction: a Transformer trained on the Brackets
+(Dyck-1) dataset by a hybrid FO/ZO population, vs mono-type populations.
+
+  PYTHONPATH=src python examples/brackets_transformer.py [--steps 120]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HDOConfig
+from repro.configs.paper_tasks import brackets_transformer
+from repro.core import build_hdo_step, init_state
+from repro.data import brackets
+from repro.models import build_model
+
+
+def run_population(name, n_agents, n_zo, model, toks, labs, eval_batch, steps, seed=0,
+                   curves=None):
+    hcfg = HDOConfig(n_agents=n_agents, n_zeroth=n_zo, estimator_zo="fwd_grad",
+                     rv=16, gossip="dense" if n_agents > 1 else "none",
+                     lr=0.05, momentum=0.8, warmup_steps=10, cosine_steps=steps,
+                     nu=1e-4, seed=seed)
+    step = jax.jit(build_hdo_step(model.loss, hcfg))
+    state = init_state(model.init(jax.random.PRNGKey(seed)), hcfg)
+    eval_loss = jax.jit(lambda s: model.loss(jax.tree.map(lambda x: x.mean(0), s.params), eval_batch))
+    rng = np.random.default_rng(seed + 1)
+    curve = []
+    for t in range(steps):
+        idx = rng.integers(0, len(toks), size=(n_agents, 32))
+        state, _ = step(state, {"tokens": jnp.asarray(toks[idx]), "labels": jnp.asarray(labs[idx])})
+        if t % 10 == 0 or t == steps - 1:
+            curve.append((t, float(eval_loss(state))))
+    print(f"{name:12s} " + " ".join(f"{v:.3f}" for _, v in curve))
+    if curves is not None:
+        curves[name] = curve
+    return curve[-1][1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(brackets_transformer(), dtype="float32")
+    model = build_model(cfg)
+    toks, labs = brackets.make_dataset(n_samples=4096, seq_len=17, seed=0)
+    toks_v, labs_v = brackets.make_dataset(n_samples=512, seq_len=17, seed=7)
+    eval_batch = {"tokens": jnp.asarray(toks_v), "labels": jnp.asarray(labs_v)}
+
+    print("validation loss every 10 steps:")
+    finals, curves = {}, {}
+    for name, n, n0 in [("1 FO", 1, 0), ("1 ZO", 1, 1), ("4 FO", 4, 0),
+                        ("8 ZO", 8, 8), ("2FO+8ZO", 10, 8)]:
+        finals[name] = run_population(name, n, n0, model, toks, labs, eval_batch,
+                                      args.steps, curves=curves)
+
+    print("\nfinal validation loss:")
+    for k, v in sorted(finals.items(), key=lambda kv: kv[1]):
+        print(f"  {k:10s} {v:.4f}")
+    # robust sanity: every population must have improved on its start
+    for name, curve in curves.items():
+        assert curve[-1][1] < curve[0][1] + 1e-3, (name, curve[0][1], curve[-1][1])
+    # the paper's orderings (hybrid < mono-ZO, more FO < fewer FO) emerge
+    # with enough steps (paper: T=1000); print the observation either way
+    if finals["2FO+8ZO"] < finals["8 ZO"] and finals["4 FO"] < finals["1 FO"]:
+        print("\npaper orderings reproduced (hybrid < mono-ZO; 4FO < 1FO)")
+    else:
+        print(f"\nordering not yet separated at {args.steps} steps "
+              "(paper uses T=1000); rerun with --steps 400")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: hybrid decentralized optimization in ~40 lines.
+
+A population of 8 agents (5 zeroth-order + 3 first-order) jointly fits
+a logistic-regression model — the paper's convex setting (Fig 2) — and
+demonstrates that the hybrid population converges and reaches consensus.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, consensus_distance, init_state
+from repro.data import synthetic
+
+# 1. a task: 10-class classification on 64-dim synthetic "MNIST"
+task = synthetic.PrototypeClassification(d=64, n_classes=10, noise=0.8, seed=0)
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+params0 = {"w": jnp.zeros((64, 10)), "b": jnp.zeros((10,))}
+
+# 2. the HDO population: 5 ZO agents (forward-only) + 3 FO agents
+cfg = HDOConfig(n_agents=8, n_zeroth=5, estimator_zo="fwd_grad", rv=8,
+                gossip="dense", lr=0.05, momentum=0.0, warmup_steps=0,
+                use_cosine=False)
+step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=64 * 10 + 10))
+state = init_state(params0, cfg)
+
+# 3. train: each agent sees only its own shard of data
+rng = np.random.default_rng(0)
+for t in range(200):
+    xs, ys = zip(*[task.sample(rng, 16) for _ in range(cfg.n_agents)])
+    batches = {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+    state, metrics = step(state, batches)
+    if t % 40 == 0 or t == 199:
+        print(f"step {t:4d}  loss={float(metrics['loss_mean']):.4f}  "
+              f"consensus_gamma={float(consensus_distance(state.params)):.2e}")
+
+# 4. evaluate the population-mean model
+xe, ye = task.eval_set(2048)
+mu = jax.tree.map(lambda x: x.mean(0), state.params)
+acc = float(jnp.mean(jnp.argmax(jnp.asarray(xe) @ mu["w"] + mu["b"], -1) == jnp.asarray(ye)))
+print(f"final accuracy of the mean model: {acc:.3f}")
+assert acc > 0.8

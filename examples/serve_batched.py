@@ -1,0 +1,69 @@
+"""End-to-end driver: serve a small model with batched requests.
+
+Trains a reduced Mamba2 with an HDO population for a few hundred steps
+on a synthetic LM stream, then serves batched generation requests from
+the population-mean model through the KV/SSM-cache decode path.
+
+  PYTHONPATH=src python examples/serve_batched.py [--train-steps 200]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, init_state
+from repro.data import synthetic
+from repro.launch.serve import generate
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--batch-requests", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config("mamba2-780m"), dtype="float32")
+    model = build_model(cfg)
+    sample = synthetic.lm_token_stream(cfg.vocab_size, seed=0)
+
+    # ---- train with HDO (2 FO + 2 ZO agents) ---------------------------
+    hcfg = HDOConfig(n_agents=4, n_zeroth=2, estimator_zo="fwd_grad", rv=4,
+                     gossip="dense", lr=0.02, momentum=0.9, warmup_steps=10,
+                     cosine_steps=args.train_steps)
+    step = jax.jit(build_hdo_step(model.loss, hcfg))
+    state = init_state(model.init(jax.random.PRNGKey(0)), hcfg)
+    rng = np.random.default_rng(1)
+    t0 = time.time()
+    for t in range(args.train_steps):
+        toks = sample(rng, 4 * 8, 65).reshape(4, 8, 65)
+        batches = {"tokens": jnp.asarray(toks[..., :-1]), "labels": jnp.asarray(toks[..., 1:])}
+        state, metrics = step(state, batches)
+        if t % 50 == 0 or t == args.train_steps - 1:
+            print(f"train step {t:4d} loss={float(metrics['loss_mean']):.4f} "
+                  f"({time.time()-t0:.0f}s)")
+
+    params = jax.tree.map(lambda x: x[0], state.params)  # any agent (consensus)
+
+    # ---- serve batched requests ----------------------------------------
+    prompts = jnp.asarray(sample(rng, args.batch_requests, 16))
+    t0 = time.time()
+    out = generate(model, params, prompts, 16 + args.gen, args.gen)
+    dt = time.time() - t0
+    print(f"\nserved {args.batch_requests} requests x {args.gen} new tokens "
+          f"in {dt:.2f}s ({args.batch_requests*args.gen/dt:.0f} tok/s)")
+
+    # the synthetic stream is a sparse Markov chain — a trained model's
+    # greedy continuations should stay inside each token's 4-successor set
+    table_sample = synthetic.lm_token_stream(cfg.vocab_size, seed=0)
+    print("sample continuation:", np.asarray(out[0, 16:16+12]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: Hybrid Decentralized Optimization (HDO, AAAI-25) as a
+multi-pod JAX training/inference framework.  See README.md."""
+
+__version__ = "1.0.0"

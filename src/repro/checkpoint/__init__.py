@@ -1,0 +1,74 @@
+"""Checkpointing: pytree <-> .npz with a msgpack sidecar for structure
+and metadata (step, config fingerprint).  No orbax in the container.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(np.asarray(leaf))
+    return names, leaves, treedef
+
+
+def config_fingerprint(cfg) -> str:
+    try:
+        import dataclasses
+
+        blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
+    except TypeError:
+        blob = repr(cfg)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _to_native(arr: np.ndarray) -> np.ndarray:
+    """npz cannot store ml_dtypes (bf16 etc.) — store as f32."""
+    if arr.dtype.kind not in "biufc":
+        return arr.astype(np.float32)
+    return arr
+
+
+def save(path: str, tree: PyTree, *, step: int = 0, meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    np.savez(path + ".npz", **{f"leaf_{i}": _to_native(l) for i, l in enumerate(leaves)})
+    sidecar = {
+        "names": names,
+        "step": int(step),
+        "meta": meta or {},
+        "dtypes": [str(l.dtype) for l in leaves],
+        "shapes": [list(l.shape) for l in leaves],
+    }
+    with open(path + ".msgpack", "wb") as f:
+        f.write(msgpack.packb(sidecar))
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, int, Dict]:
+    """Restores into the structure of ``like`` (names must match)."""
+    with open(path + ".msgpack", "rb") as f:
+        sidecar = msgpack.unpackb(f.read())
+    data = np.load(path + ".npz")
+    names_disk = sidecar["names"]
+    names_like, leaves_like, treedef = _flatten_with_names(like)
+    if names_disk != names_like:
+        missing = set(names_disk) ^ set(names_like)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]} ...")
+    leaves = [
+        np.asarray(data[f"leaf_{i}"], dtype=leaves_like[i].dtype)
+        for i in range(len(names_like))
+    ]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, sidecar["step"], sidecar["meta"]

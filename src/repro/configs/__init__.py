@@ -1,0 +1,76 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` / ``get_smoke_config(arch_id)`` /
+``get_mesh_config(arch_id)`` resolve any of the 10 assigned
+architectures (plus the paper's own tasks via ``paper_tasks``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import (
+    gemma2_9b,
+    llama4_maverick,
+    mamba2_780m,
+    pixtral_12b,
+    qwen1_5_0_5b,
+    qwen1_5_4b,
+    qwen2_moe_a2_7b,
+    whisper_base,
+    yi_9b,
+    zamba2_2_7b,
+)
+from repro.configs.base import (
+    INPUT_SHAPES,
+    HDOConfig,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+)
+
+_MODULES = {
+    qwen1_5_0_5b.ARCH_ID: qwen1_5_0_5b,
+    whisper_base.ARCH_ID: whisper_base,
+    pixtral_12b.ARCH_ID: pixtral_12b,
+    qwen1_5_4b.ARCH_ID: qwen1_5_4b,
+    gemma2_9b.ARCH_ID: gemma2_9b,
+    llama4_maverick.ARCH_ID: llama4_maverick,
+    mamba2_780m.ARCH_ID: mamba2_780m,
+    zamba2_2_7b.ARCH_ID: zamba2_2_7b,
+    yi_9b.ARCH_ID: yi_9b,
+    qwen2_moe_a2_7b.ARCH_ID: qwen2_moe_a2_7b,
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].full()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke()
+
+
+def get_mesh_config(arch_id: str) -> MeshConfig:
+    return _MODULES[arch_id].mesh()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "HDOConfig",
+    "InputShape",
+    "MeshConfig",
+    "ModelConfig",
+    "RunConfig",
+    "get_config",
+    "get_smoke_config",
+    "get_mesh_config",
+    "all_configs",
+]

@@ -1,0 +1,265 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture gets a ``ModelConfig`` (exact published dims)
+plus a ``smoke()`` reduced variant (<=2 layers, d_model<=512, <=4 experts)
+used by CPU tests.  ``HDOConfig`` configures the paper's technique;
+``MeshConfig`` selects the population placement on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (transformer / SSM / hybrid / MoE)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+
+    # attention variants
+    qkv_bias: bool = False
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None  # window size for local layers
+    # pattern: how many of every `local_global_period` layers are local.
+    # gemma2 alternates local/global -> period 2, 1 local.
+    local_global_period: int = 0  # 0 = all global
+    rope_theta: float = 10_000.0
+
+    # MLP
+    mlp_activation: str = "swiglu"  # swiglu | gelu
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None  # per-expert hidden (defaults d_ff)
+    moe_every: int = 1  # MoE layer every k layers (1 = all layers MoE)
+    router_aux_coef: float = 0.01
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    conv_kernel: int = 4
+
+    # hybrid (zamba2): shared attention block applied every k SSM layers
+    shared_attn_every: int = 0
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500  # stub frame count
+
+    # VLM (pixtral): number of stubbed image patch embeddings prepended
+    num_patches: int = 0
+
+    # norms / misc
+    sandwich_norm: bool = False  # gemma2: post-sublayer norms + embed scale
+    rms_eps: float = 1e-6
+    # perf knobs (beyond-paper; see EXPERIMENTS.md §Perf)
+    attn_remat: bool = False  # recompute attention score blocks in bwd
+    decode_window_slice: bool = False  # sliding-window decode reads only the window
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # citation for the config source
+    source: str = ""
+
+    @property
+    def use_rope(self) -> bool:
+        # whisper uses absolute (sinusoidal / learned) positions
+        return not self.is_encoder_decoder
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, ff, L, V = self.d_model, self.d_ff, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = 0
+        # embeddings (+ output head unless tied)
+        total += V * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("ssm",):
+            total += L * self._ssm_block_params()
+        elif self.family == "hybrid":
+            total += L * self._ssm_block_params()
+            if self.shared_attn_every:
+                total += self._attn_params(d, n_q, n_kv, hd) + self._mlp_params(d, ff)
+        else:
+            per_layer = self._attn_params(d, n_q, n_kv, hd)
+            if self.num_experts:
+                eff = self.moe_d_ff or ff
+                moe_layer = self.num_experts * self._mlp_params(d, eff)
+                if self.num_shared_experts:
+                    moe_layer += self._mlp_params(d, eff * self.num_shared_experts)
+                moe_layer += d * self.num_experts  # router
+                n_moe = L // self.moe_every
+                n_dense = L - n_moe
+                total += n_moe * (per_layer + moe_layer)
+                total += n_dense * (per_layer + self._mlp_params(d, ff))
+            else:
+                total += L * (per_layer + self._mlp_params(d, ff))
+        if self.is_encoder_decoder:
+            # encoder layers + decoder cross-attn
+            total += self.num_encoder_layers * (
+                self._attn_params(d, n_q, n_kv, hd) + self._mlp_params(d, ff)
+            )
+            total += self.num_layers * self._attn_params(d, n_q, n_kv, hd)  # cross attn
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed-in experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        d, ff, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.resolved_head_dim
+        eff = self.moe_d_ff or ff
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        n_moe = L // self.moe_every
+        n_dense = L - n_moe
+        per_attn = self._attn_params(d, self.num_heads, self.num_kv_heads, hd)
+        active_moe = self.num_experts_per_tok * self._mlp_params(d, eff)
+        if self.num_shared_experts:
+            active_moe += self._mlp_params(d, eff * self.num_shared_experts)
+        total += n_moe * (per_attn + active_moe + d * self.num_experts)
+        total += n_dense * (per_attn + self._mlp_params(d, ff))
+        return total
+
+    def _attn_params(self, d, n_q, n_kv, hd) -> int:
+        return d * n_q * hd + 2 * d * n_kv * hd + n_q * hd * d
+
+    def _mlp_params(self, d, ff) -> int:
+        mult = 3 if self.mlp_activation == "swiglu" else 2
+        return mult * d * ff
+
+    def _ssm_block_params(self) -> int:
+        d, di, ds = self.d_model, self.d_inner, self.ssm_state
+        nh = self.ssm_heads
+        # in_proj -> [z, x, B, C, dt]; out_proj; conv; A, D, dt_bias, norm
+        in_proj = d * (2 * di + 2 * ds + nh)
+        out_proj = di * d
+        conv = (di + 2 * ds) * self.conv_kernel
+        return in_proj + out_proj + conv + 2 * nh + di + d
+
+
+# ---------------------------------------------------------------------------
+# HDO (the paper's technique)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HDOConfig:
+    """Hybrid decentralized optimization population settings (Alg. 1)."""
+
+    n_agents: int = 16
+    n_zeroth: int = 8  # n0; n1 = n_agents - n_zeroth
+    estimator_zo: str = "multi_rv"  # biased_1pt | biased_2pt | multi_rv | fwd_grad
+    rv: int = 4  # random vectors per ZO estimate
+    nu: float = 1e-4  # smoothing radius (paper: nu = eta / sqrt(d))
+    nu_from_lr: bool = False  # if True use nu = lr / sqrt(d) per Theorem 1
+    gossip: str = "dense"  # dense | rr_ppermute | all_reduce | none
+    lr: float = 0.01
+    momentum: float = 0.9
+    warmup_steps: int = 50
+    cosine_steps: int = 1000
+    use_cosine: bool = True
+    seed: int = 0
+    # SPMD dispatch mode:
+    #   "select" — computes FO+ZO everywhere and masks (paper-faithful
+    #              uniform program; agents are anonymous);
+    #   "split"  — slices the (sorted: ZO first) population so each
+    #              agent computes ONLY its own estimator kind — with the
+    #              population sharded over a mesh axis every device runs
+    #              one kind (beyond-paper optimization, see §Perf).
+    dispatch: str = "select"
+    # momentum accumulator dtype ("float32" paper-faithful; "bfloat16"
+    # halves optimizer-state HBM — beyond-paper memory optimization)
+    momentum_dtype: str = "float32"
+
+    @property
+    def n_first(self) -> int:
+        return self.n_agents - self.n_zeroth
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """How the HDO population and the model map onto the device mesh."""
+
+    # axes forming the HDO population (agents). Remaining axes are used
+    # for intra-agent parallelism.
+    population_axes: Tuple[str, ...] = ("data",)
+    # axis used for per-agent batch data parallelism (None -> population
+    # axis carries the batch of its own agent only)
+    batch_axes: Tuple[str, ...] = ()
+    # tensor-parallel axis for d_ff / heads
+    model_axes: Tuple[str, ...] = ("model",)
+    # expert-parallel axis for MoE (llama4: ("data",))
+    expert_axes: Tuple[str, ...] = ()
+    # fsdp axis sharding the param leading dim inside an agent
+    fsdp_axes: Tuple[str, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Top-level config: model + HDO + mesh + shape."""
+
+    model: ModelConfig
+    hdo: HDOConfig = HDOConfig()
+    mesh: MeshConfig = MeshConfig()
+    shape: InputShape = INPUT_SHAPES["train_4k"]

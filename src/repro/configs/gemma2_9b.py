@@ -1,0 +1,53 @@
+"""Gemma2-9B — dense, local+global alternating attention, logit softcaps.
+
+[arXiv:2408.00118]
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "gemma2-9b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=42,
+        d_model=3584,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=14_336,
+        vocab_size=256_000,
+        head_dim=256,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        sliding_window=4096,
+        local_global_period=2,  # alternate local / global
+        mlp_activation="swiglu",
+        tie_embeddings=True,
+        source="arXiv:2408.00118",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        sliding_window=64,
+        local_global_period=2,
+        mlp_activation="swiglu",
+        tie_embeddings=True,
+        source="arXiv:2408.00118 (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,65 @@
+"""Llama4-Maverick-400B-A17B — MoE 128 routed experts top-1 + shared.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E family]  Early-fusion multimodality
+reduced to token embeddings for the assigned dry-run shapes.
+
+Population placement: the 400B model cannot replicate per data-slice, so
+the HDO population lives on the ``pod`` axis (2 agents multi-pod, 1
+single-pod); experts are sharded over ``data`` (expert parallel) and FFN
+over ``model`` (tensor parallel).
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "llama4-maverick-400b-a17b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202_048,
+        head_dim=128,
+        mlp_activation="swiglu",
+        num_experts=128,
+        num_experts_per_tok=1,
+        num_shared_experts=1,
+        moe_d_ff=8192,
+        moe_every=2,  # interleaved dense / MoE (maverick-style)
+        rope_theta=500_000.0,
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        mlp_activation="swiglu",
+        num_experts=4,
+        num_experts_per_tok=1,
+        num_shared_experts=1,
+        moe_d_ff=256,
+        moe_every=2,
+        source="hf:meta-llama/Llama-4-Scout-17B-16E (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(
+        population_axes=("pod",),
+        batch_axes=("data",),
+        model_axes=("model",),
+        expert_axes=("data",),
+    )

@@ -1,0 +1,51 @@
+"""Mamba2-780M — attention-free SSM, SSD (state-space duality).
+
+[arXiv:2405.21060]
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "mamba2-780m"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="ssm",
+        num_layers=48,
+        d_model=1536,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,
+        vocab_size=50_280,
+        ssm_state=128,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        ssm_chunk=128,
+        conv_kernel=4,
+        tie_embeddings=True,
+        source="arXiv:2405.21060",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=128,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,
+        vocab_size=512,
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_head_dim=32,
+        ssm_chunk=32,
+        conv_kernel=4,
+        tie_embeddings=True,
+        source="arXiv:2405.21060 (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,48 @@
+"""Pixtral-12B — VLM backbone: mistral-nemo decoder + stubbed pixtral-ViT.
+
+[hf:mistralai/Pixtral-12B-2409]  The vision encoder + projector are a
+stub: ``input_specs()`` provides (batch, num_patches, d_model) patch
+embeddings interleaved before the text tokens (allowed carve-out).
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "pixtral-12b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        num_layers=40,
+        d_model=5120,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14_336,
+        vocab_size=131_072,
+        head_dim=128,
+        mlp_activation="swiglu",
+        num_patches=256,  # stubbed image tokens prepended
+        rope_theta=1_000_000.0,
+        source="hf:mistralai/Pixtral-12B-2409",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=384,
+        vocab_size=512,
+        head_dim=32,
+        mlp_activation="swiglu",
+        num_patches=8,
+        source="hf:mistralai/Pixtral-12B-2409 (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,42 @@
+"""Qwen1.5-0.5B — dense, QKV bias. [hf:Qwen/Qwen1.5-0.5B]"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "qwen1.5-0.5b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=2816,
+        vocab_size=151_936,
+        qkv_bias=True,
+        mlp_activation="swiglu",
+        tie_embeddings=True,
+        source="hf:Qwen/Qwen1.5-0.5B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=352,
+        vocab_size=512,
+        qkv_bias=True,
+        mlp_activation="swiglu",
+        tie_embeddings=True,
+        source="hf:Qwen/Qwen1.5-0.5B (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,40 @@
+"""Qwen1.5-4B — dense, QKV bias. [hf:Qwen/Qwen1.5-0.5B family card]"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "qwen1.5-4b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=40,
+        d_model=2560,
+        num_heads=20,
+        num_kv_heads=20,
+        d_ff=6912,
+        vocab_size=151_936,
+        qkv_bias=True,
+        mlp_activation="swiglu",
+        source="hf:Qwen/Qwen1.5-0.5B (4B sibling)",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=160,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=432,
+        vocab_size=512,
+        qkv_bias=True,
+        mlp_activation="swiglu",
+        source="hf:Qwen/Qwen1.5-0.5B (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

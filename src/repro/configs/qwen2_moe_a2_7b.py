@@ -1,0 +1,53 @@
+"""Qwen2-MoE-A2.7B — 60 routed experts top-4 + 4 shared experts.
+
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "qwen2-moe-a2.7b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=1408,
+        vocab_size=151_936,
+        qkv_bias=True,
+        mlp_activation="swiglu",
+        num_experts=60,
+        num_experts_per_tok=4,
+        num_shared_experts=4,
+        moe_d_ff=1408,
+        moe_every=1,
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=96,
+        vocab_size=512,
+        qkv_bias=True,
+        mlp_activation="swiglu",
+        num_experts=4,
+        num_experts_per_tok=2,
+        num_shared_experts=2,
+        moe_d_ff=96,
+        moe_every=1,
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

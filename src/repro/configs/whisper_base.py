@@ -1,0 +1,53 @@
+"""Whisper-base — encoder-decoder audio backbone, conv frontend stubbed.
+
+[arXiv:2212.04356]  The mel+conv feature extractor is a stub: the dry-run
+``input_specs()`` provides (batch, 1500, 512) precomputed frame
+embeddings (the allowed modality-frontend carve-out).
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "whisper-base"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="audio",
+        num_layers=6,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=2048,
+        vocab_size=51_865,
+        mlp_activation="gelu",
+        is_encoder_decoder=True,
+        num_encoder_layers=6,
+        encoder_seq=1500,
+        qkv_bias=True,
+        tie_embeddings=True,
+        source="arXiv:2212.04356",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="audio",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        mlp_activation="gelu",
+        is_encoder_decoder=True,
+        num_encoder_layers=2,
+        encoder_seq=64,
+        qkv_bias=True,
+        tie_embeddings=True,
+        source="arXiv:2212.04356 (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,38 @@
+"""Yi-9B — llama-arch dense GQA (kv=4). [arXiv:2403.04652]"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "yi-9b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=48,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=4,
+        d_ff=11_008,
+        vocab_size=64_000,
+        mlp_activation="swiglu",
+        source="arXiv:2403.04652",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=128,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=344,
+        vocab_size=512,
+        mlp_activation="swiglu",
+        source="arXiv:2403.04652 (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,61 @@
+"""Zamba2-2.7B — hybrid: Mamba2 backbone + shared attention block.
+
+[arXiv:2411.15242]  One weight-tied attention+MLP block is applied every
+``shared_attn_every`` Mamba2 layers (the published model's per-invocation
+LoRA refinement is not reproduced; see DESIGN.md §5).
+"""
+from repro.configs.base import MeshConfig, ModelConfig
+
+ARCH_ID = "zamba2-2.7b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=10_240,
+        vocab_size=32_000,
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        ssm_chunk=128,
+        conv_kernel=4,
+        shared_attn_every=6,
+        # full attention in the shared block by default; the long_500k
+        # serving variant switches it to sliding-window (see launch).
+        sliding_window=None,
+        mlp_activation="gelu",
+        tie_embeddings=True,
+        source="arXiv:2411.15242",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="hybrid",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_head_dim=32,
+        ssm_chunk=32,
+        conv_kernel=4,
+        shared_attn_every=2,
+        sliding_window=64,
+        mlp_activation="gelu",
+        tie_embeddings=True,
+        source="arXiv:2411.15242 (reduced)",
+    )
+
+
+def mesh() -> MeshConfig:
+    return MeshConfig(population_axes=("pod", "data"), model_axes=("model",))

@@ -1,0 +1,37 @@
+"""HDO core — the paper's contribution as a composable JAX module."""
+from repro.core.estimators import fo_estimate, tree_normal, zo_estimate
+from repro.core.gossip import (
+    gossip_step,
+    mix_all_reduce,
+    mix_pairwise,
+    round_robin_schedule,
+    sample_matching,
+)
+from repro.core.hdo import (
+    HDOState,
+    build_hdo_step,
+    consensus_distance,
+    init_state,
+    tree_stack_broadcast,
+    zo_mask,
+)
+from repro.core.schedules import constant, warmup_cosine
+
+__all__ = [
+    "fo_estimate",
+    "zo_estimate",
+    "tree_normal",
+    "gossip_step",
+    "mix_all_reduce",
+    "mix_pairwise",
+    "round_robin_schedule",
+    "sample_matching",
+    "HDOState",
+    "build_hdo_step",
+    "consensus_distance",
+    "init_state",
+    "tree_stack_broadcast",
+    "zo_mask",
+    "constant",
+    "warmup_cosine",
+]

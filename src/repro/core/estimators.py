@@ -1,0 +1,112 @@
+"""Gradient estimators for HDO agents.
+
+First-order: plain backprop (``jax.value_and_grad``).
+Zeroth-order (paper Appendix "Estimator types"):
+  * ``biased_1pt``   — (F(x+nu u) - F(x)) / nu * u          (Def. 2)
+  * ``biased_2pt``   — (F(x+nu u) - F(x-nu u)) / (2 nu) * u
+  * ``multi_rv``     — ``rv``-sample average of biased_2pt (the paper's
+                        "number of random vectors" knob, Fig. 1/6)
+  * ``fwd_grad``     — unbiased forward-mode (u . grad F) u, Baydin et
+                        al. 2022, computed with ``jax.jvp`` (one forward
+                        pass, no backprop) — exactly the paper's
+                        "Unbiased Zeroth-order" estimator.
+
+All ZO estimators touch the loss function only through forward
+evaluations (or JVPs), never ``jax.grad``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+LossFn = Callable[[PyTree], jnp.ndarray]  # params -> scalar loss
+
+ZO_KINDS = ("biased_1pt", "biased_2pt", "multi_rv", "fwd_grad")
+
+
+def tree_normal(key, tree: PyTree) -> PyTree:
+    """Standard-normal pytree with the same structure/shapes as ``tree``."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten(
+        [jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype) for k, l in zip(keys, leaves)]
+    )
+
+
+def tree_axpy(a, x: PyTree, y: PyTree) -> PyTree:
+    return jax.tree.map(lambda xi, yi: (a * xi.astype(jnp.float32) + yi.astype(jnp.float32)).astype(yi.dtype), x, y)
+
+
+def tree_scale(a, x: PyTree) -> PyTree:
+    return jax.tree.map(lambda xi: (a * xi.astype(jnp.float32)).astype(xi.dtype), x)
+
+
+def tree_zeros_like(x: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, x)
+
+
+def fo_estimate(loss_fn: LossFn, params: PyTree) -> Tuple[jnp.ndarray, PyTree]:
+    """First-order: (loss, grad)."""
+    return jax.value_and_grad(loss_fn)(params)
+
+
+def zo_estimate(
+    loss_fn: LossFn,
+    params: PyTree,
+    key,
+    *,
+    kind: str = "multi_rv",
+    rv: int = 4,
+    nu: float = 1e-4,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Zeroth-order estimate: (loss_at_x_or_primal, grad_estimate)."""
+    if kind == "fwd_grad":
+        return _fwd_grad(loss_fn, params, key, rv)
+    if kind == "biased_1pt":
+        return _finite_diff(loss_fn, params, key, 1, nu, two_point=False)
+    if kind == "biased_2pt":
+        return _finite_diff(loss_fn, params, key, 1, nu, two_point=True)
+    if kind == "multi_rv":
+        return _finite_diff(loss_fn, params, key, rv, nu, two_point=True)
+    raise ValueError(kind)
+
+
+def _finite_diff(loss_fn, params, key, rv, nu, *, two_point):
+    loss0 = loss_fn(params)
+
+    def body(acc, r):
+        u = tree_normal(jax.random.fold_in(key, r), params)
+        lp = loss_fn(tree_axpy(nu, u, params))
+        if two_point:
+            lm = loss_fn(tree_axpy(-nu, u, params))
+            coeff = (lp - lm) / (2.0 * nu)
+        else:
+            coeff = (lp - loss0) / nu
+        acc = jax.tree.map(
+            lambda a, ui: a + coeff * ui.astype(jnp.float32), acc, u
+        )
+        return acc, None
+
+    acc, _ = jax.lax.scan(body, tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32), params)), jnp.arange(rv))
+    g = jax.tree.map(lambda a, p: (a / rv).astype(p.dtype), acc, params)
+    return loss0, g
+
+
+def _fwd_grad(loss_fn, params, key, rv):
+    def body(acc, r):
+        u = tree_normal(jax.random.fold_in(key, r), params)
+        primal, jvp = jax.jvp(loss_fn, (params,), (u,))
+        acc = jax.tree.map(lambda a, ui: a + jvp * ui.astype(jnp.float32), acc, u)
+        return acc, primal
+
+    acc, primals = jax.lax.scan(
+        body,
+        tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32), params)),
+        jnp.arange(rv),
+    )
+    g = jax.tree.map(lambda a, p: (a / rv).astype(p.dtype), acc, params)
+    return primals[0], g

@@ -1,0 +1,294 @@
+"""The HDO training step (paper Algorithm 1, parallel simulation form).
+
+One parallel step =
+  1. every agent computes its local gradient estimate (FO agents:
+     backprop; ZO agents: function-evaluation estimators),
+  2. every agent takes a local (momentum-)SGD step,
+  3. O(n) random disjoint pairs average their models.
+
+The population is carried as a stacked pytree with a leading
+``n_agents`` axis (shardable over a mesh axis -> each agent's replica
+lives on its own sub-mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HDOConfig
+from repro.core import estimators, gossip, schedules
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HDOState:
+    params: PyTree  # leading axis n_agents
+    momentum: PyTree
+    step: jnp.ndarray  # scalar int32
+
+
+def tree_stack_broadcast(params: PyTree, n: int) -> PyTree:
+    """Replicate one model into a stacked population (paper: all agents
+    start from the same random point)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
+
+
+def init_state(params: PyTree, cfg: HDOConfig) -> HDOState:
+    stacked = tree_stack_broadcast(params, cfg.n_agents)
+    mdt = jnp.dtype(cfg.momentum_dtype)
+    mom = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=mdt), stacked)
+    return HDOState(params=stacked, momentum=mom, step=jnp.int32(0))
+
+
+def zo_mask(cfg: HDOConfig) -> jnp.ndarray:
+    """True for zeroth-order agents (paper: agents 1..n0 are ZO)."""
+    return jnp.arange(cfg.n_agents) < cfg.n_zeroth
+
+
+def _select_tree(mask_agents, a: PyTree, b: PyTree) -> PyTree:
+    """where(mask) over leading agent axis: a if mask else b."""
+    def sel(x, y):
+        m = mask_agents.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+
+    return jax.tree.map(sel, a, b)
+
+
+def build_hdo_step(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    cfg: HDOConfig,
+    *,
+    param_dim: Optional[int] = None,
+    donate: bool = True,
+    mesh=None,
+    population_axes: Tuple[str, ...] = (),
+) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
+    """Returns step(state, batches) -> (state, metrics).
+
+    ``loss_fn(params, batch)`` is a single-agent loss; ``batches`` is a
+    pytree whose leaves have leading axis ``n_agents`` (each agent's
+    local shard of the data — the paper's split-data setup).
+
+    ``dispatch="shard_cond"`` additionally needs ``mesh`` +
+    ``population_axes``: the estimation phase runs under a partial
+    ``shard_map`` over the population axes with a *runtime* branch on
+    the shard's agent type, so ZO devices never build the backward pass
+    (HLO conditionals are dynamic).
+    """
+    n = cfg.n_agents
+    sched = schedules.warmup_cosine(cfg.lr, cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine)
+    is_zo = zo_mask(cfg)
+    rr_sched = (
+        jnp.asarray(gossip.round_robin_schedule(n))
+        if (cfg.gossip == "rr_static" and n % 2 == 0 and n > 1)
+        else None
+    )
+
+    def per_agent_fo(params_i, batch_i):
+        return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
+
+    def per_agent_zo(params_i, batch_i, key_i, nu):
+        return estimators.zo_estimate(
+            lambda p: loss_fn(p, batch_i),
+            params_i,
+            key_i,
+            kind=cfg.estimator_zo,
+            rv=cfg.rv,
+            nu=nu,
+        )
+
+    def step(state: HDOState, batches) -> Tuple[HDOState, Dict[str, jnp.ndarray]]:
+        t = state.step
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
+        lr = sched(t)
+        nu = (
+            lr / jnp.sqrt(jnp.float32(param_dim))
+            if (cfg.nu_from_lr and param_dim)
+            else jnp.float32(cfg.nu)
+        )
+
+        agent_keys = jax.random.split(key, n)
+
+        # ---- local estimates -------------------------------------------
+        n0 = cfg.n_zeroth
+        if n == 1:
+            # single-agent population (e.g. llama4 pod-population on the
+            # single-pod mesh): skip vmap so inner shard_map layers (the
+            # expert-parallel MoE path) remain top-level collectives.
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            if n0 == 1:
+                l1, g1 = per_agent_zo(sq(state.params), sq(batches), agent_keys[0], nu)
+            else:
+                l1, g1 = per_agent_fo(sq(state.params), sq(batches))
+            losses = l1[None]
+            g = jax.tree.map(lambda x: x[None], g1)
+        elif cfg.dispatch == "shard_cond" and 0 < n0 < n and mesh is not None:
+            from jax.sharding import PartitionSpec as P
+
+            pop_axes = tuple(a for a in population_axes if a in mesh.shape)
+            pop_size = 1
+            for a in pop_axes:
+                pop_size *= mesh.shape[a]
+            n_local = n // pop_size
+            assert n0 % n_local == 0, "ZO/FO boundary must align with shards"
+
+            def shard_fn(p_l, b_l, k_l, nu_s):
+                # global index of this shard's first agent
+                idx = jnp.int32(0)
+                stride = n_local
+                for a in reversed(pop_axes):
+                    idx = idx + jax.lax.axis_index(a) * stride
+                    stride = stride * mesh.shape[a]
+                is_zo_shard = idx < n0
+
+                def zo_branch(_):
+                    return jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu_s))(
+                        p_l, b_l, k_l
+                    )
+
+                def fo_branch(_):
+                    return jax.vmap(per_agent_fo)(p_l, b_l)
+
+                return jax.lax.cond(is_zo_shard, zo_branch, fo_branch, None)
+
+            pspec = P(pop_axes if len(pop_axes) > 1 else pop_axes[0])
+            losses, g = jax.shard_map(
+                shard_fn,
+                mesh=mesh,
+                in_specs=(pspec, pspec, pspec, P()),
+                out_specs=(pspec, pspec),
+                axis_names=set(pop_axes),
+                check_vma=False,
+            )(state.params, batches, agent_keys, nu)
+        elif cfg.dispatch == "split" and 0 < n0 < n:
+            # beyond-paper: agents are sorted (ZO first), so slicing the
+            # stacked population lets every device compute ONLY its own
+            # estimator kind (no masked double work).
+            take = lambda t, sl: jax.tree.map(lambda x: x[sl], t)
+            loss_zo, g_zo = jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
+                take(state.params, slice(0, n0)), take(batches, slice(0, n0)),
+                agent_keys[:n0],
+            )
+            loss_fo, g_fo = jax.vmap(per_agent_fo)(
+                take(state.params, slice(n0, n)), take(batches, slice(n0, n))
+            )
+            g = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), g_zo, g_fo)
+            losses = jnp.concatenate([loss_zo, loss_fo])
+        else:
+            # paper-faithful SPMD-uniform baseline: both estimators are
+            # computed for every (anonymous) agent, then masked.
+            if cfg.n_first > 0:
+                loss_fo, g_fo = jax.vmap(per_agent_fo)(state.params, batches)
+            else:
+                loss_fo = jnp.zeros((n,), jnp.float32)
+                g_fo = jax.tree.map(jnp.zeros_like, state.params)
+            if cfg.n_zeroth > 0:
+                loss_zo, g_zo = jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
+                    state.params, batches, agent_keys
+                )
+            else:
+                loss_zo = jnp.zeros((n,), jnp.float32)
+                g_zo = jax.tree.map(jnp.zeros_like, state.params)
+
+            g = _select_tree(is_zo, g_zo, g_fo)
+            losses = jnp.where(is_zo, loss_zo, loss_fo)
+
+        # ---- local momentum-SGD step (paper: g <- m g + (1-m) grad) ---
+        if cfg.momentum > 0.0:
+            new_mom = jax.tree.map(
+                lambda m, gi: (
+                    cfg.momentum * m.astype(jnp.float32)
+                    + (1.0 - cfg.momentum) * gi.astype(jnp.float32)
+                ).astype(m.dtype),
+                state.momentum,
+                g,
+            )
+            upd = new_mom
+        else:
+            new_mom = state.momentum
+            upd = jax.tree.map(lambda gi: gi.astype(jnp.float32), g)
+
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+            state.params,
+            upd,
+        )
+
+        # ---- gossip (pairwise averaging) ------------------------------
+        gkey = jax.random.fold_in(key, 7)
+        if cfg.gossip == "rr_ppermute" and mesh is not None:
+            # TPU-native gossip: each agent exchanges ONLY with its
+            # round partner over ICI (collective-permute), instead of
+            # gathering the whole population.
+            pop_axes = tuple(a for a in population_axes if a in mesh.shape)
+            pop_size = 1
+            for a in pop_axes:
+                pop_size *= mesh.shape[a]
+            assert n == pop_size, "rr_ppermute needs one agent per population shard"
+            rr_table = gossip.round_robin_schedule(n)
+            axis = pop_axes if len(pop_axes) > 1 else pop_axes[0]
+            from jax.sharding import PartitionSpec as P
+
+            def gossip_shard(p_l, t_l):
+                def round_branch(r):
+                    perm = [(i, int(rr_table[r][i])) for i in range(n)]
+
+                    def b(p):
+                        partner = jax.tree.map(
+                            lambda x: jax.lax.ppermute(x, axis_name=axis, perm=perm), p
+                        )
+                        return jax.tree.map(
+                            lambda a_, b_: (
+                                (a_.astype(jnp.float32) + b_.astype(jnp.float32)) * 0.5
+                            ).astype(a_.dtype),
+                            p,
+                            partner,
+                        )
+
+                    return b
+
+                return jax.lax.switch(
+                    t_l % (n - 1), [round_branch(r) for r in range(n - 1)], p_l
+                )
+
+            pspec = P(axis)
+            new_params = jax.shard_map(
+                gossip_shard,
+                mesh=mesh,
+                in_specs=(pspec, P()),
+                out_specs=pspec,
+                axis_names=set(pop_axes),
+                check_vma=False,
+            )(new_params, t)
+        else:
+            new_params = gossip.gossip_step(
+                new_params, mode=cfg.gossip, key=gkey, step=t, n=n, schedule=rr_sched
+            )
+
+        metrics = {
+            "loss_mean": losses.mean(),
+            "loss_std": losses.std(),
+            "lr": lr,
+        }
+        if cfg.n_first:
+            metrics["loss_fo_mean"] = losses[cfg.n_zeroth :].mean()
+        if cfg.n_zeroth:
+            metrics["loss_zo_mean"] = losses[: cfg.n_zeroth].mean()
+        return HDOState(params=new_params, momentum=new_mom, step=t + 1), metrics
+
+    return step
+
+
+def consensus_distance(params: PyTree) -> jnp.ndarray:
+    """Gamma_t = (1/n) sum_i ||X_i - mu||^2 (the paper's potential)."""
+    def gamma(x):
+        mu = x.mean(axis=0, keepdims=True)
+        return jnp.sum((x.astype(jnp.float32) - mu.astype(jnp.float32)) ** 2) / x.shape[0]
+
+    return sum(jax.tree.leaves(jax.tree.map(gamma, params)))

@@ -1,0 +1,28 @@
+"""Learning-rate schedules used by the paper's experiments:
+linear warmup followed by cosine annealing (Loshchilov & Hutter 2017).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(lr: float, warmup_steps: int, cosine_steps: int, use_cosine: bool = True):
+    """Returns lr(step) -> f32 scalar."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(1.0, (step + 1.0) / jnp.maximum(warmup_steps, 1))
+        if not use_cosine:
+            return warm
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(cosine_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float):
+    def schedule(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return schedule

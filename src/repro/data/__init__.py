@@ -1,0 +1,5 @@
+"""Data substrate: synthetic tasks, Brackets (Dyck), per-agent sharding."""
+from repro.data import brackets, synthetic
+from repro.data.sharding import AgentBatcher, agent_data_splits
+
+__all__ = ["brackets", "synthetic", "AgentBatcher", "agent_data_splits"]

@@ -1,0 +1,93 @@
+"""The paper's "Brackets" (Dyck-1) dataset, generated exactly as
+described: sequences of '(' / ')'; the task is to classify whether the
+whole sequence is correctly bracketed (every opener has a closer).
+
+Paper: 25,600 train / 2,560 validation samples
+(Ebrahimi, Gelda & Zhang 2020 motivate Dyck as a CFL probe).
+
+Token ids: 0 PAD, 1 '(', 2 ')', 3 CLS-query, 4 label-false, 5 label-true.
+The LM-style interface marks every label position -1 except the final
+CLS position, whose gold token is 4/5 — so the same cross-entropy loss
+used everywhere doubles as the sequence classifier.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PAD, OPEN, CLOSE, CLS, LBL_FALSE, LBL_TRUE = 0, 1, 2, 3, 4, 5
+VOCAB = 8
+
+
+def _balanced(rng: np.random.Generator, n_pairs: int) -> np.ndarray:
+    """Random balanced Dyck-1 word of length 2*n_pairs (random walk
+    constrained to stay non-negative and end at zero)."""
+    seq = []
+    opens = closes = 0
+    for _ in range(2 * n_pairs):
+        can_open = opens < n_pairs
+        can_close = closes < opens
+        if can_open and can_close:
+            go_open = rng.random() < 0.5
+        else:
+            go_open = can_open
+        if go_open:
+            seq.append(OPEN)
+            opens += 1
+        else:
+            seq.append(CLOSE)
+            closes += 1
+    return np.asarray(seq, dtype=np.int32)
+
+
+def _corrupt(rng: np.random.Generator, seq: np.ndarray) -> np.ndarray:
+    """Flip brackets until the sequence is invalid."""
+    out = seq.copy()
+    while True:
+        i = rng.integers(len(out))
+        out[i] = OPEN + CLOSE - out[i]
+        if not is_valid(out):
+            return out
+
+
+def is_valid(seq: np.ndarray) -> bool:
+    depth = 0
+    for s in seq:
+        if s == OPEN:
+            depth += 1
+        elif s == CLOSE:
+            depth -= 1
+            if depth < 0:
+                return False
+    return depth == 0
+
+
+def make_dataset(
+    n_samples: int = 25_600,
+    seq_len: int = 32,
+    seed: int = 0,
+):
+    """Returns (tokens (N, seq_len), labels (N, seq_len)) LM-style.
+
+    tokens = brackets + CLS; labels = -1 except at the CLS position
+    where the gold is LBL_TRUE / LBL_FALSE.
+    """
+    rng = np.random.default_rng(seed)
+    n_pairs = (seq_len - 1) // 2
+    toks = np.zeros((n_samples, seq_len), dtype=np.int32)
+    labs = np.full((n_samples, seq_len), -1, dtype=np.int32)
+    for i in range(n_samples):
+        seq = _balanced(rng, n_pairs)
+        positive = rng.random() < 0.5
+        if not positive:
+            seq = _corrupt(rng, seq)
+        L = len(seq)
+        toks[i, :L] = seq
+        toks[i, L] = CLS
+        labs[i, L] = LBL_TRUE if positive else LBL_FALSE
+    return toks, labs
+
+
+def accuracy(logits_at_cls: np.ndarray, gold: np.ndarray) -> float:
+    """logits_at_cls: (N, V) at the CLS position; gold: (N,) in {4,5}."""
+    pred = np.where(logits_at_cls[:, LBL_TRUE] > logits_at_cls[:, LBL_FALSE], LBL_TRUE, LBL_FALSE)
+    return float((pred == gold).mean())

@@ -1,0 +1,45 @@
+"""Per-agent data sharding for the HDO population.
+
+Paper setup: *two copies* of the training data are distributed — one
+split among the n1 first-order agents, one among the n0 zeroth-order
+agents (so either sub-population alone still covers the full data).
+Agents 0..n0-1 are ZO (matching ``core.hdo.zo_mask``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Sequence
+
+import numpy as np
+
+
+def agent_data_splits(n_samples: int, n_zeroth: int, n_first: int, seed: int = 0):
+    """Returns a list of index arrays, one per agent (ZO agents first)."""
+    rng = np.random.default_rng(seed)
+    shards = []
+    if n_zeroth:
+        perm = rng.permutation(n_samples)
+        shards += [s for s in np.array_split(perm, n_zeroth)]
+    if n_first:
+        perm = rng.permutation(n_samples)
+        shards += [s for s in np.array_split(perm, n_first)]
+    return shards
+
+
+class AgentBatcher:
+    """Cycles per-agent minibatches from a fixed dataset."""
+
+    def __init__(self, arrays: Dict[str, np.ndarray], n_zeroth: int, n_first: int, batch: int, seed: int = 0):
+        n = len(next(iter(arrays.values())))
+        self.arrays = arrays
+        self.batch = batch
+        self.shards = agent_data_splits(n, n_zeroth, n_first, seed)
+        self.rng = np.random.default_rng(seed + 1)
+
+    def next_batches(self) -> Dict[str, np.ndarray]:
+        """Leaves shaped (n_agents, batch, ...)."""
+        out = {k: [] for k in self.arrays}
+        for shard in self.shards:
+            idx = self.rng.choice(shard, size=self.batch, replace=len(shard) < self.batch)
+            for k, a in self.arrays.items():
+                out[k].append(a[idx])
+        return {k: np.stack(v) for k, v in out.items()}

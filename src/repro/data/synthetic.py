@@ -1,0 +1,66 @@
+"""Synthetic datasets standing in for MNIST / CIFAR-10 in the offline
+container (see DESIGN.md §5) plus synthetic LM token streams for the
+big-architecture smoke paths.
+
+The classification tasks are Gaussian prototype mixtures: class k has a
+fixed prototype mu_k; samples are mu_k + sigma * noise.  They are
+learnable by both linear (convex case, paper Fig 2) and nonconvex
+models, with tunable difficulty.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+
+
+class PrototypeClassification:
+    """MNIST-like: d-dimensional inputs, `n_classes` Gaussian prototypes."""
+
+    def __init__(self, d: int = 64, n_classes: int = 10, noise: float = 1.0, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.d, self.n_classes, self.noise = d, n_classes, noise
+        self.prototypes = rng.normal(size=(n_classes, d)).astype(np.float32)
+
+    def sample(self, rng: np.random.Generator, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        y = rng.integers(0, self.n_classes, size=n)
+        x = self.prototypes[y] + self.noise * rng.normal(size=(n, self.d)).astype(np.float32)
+        return x.astype(np.float32), y.astype(np.int32)
+
+    def eval_set(self, n: int = 2048, seed: int = 1234):
+        return self.sample(np.random.default_rng(seed), n)
+
+
+class PrototypeImages(PrototypeClassification):
+    """CIFAR-like variant returning (n, H, W, C) images."""
+
+    def __init__(self, hw: int = 16, channels: int = 3, n_classes: int = 10, noise: float = 1.0, seed: int = 0):
+        super().__init__(d=hw * hw * channels, n_classes=n_classes, noise=noise, seed=seed)
+        self.hw, self.channels = hw, channels
+
+    def sample(self, rng, n):
+        x, y = super().sample(rng, n)
+        return x.reshape(n, self.hw, self.hw, self.channels), y
+
+
+def lm_token_stream(vocab: int, seed: int = 0):
+    """Learnable synthetic LM distribution: 2nd-order Markov chain with
+    a sparse transition structure (so next-token CE is reducible)."""
+    rng = np.random.default_rng(seed)
+    fanout = 4
+    table = rng.integers(0, vocab, size=(vocab, fanout)).astype(np.int32)
+
+    def sample(rng_s: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        toks = np.empty((batch, seq), dtype=np.int32)
+        toks[:, 0] = rng_s.integers(0, vocab, size=batch)
+        choice = rng_s.integers(0, fanout, size=(batch, seq))
+        for t in range(1, seq):
+            toks[:, t] = table[toks[:, t - 1], choice[:, t]]
+        return toks
+
+    return sample
+
+
+def lm_batch(sample_fn, rng: np.random.Generator, batch: int, seq: int) -> Dict[str, np.ndarray]:
+    toks = sample_fn(rng, batch, seq + 1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  zo_combine / zo_perturb — fused counter-RNG zeroth-order estimator
+  gossip_avg              — streamed pairwise model average
+  ssd_scan                — Mamba2 chunked SSD scan
+
+See ops.py for the jitted wrappers and ref.py for the jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,59 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in
+the CPU container (Pallas interpret mode executes the kernel bodies in
+Python) and compile to real Mosaic kernels on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gossip_avg as _gossip
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import zo_combine as _zo
+
+BLOCK = _zo.BLOCK
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_block(x):
+    d = x.shape[0]
+    pad = (-d) % BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, d
+
+
+@partial(jax.jit, static_argnames=("d", "interpret"))
+def zo_combine(coeffs, seed, d: int, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    dp = d + ((-d) % BLOCK)
+    out = _zo.zo_combine(coeffs, seed, dp, interpret=interpret)
+    return out[:d]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def zo_perturb(x, seed, r, nu, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    xp, d = _pad_to_block(x)
+    return _zo.zo_perturb(xp, seed, r, nu, interpret=interpret)[:d]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gossip_avg(x, y, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    xp, d = _pad_to_block(x)
+    yp, _ = _pad_to_block(y)
+    return _gossip.gossip_avg(xp, yp, interpret=interpret)[:d]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rng import counter_normal
+from repro.models.mamba2 import ssd_reference
+
+
+def zo_combine_ref(coeffs, seed, d: int):
+    """g = (1/rv) sum_r coeffs[r] * u_r, u_r = counter_normal(seed, ., r).
+
+    coeffs: (rv,) f32; returns (d,) f32.
+    """
+    rv = coeffs.shape[0]
+    idx = jnp.arange(d, dtype=jnp.uint32)
+
+    def body(acc, r):
+        u = counter_normal(jnp.uint32(seed), idx, r.astype(jnp.uint32))
+        return acc + coeffs[r] * u, None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((d,), jnp.float32), jnp.arange(rv))
+    return acc / rv
+
+
+def zo_perturb_ref(x, seed, r: int, nu: float):
+    """x + nu * u_r (flattened parameter perturbation)."""
+    d = x.shape[0]
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    u = counter_normal(jnp.uint32(seed), idx, jnp.uint32(r))
+    return (x.astype(jnp.float32) + nu * u).astype(x.dtype)
+
+
+def gossip_avg_ref(x, y):
+    return ((x.astype(jnp.float32) + y.astype(jnp.float32)) * 0.5).astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential-recurrence oracle (see models.mamba2.ssd_reference).
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,); Bm/Cm: (b, s, n).
+    Returns y (b, s, h, p).
+    """
+    y, _ = ssd_reference(x, dt, A, Bm, Cm)
+    return y

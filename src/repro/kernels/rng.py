@@ -1,0 +1,57 @@
+"""Counter-based RNG shared by the ZO kernels and their oracles.
+
+A Wang-hash-based generator: stateless, position-indexed, identical
+inside a Pallas kernel body and in pure jnp — which is what lets the
+fused TPU kernel regenerate perturbation vectors u_r tile-by-tile in
+VMEM (no (rv, d) Gaussian ever hits HBM) while remaining bit-exact
+against the ``ref.py`` oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# python-int constants: folded into the kernel as literals (no captured
+# tracers inside pallas bodies)
+_K_IDX = 2246822519
+_K_R = 3266489917
+_K_SEED = 2654435761
+_U32 = jnp.uint32
+
+
+def wang_hash(x):
+    x = x.astype(_U32)
+    x = (x ^ _U32(61)) ^ (x >> 16)
+    x = x * _U32(9)
+    x = x ^ (x >> 4)
+    x = x * _U32(0x27D4EB2D)
+    x = x ^ (x >> 15)
+    return x
+
+
+def _uniform(seed, idx, salt):
+    key = (
+        seed.astype(_U32) * _U32(_K_SEED)
+        + idx.astype(_U32) * _U32(_K_IDX)
+        + salt.astype(_U32) * _U32(_K_R)
+    )
+    h = wang_hash(key)
+    # 24 high bits -> (0, 1]
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24)) + jnp.float32(
+        1.0 / (1 << 25)
+    )
+
+
+def counter_normal(seed, idx, r):
+    """Standard normal at global position ``idx`` for draw index ``r``.
+
+    seed: uint32 scalar; idx: uint32 array; r: uint32 scalar.
+    Box-Muller on two independent uniforms.
+    """
+    r = r.astype(_U32) if hasattr(r, "astype") else _U32(r)
+    salt1 = r * _U32(2) + _U32(1)
+    salt2 = r * _U32(2) + _U32(2)
+    u1 = _uniform(seed, idx, salt1)
+    u2 = _uniform(seed, idx, salt2)
+    radius = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = jnp.float32(2.0 * 3.14159265358979) * u2
+    return radius * jnp.cos(theta)

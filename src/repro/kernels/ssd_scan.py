@@ -1,0 +1,106 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid: (batch*heads, n_chunks) with the chunk dimension iterated
+sequentially — the inter-chunk SSM state lives in a VMEM scratch
+accumulator that persists across grid steps (reset at chunk 0).
+
+Per (bh, chunk) step, everything is MXU-shaped matmul work:
+  intra:  y1 = [(C B^T) ⊙ exp(cs_i - cs_j) ⊙ causal] @ (x * dt)
+  inter:  y2 = exp(cs) ⊙ (C @ H_prev^T)
+  state:  H  = exp(cs_last) * H_prev + (x * dt * decay_to_end)^T @ B
+
+Block shapes: x (1, l, p), B/C (1, l, n), dt (1, l); l = chunk length
+(128 default), p = head dim (64/32), n = ssm state (64..128) — the
+(l, l) intra matrix and (p, n) state sit comfortably in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_scratch, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)  # (l, p)
+    dt = dt_ref[0].astype(jnp.float32)  # (l,)
+    A = a_ref[0].astype(jnp.float32)  # scalar
+    Bm = b_ref[0].astype(jnp.float32)  # (l, n)
+    Cm = c_ref[0].astype(jnp.float32)  # (l, n)
+
+    dA = dt * A  # (l,) log decays (<= 0)
+    cs = jnp.cumsum(dA)  # (l,)
+
+    # ---- intra-chunk ----------------------------------------------------
+    CB = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (l, l)
+    diff = cs[:, None] - cs[None, :]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    diff = jnp.where(causal, diff, -jnp.inf)
+    M = CB * jnp.exp(diff)
+    xbar = x * dt[:, None]  # (l, p)
+    y = jnp.dot(M, xbar, preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk (contribution of carried state) ----------------------
+    h_prev = h_scratch[...]  # (p, n)
+    y = y + jnp.exp(cs)[:, None] * jnp.dot(
+        Cm, h_prev.T, preferred_element_type=jnp.float32
+    )
+
+    # ---- state update -----------------------------------------------------
+    decay_to_end = jnp.exp(cs[-1] - cs)  # (l,)
+    weighted = xbar * decay_to_end[:, None]  # (l, p)
+    h_new = jnp.exp(cs[-1]) * h_prev + jnp.dot(
+        weighted.T, Bm, preferred_element_type=jnp.float32
+    )
+    h_scratch[...] = h_new
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); Bm/Cm: (b, s, n).
+
+    Returns y: (b, s, h, p).  B/C are shared across heads (ngroups=1) —
+    broadcast here so each (batch*head) grid row is independent.
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    bh = b * h
+
+    # (bh, s, p) / (bh, s) / (bh,) / (bh, s, n)
+    xf = x.transpose(0, 2, 1, 3).reshape(bh, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bh, s)
+    af = jnp.broadcast_to(A[None, :], (b, h)).reshape(bh)
+    bf = jnp.broadcast_to(Bm[:, None], (b, h, s, n)).reshape(bh, s, n)
+    cf = jnp.broadcast_to(Cm[:, None], (b, h, s, n)).reshape(bh, s, n)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(_body, chunk=chunk),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

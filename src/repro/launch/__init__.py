@@ -1,0 +1,1 @@
+"""Launch: production meshes, multi-pod dry-run, train/serve drivers."""

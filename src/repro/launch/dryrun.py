@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+combination on the production mesh and report roofline terms.
+
+MUST be run as its own process (device count locks at first jax init):
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k [--multi-pod] [--gossip dense] [--rv 2] [--json]
+
+Exit code 0 and a one-line JSON report on success; a skipped
+(arch, shape) combination (see DESIGN.md §4) reports {"skipped": ...}.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shardlib
+from repro.configs import INPUT_SHAPES, get_config, get_mesh_config
+from repro.configs.base import HDOConfig
+from repro.core import hdo as hdolib
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models import transformer as tflib
+
+P = jax.sharding.PartitionSpec
+
+
+def _prefill_step_fn(cfg):
+    def prefill_step(params, batch):
+        hidden, _ = tflib.forward_hidden(params, cfg, batch)
+        head = tflib._head_weight(params, cfg)
+        logits = (hidden[:, -1, :] @ head).astype(jnp.float32)
+        from repro.models.layers import softcap
+
+        return softcap(logits, cfg.final_logit_softcap)
+
+    return prefill_step
+
+
+def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
+                 rv: int, dispatch: str = "select", momentum_dtype: str = "float32",
+                 attn_remat: bool = False, window_slice: bool = False,
+                 moe_constraint: bool = False, donate: bool = False,
+                 fsdp: bool = False):
+    """Returns (lowered, mesh, meta) for one combination, or None if skipped."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    mcfg = get_mesh_config(arch)
+    if fsdp:
+        mcfg = dataclasses.replace(mcfg, fsdp_axes=("data",))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+
+    if kind == "decode" and shape_name == "long_500k":
+        if arch not in specs.LONG_OK:
+            return None
+        cfg = specs.long_ctx_variant(cfg)
+    if attn_remat:
+        cfg = dataclasses.replace(cfg, attn_remat=True)
+    if window_slice:
+        cfg = dataclasses.replace(cfg, decode_window_slice=True)
+    from repro.models import moe as moe_lib
+
+    moe_lib.set_expert_buffer_sharding(None)
+    moe_lib.set_ep_context(None)
+    if moe_constraint and cfg.num_experts and mcfg.expert_axes:
+        if moe_constraint == "ep":
+            moe_lib.set_ep_context(mesh, mcfg.expert_axes[0])
+        else:
+            e_ax = mcfg.expert_axes if len(mcfg.expert_axes) > 1 else mcfg.expert_axes[0]
+            b_ax = mcfg.batch_axes if len(mcfg.batch_axes) > 1 else (
+                mcfg.batch_axes[0] if mcfg.batch_axes else None)
+            moe_lib.set_expert_buffer_sharding(
+                jax.NamedSharding(mesh, P(e_ax, None, None)),
+                token_sharding=jax.NamedSharding(mesh, P(b_ax, None, None)),
+            )
+
+    if kind == "train":
+        n_agents = specs.population_size(mcfg, mesh)
+        hcfg = HDOConfig(
+            n_agents=n_agents,
+            n_zeroth=n_agents // 2,
+            estimator_zo="multi_rv",
+            rv=rv,
+            gossip=gossip if n_agents > 1 else "none",
+            momentum=0.9,
+            dispatch=dispatch,
+            momentum_dtype=momentum_dtype,
+        )
+        model = build_model(cfg)
+        loss_fn = model.loss
+        step = hdolib.build_hdo_step(
+            loss_fn, hcfg, param_dim=cfg.param_count(),
+            mesh=mesh, population_axes=mcfg.population_axes,
+        )
+
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        state_sds = jax.eval_shape(lambda p: hdolib.init_state(p, hcfg), params_sds)
+        batch_sds = specs.train_batch_specs(cfg, shape, n_agents)
+
+        pspec_params = shardlib.params_pspecs(state_sds.params, mcfg, mesh, population=True)
+        state_psp = hdolib.HDOState(params=pspec_params, momentum=pspec_params, step=P())
+        batch_psp = shardlib.batch_pspecs(batch_sds, mcfg, mesh, population=True)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                jax.tree.map(lambda s: jax.NamedSharding(mesh, s), state_psp,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda s: jax.NamedSharding(mesh, s), batch_psp,
+                             is_leaf=lambda x: isinstance(x, P)),
+            ),
+            donate_argnums=(0,) if donate else (),
+        )
+        lowered = jitted.lower(state_sds, batch_sds)
+        meta = {"n_agents": n_agents, "hdo": dataclasses.asdict(hcfg)}
+        return lowered, mesh, meta
+
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec_params = shardlib.params_pspecs(params_sds, mcfg, mesh, population=False)
+    param_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspec_params,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if kind == "prefill":
+        batch_sds = specs.prefill_batch_specs(cfg, shape)
+        batch_psp = shardlib.batch_pspecs(batch_sds, mcfg, mesh, population=False)
+        batch_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), batch_psp,
+                                is_leaf=lambda x: isinstance(x, P))
+        fn = _prefill_step_fn(cfg)
+        lowered = jax.jit(fn, in_shardings=(param_sh, batch_sh)).lower(params_sds, batch_sds)
+        return lowered, mesh, {}
+
+    # decode
+    cache_sds, tok_sds, pos_sds = specs.decode_specs(cfg, shape)
+    cache_psp = shardlib.cache_pspecs(cache_sds, mcfg, mesh)
+    cache_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), cache_psp,
+                            is_leaf=lambda x: isinstance(x, P))
+    B = shape.global_batch
+    from repro.sharding import _maybe
+
+    tok_axes = _maybe(("pod", "data"), B, mesh) if B > 1 else None
+    tok_sh = jax.NamedSharding(mesh, P(tok_axes) if tok_axes else P())
+    pos_sh = jax.NamedSharding(mesh, P())
+
+    def step(params, cache, tokens, pos):
+        return model.serve_step(params, cache, tokens, pos)
+
+    lowered = jax.jit(
+        step, in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+        donate_argnums=(1,) if donate else (),
+    ).lower(params_sds, cache_sds, tok_sds, pos_sds)
+    return lowered, mesh, {}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int,
+            dispatch: str = "select", momentum_dtype: str = "float32",
+            attn_remat: bool = False, window_slice: bool = False,
+            moe_constraint: bool = False, donate: bool = False,
+            fsdp: bool = False, label: str = "") -> Dict[str, Any]:
+    t0 = time.time()
+    built = build_dryrun(arch, shape_name, multi_pod=multi_pod, gossip=gossip,
+                         rv=rv, dispatch=dispatch, momentum_dtype=momentum_dtype,
+                         attn_remat=attn_remat, window_slice=window_slice,
+                         moe_constraint=moe_constraint, donate=donate, fsdp=fsdp)
+    if built is None:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": "long_500k requires sub-quadratic attention (DESIGN.md §4)"}
+    lowered, mesh, meta = built
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    chips = mesh.devices.size
+    roof = hlo_analysis.analyze(compiled, chips)
+    mem = hlo_analysis.memory_analysis_dict(compiled)
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+
+    total_flops = roof.flops * chips
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "chips": chips,
+        "gossip": gossip,
+        "label": label or "baseline",
+        "variant": {
+            "dispatch": dispatch, "momentum_dtype": momentum_dtype,
+            "attn_remat": attn_remat, "window_slice": window_slice,
+            "moe_constraint": moe_constraint, "donate": donate, "fsdp": fsdp,
+        },
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / total_flops if total_flops else None,
+        **roof.as_dict(),
+        "memory": mem,
+        **meta,
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--gossip", default="dense",
+                    choices=["dense", "rr_static", "rr_ppermute", "all_reduce", "none"])
+    ap.add_argument("--rv", type=int, default=2)
+    ap.add_argument("--dispatch", default="select",
+                    choices=["select", "split", "shard_cond"])
+    ap.add_argument("--momentum-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--attn-remat", action="store_true")
+    ap.add_argument("--window-slice", action="store_true")
+    ap.add_argument("--moe-constraint", nargs="?", const=True, default=False,
+                    help="constrain MoE buffers; pass 'ep' for the shard_map all-to-all path")
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--label", default="")
+    ap.add_argument("--out", default=None, help="append JSON line to this file")
+    args = ap.parse_args()
+
+    report = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     gossip=args.gossip, rv=args.rv, dispatch=args.dispatch,
+                     momentum_dtype=args.momentum_dtype, attn_remat=args.attn_remat,
+                     window_slice=args.window_slice, moe_constraint=args.moe_constraint,
+                     donate=args.donate, fsdp=args.fsdp, label=args.label)
+    line = json.dumps(report)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,436 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+XLA's built-in ``HloCostAnalysis`` counts ``while`` bodies ONCE — with
+scan-over-layers models that under-reports FLOPs by ~the depth of the
+network.  This module therefore walks the optimized HLO *text* with a
+call-graph cost model:
+
+  * ``while``       -> trip_count x (body + cond)   (trip count parsed
+                        from ``backend_config known_trip_count``)
+  * ``fusion``      -> FLOPs of the fused computation; bytes only at the
+                        fusion boundary (internal traffic stays on-chip)
+  * ``conditional`` -> max over branches (upper bound)
+  * ``dot``         -> 2 * |out| * contracted_size
+  * collectives     -> output bytes (per-device link traffic estimate),
+                        multiplied through enclosing loops
+
+Terms (TPU v5e):
+  compute    = FLOPs_per_device / 197e12
+  memory     = bytes_per_device / 819e9      (fusion-boundary bytes: an
+               HBM-traffic estimate; CPU-backend fusion is less
+               aggressive than TPU's, so this leans pessimistic)
+  collective = collective_bytes_per_device / 50e9
+
+The compiled module under SPMD is the per-device program, so all sums
+are per-device; multiply by ``chips`` for cluster totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e constants ----------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"
+)
+
+# ops that are pure plumbing: no flops, no memory traffic attributed
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "broadcast", "transpose", "slice", "rng-bit-generator",
+    "get-dimension-size", "opt-barrier", "custom-call", "domain",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*\))?\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"(?:branch_computations|true_computation|false_computation)=\{?%?([\w\.\-,% ]+)\}?")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) of a possibly-tuple HLO type string."""
+    elems = byts = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: Optional[Dict[str, float]] = None
+    unknown_trip_counts: int = 0
+
+    def __add__(self, o: "Cost") -> "Cost":
+        det = dict(self.coll_detail or {})
+        for k, v in (o.coll_detail or {}).items():
+            det[k] = det.get(k, 0.0) + v
+        return Cost(
+            self.flops + o.flops,
+            self.bytes + o.bytes,
+            self.coll_bytes + o.coll_bytes,
+            det,
+            self.unknown_trip_counts + o.unknown_trip_counts,
+        )
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k,
+            self.bytes * k,
+            self.coll_bytes * k,
+            {kk: v * k for kk, v in (self.coll_detail or {}).items()},
+            self.unknown_trip_counts,
+        )
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[_Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    # ---------------- parsing ----------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            om = _OP_HEAD_RE.match(line)
+            if not om:
+                continue
+            name = om.group(1)
+            rest = line[om.end():]
+            # parse the result type: balanced-paren tuple (may contain
+            # /*index=N*/ comments) or a single shape token
+            if rest.startswith("("):
+                depth = 0
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                type_str = rest[: i + 1]
+                rest = rest[i + 1 :]
+            else:
+                sm = re.match(r"\S+", rest)
+                if not sm:
+                    continue
+                type_str = sm.group(0)
+                rest = rest[sm.end():]
+            opm = re.match(r"\s+([\w\-]+)\(", rest)
+            if not opm:
+                continue
+            opcode = opm.group(1)
+            args = rest[opm.end():]
+            depth = 1
+            arg_chars = []
+            for ch in args:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                arg_chars.append(ch)
+            operands = re.findall(r"%([\w\.\-]+)", "".join(arg_chars))
+            self.computations[cur].append(_Op(name, type_str, opcode, line, operands))
+
+    # ---------------- cost walk ----------------
+    def _shape_of(self, comp: str, name: str) -> str:
+        for op in self.computations.get(comp, []):
+            if op.name == name:
+                return op.type_str
+        return ""
+
+    def comp_cost(self, comp: str, inside_fusion: bool = False) -> Cost:
+        key = (comp, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost(coll_detail={})
+        for op in self.computations.get(comp, []):
+            total = total + self.op_cost(comp, op, inside_fusion)
+        self._memo[key] = total
+        return total
+
+    def op_cost(self, comp: str, op: _Op, inside_fusion: bool) -> Cost:
+        oc = op.opcode
+        out_elems, out_bytes = _shape_elems_bytes(op.type_str)
+
+        # normalize async pairs
+        base = oc[:-6] if oc.endswith("-start") else (None if oc.endswith("-done") else oc)
+        if base is None:
+            return Cost(coll_detail={})
+        oc = base
+
+        if oc in _COLLECTIVE_KINDS:
+            det = {oc: float(out_bytes)}
+            return Cost(coll_bytes=float(out_bytes), bytes=float(out_bytes), coll_detail=det)
+
+        if oc == "while":
+            body = _BODY_RE.search(op.line)
+            cond = _COND_RE.search(op.line)
+            trip = _TRIP_RE.search(op.line)
+            n = int(trip.group(1)) if trip else 1
+            c = Cost(coll_detail={}, unknown_trip_counts=0 if trip else 1)
+            if body:
+                c = c + self.comp_cost(body.group(1)).scaled(n)
+            if cond:
+                c = c + self.comp_cost(cond.group(1)).scaled(n)
+            return c
+
+        if oc == "conditional":
+            branches: List[str] = []
+            for m in re.finditer(r"(?:true_computation|false_computation)=%?([\w\.\-]+)", op.line):
+                branches.append(m.group(1))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+            if bm:
+                branches += re.findall(r"%([\w\.\-]+)", bm.group(1))
+            costs = [self.comp_cost(b) for b in branches]
+            if not costs:
+                return Cost(coll_detail={})
+            best = max(costs, key=lambda c: (c.flops, c.bytes))
+            return best
+
+        if oc == "fusion":
+            callee = _CALLS_RE.search(op.line)
+            inner = self.comp_cost(callee.group(1), inside_fusion=True) if callee else Cost(coll_detail={})
+            opnd_bytes = self._fusion_operand_bytes(comp, op, callee.group(1) if callee else None)
+            return Cost(
+                flops=inner.flops,
+                bytes=float(out_bytes + opnd_bytes),
+                coll_bytes=inner.coll_bytes,
+                coll_detail=inner.coll_detail or {},
+                unknown_trip_counts=inner.unknown_trip_counts,
+            )
+
+        if oc == "call":
+            callee = _TOAPPLY_RE.search(op.line)
+            return self.comp_cost(callee.group(1)) if callee else Cost(coll_detail={})
+
+        if oc in ("dot", "convolution"):
+            flops = 2.0 * out_elems * self._contracted_size(comp, op)
+            byts = 0.0 if inside_fusion else float(out_bytes + self._operand_bytes(comp, op))
+            return Cost(flops=flops, bytes=byts, coll_detail={})
+
+        if oc in ("reduce", "reduce-window"):
+            in_elems = 0
+            for nm in op.operands:
+                e, _ = _shape_elems_bytes(self._shape_of(comp, nm))
+                in_elems += e
+            byts = 0.0 if inside_fusion else float(out_bytes + self._operand_bytes(comp, op))
+            return Cost(flops=float(in_elems), bytes=byts, coll_detail={})
+
+        if oc in ("sort",):
+            e = out_elems * max(1.0, math.log2(max(out_elems, 2)))
+            byts = 0.0 if inside_fusion else float(out_bytes + self._operand_bytes(comp, op))
+            return Cost(flops=float(e), bytes=byts, coll_detail={})
+
+        if oc in _FREE_OPS:
+            return Cost(coll_detail={})
+
+        # sliced reads / writes touch only the slice, not the buffer
+        if oc in ("dynamic-slice", "gather"):
+            byts = 0.0 if inside_fusion else float(2 * out_bytes)
+            return Cost(flops=0.0, bytes=byts, coll_detail={})
+        if oc in ("dynamic-update-slice", "scatter"):
+            upd = 0
+            if len(op.operands) >= 2:
+                _, upd = _shape_elems_bytes(self._shape_of(comp, op.operands[1]))
+            byts = 0.0 if inside_fusion else float(2 * upd)
+            return Cost(flops=0.0, bytes=byts, coll_detail={})
+
+        if oc in ("copy", "copy-start", "concatenate", "pad", "reverse", "convert",
+                  "select-and-scatter"):
+            byts = 0.0 if inside_fusion else float(out_bytes + self._operand_bytes(comp, op))
+            return Cost(flops=0.0, bytes=byts, coll_detail={})
+
+        # generic elementwise arithmetic
+        byts = 0.0 if inside_fusion else float(out_bytes + self._operand_bytes(comp, op))
+        return Cost(flops=float(out_elems), bytes=byts, coll_detail={})
+
+    def _operand_bytes(self, comp: str, op: _Op) -> int:
+        total = 0
+        for nm in op.operands:
+            _, b = _shape_elems_bytes(self._shape_of(comp, nm))
+            total += b
+        return total
+
+    def _fusion_operand_bytes(self, comp: str, op: _Op, callee: Optional[str]) -> int:
+        """Operand bytes at a fusion boundary, with sliced reads reduced
+        to the slice size: a fusion parameter consumed (only) by
+        (dynamic-)slice ops reads just the slice, not the buffer — the
+        dominant pattern in scan bodies indexing stacked weights."""
+        if callee is None or callee not in self.computations:
+            return self._operand_bytes(comp, op)
+        callee_ops = self.computations[callee]
+        # param index -> op name inside callee
+        param_names: Dict[int, str] = {}
+        for cop in callee_ops:
+            if cop.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", cop.line.split("parameter(")[-1])
+                if m:
+                    param_names[int(m.group(1))] = cop.name
+        total = 0
+        for i, nm in enumerate(op.operands):
+            _, full = _shape_elems_bytes(self._shape_of(comp, nm))
+            pname = param_names.get(i)
+            if pname is None:
+                total += full
+                continue
+            consumers = [c for c in callee_ops if pname in c.operands]
+            if consumers and all(c.opcode in ("dynamic-slice", "slice", "gather") for c in consumers):
+                sliced = 0
+                for c in consumers:
+                    _, ob = _shape_elems_bytes(c.type_str)
+                    sliced += ob
+                total += min(sliced, full)
+            else:
+                total += full
+        return total
+
+    def _contracted_size(self, comp: str, op: _Op) -> int:
+        m = _LHS_CONTRACT_RE.search(op.line)
+        if not m or not op.operands:
+            return 1
+        lhs_type = self._shape_of(comp, op.operands[0])
+        sm = _SHAPE_RE.search(lhs_type)
+        if not sm:
+            return 1
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        size = 1
+        for di in m.group(1).split(","):
+            if di:
+                idx = int(di)
+                if idx < len(dims):
+                    size *= dims[idx]
+        return size
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    bytes_accessed: float  # per device (fusion-boundary estimate)
+    coll_bytes: float  # per device
+    chips: int
+    coll_detail: Dict[str, float]
+    unknown_trip_counts: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "coll_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_detail": {k: v for k, v in self.coll_detail.items() if v},
+            "unknown_trip_counts": self.unknown_trip_counts,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    model = HloCostModel(compiled.as_text())
+    cost = model.entry_cost()
+    return Roofline(
+        flops=cost.flops,
+        bytes_accessed=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        chips=chips,
+        coll_detail=cost.coll_detail or {},
+        unknown_trip_counts=cost.unknown_trip_counts,
+    )
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = float(v)
+    return out

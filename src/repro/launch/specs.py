@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair
+— weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HDOConfig, InputShape, MeshConfig, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+# archs allowed to run long_500k (sub-quadratic decode; DESIGN.md §4)
+LONG_OK = {"mamba2-780m", "zamba2-2.7b", "gemma2-9b"}
+
+
+def long_ctx_variant(cfg: ModelConfig) -> ModelConfig:
+    """Serving variant for long_500k: sliding-window everywhere."""
+    if cfg.name.startswith("gemma2"):
+        return dataclasses.replace(cfg, local_global_period=0)
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_agents: int) -> Dict[str, SDS]:
+    """Per-agent-stacked training batch: leaves (n_agents, b, ...)."""
+    assert shape.global_batch % n_agents == 0, (shape.global_batch, n_agents)
+    b = shape.global_batch // n_agents
+    S = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_patches
+        return {
+            "tokens": SDS((n_agents, b, s_text), jnp.int32),
+            "labels": SDS((n_agents, b, s_text), jnp.int32),
+            "patches": SDS((n_agents, b, cfg.num_patches, cfg.d_model), dt),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": SDS((n_agents, b, S), jnp.int32),
+            "labels": SDS((n_agents, b, S), jnp.int32),
+            "frames": SDS((n_agents, b, cfg.encoder_seq, cfg.d_model), dt),
+        }
+    return {
+        "tokens": SDS((n_agents, b, S), jnp.int32),
+        "labels": SDS((n_agents, b, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    """Single-model inference prefill batch (no population axis)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out = {"tokens": SDS((B, S if cfg.family != "vlm" else S - cfg.num_patches), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patches"] = SDS((B, cfg.num_patches, cfg.d_model), dt)
+    if cfg.family == "audio":
+        out["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), dt)
+    # labels unused at inference; provide for the shared loss signature
+    out["labels"] = SDS(out["tokens"].shape, jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Dict[str, SDS], SDS, SDS]:
+    """(cache_specs, tokens_spec, pos_spec) for serve_step."""
+    from repro.models import decode as _decode
+
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: _decode.init_cache(cfg, B, S))
+    tokens = SDS((B,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos
+
+
+def population_size(mcfg: MeshConfig, mesh) -> int:
+    n = 1
+    for a in mcfg.population_axes:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n

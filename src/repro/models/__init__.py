@@ -1,0 +1,49 @@
+"""Public model API: ``build_model(cfg)`` -> ``Model``.
+
+``Model`` bundles pure functions:
+  init(key)                      -> params
+  loss(params, batch)            -> scalar (next-token CE + MoE aux)
+  logits(params, batch)          -> (B, S, V)   (small models / tests)
+  init_cache(batch, max_seq)     -> decode cache
+  serve_step(params, cache, tokens, pos) -> (logits (B, V), cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as _decode
+from repro.models import transformer as _tf
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., PyTree]
+    loss: Callable[..., Any]
+    logits: Callable[..., Any]
+    forward_hidden: Callable[..., Any]
+    init_cache: Callable[..., PyTree]
+    serve_step: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: _tf.init_params(cfg, key),
+        loss=lambda params, batch: _tf.lm_loss(params, cfg, batch),
+        logits=lambda params, batch: _tf.logits_full(params, cfg, batch),
+        forward_hidden=lambda params, batch: _tf.forward_hidden(params, cfg, batch),
+        init_cache=lambda batch, max_seq, dtype=None: _decode.init_cache(
+            cfg, batch, max_seq, dtype
+        ),
+        serve_step=lambda params, cache, tokens, pos: _decode.serve_step(
+            params, cfg, cache, tokens, pos
+        ),
+    )
+
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,317 @@
+"""Serving: KV/SSM cache construction and single-token decode steps.
+
+``serve_step(params, cfg, cache, tokens, pos)`` consumes ONE new token
+per sequence against a cache of ``max_seq`` (the assigned decode shapes:
+decode_32k, long_500k).  Attention archs use a dynamic-slice cache
+update + chunked attention over the cache; SSM archs use the O(1)
+recurrent state; hybrids use both.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2
+from repro.models.layers import (
+    apply_rope,
+    attention_qkv,
+    chunked_attention,
+    mlp_block,
+    rms_norm,
+    rope_tables,
+    sinusoidal_embedding,
+    softcap,
+)
+from repro.models.transformer import _head_weight
+
+PyTree = Any
+
+
+def _use_ring(cfg, max_seq: int) -> bool:
+    """Ring-buffer KV cache: O(window) storage for pure sliding-window
+    serving (the long_500k optimized variant — EXPERIMENTS.md §Perf C)."""
+    return bool(
+        cfg.decode_window_slice
+        and cfg.sliding_window
+        and cfg.sliding_window < max_seq
+        and cfg.local_global_period == 0  # every layer must be windowed
+    )
+
+
+def _kv_shape(cfg, batch, max_seq):
+    seq = cfg.sliding_window if _use_ring(cfg, max_seq) else max_seq
+    return (batch, seq, cfg.num_kv_heads, cfg.resolved_head_dim)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> PyTree:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        L = cfg.num_layers
+        return {
+            "k": jnp.zeros((L,) + _kv_shape(cfg, batch, max_seq), dtype),
+            "v": jnp.zeros((L,) + _kv_shape(cfg, batch, max_seq), dtype),
+        }
+    if fam == "moe":
+        n_super = cfg.num_layers // cfg.moe_every
+        cache = {
+            "k_moe": jnp.zeros((n_super,) + _kv_shape(cfg, batch, max_seq), dtype),
+            "v_moe": jnp.zeros((n_super,) + _kv_shape(cfg, batch, max_seq), dtype),
+        }
+        if cfg.moe_every == 2:
+            cache["k_dense"] = jnp.zeros((n_super,) + _kv_shape(cfg, batch, max_seq), dtype)
+            cache["v_dense"] = jnp.zeros((n_super,) + _kv_shape(cfg, batch, max_seq), dtype)
+        return cache
+    if fam == "ssm":
+        return {
+            "mamba": jax.vmap(lambda _: mamba2.mamba_init_cache(cfg, batch, dtype))(
+                jnp.arange(cfg.num_layers)
+            )
+        }
+    if fam == "hybrid":
+        n_shared = cfg.num_layers // cfg.shared_attn_every
+        return {
+            "mamba": jax.vmap(lambda _: mamba2.mamba_init_cache(cfg, batch, dtype))(
+                jnp.arange(cfg.num_layers)
+            ),
+            "k": jnp.zeros((n_shared,) + _kv_shape(cfg, batch, max_seq), dtype),
+            "v": jnp.zeros((n_shared,) + _kv_shape(cfg, batch, max_seq), dtype),
+        }
+    if fam == "audio":
+        L = cfg.num_layers
+        return {
+            "k": jnp.zeros((L,) + _kv_shape(cfg, batch, max_seq), dtype),
+            "v": jnp.zeros((L,) + _kv_shape(cfg, batch, max_seq), dtype),
+            # cross-attention K/V precomputed from the (stubbed) encoder
+            "ek": jnp.zeros((L,) + _kv_shape(cfg, batch, cfg.encoder_seq), dtype),
+            "ev": jnp.zeros((L,) + _kv_shape(cfg, batch, cfg.encoder_seq), dtype),
+        }
+    raise ValueError(fam)
+
+
+def _decode_attn(p, h, cfg, ck, cv, pos, *, window, max_seq):
+    """h: (B, 1, d). Updates cache in-place; returns (out, ck, cv)."""
+    B = h.shape[0]
+    q, k, v = attention_qkv(p, h, cfg)  # (B,1,*,hd)
+    qpos = pos[None] if pos.ndim == 0 else pos
+    if cfg.use_rope:
+        cos, sin = rope_tables(qpos, cfg.resolved_head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    S_cache = ck.shape[1]
+    ring = (
+        isinstance(window, int)
+        and cfg.decode_window_slice
+        and S_cache == window
+    )
+    if ring:
+        # O(window) ring buffer: slot s holds absolute position
+        # pos - ((pos - s) mod window); unwritten slots map to pos+1 so
+        # the causal mask drops them.
+        slot = pos % window
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        s_idx = jnp.arange(window)
+        p_s = pos - ((pos - s_idx) % window)
+        kpos_ring = jnp.where(p_s >= 0, p_s, pos + 1)
+        out = chunked_attention(
+            q, ck, cv,
+            q_positions=qpos,
+            k_positions=kpos_ring,
+            causal=True,
+            window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            kv_chunk=2048,
+        )
+        return out.reshape(B, 1, -1) @ p["wo"], ck, cv
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
+    if (
+        cfg.decode_window_slice
+        and isinstance(window, int)
+        and window < max_seq
+    ):
+        # beyond-paper perf: read ONLY the window from the cache instead
+        # of masking the full max_seq (sliding-window decode is O(window))
+        start = jnp.clip(pos - window + 1, 0, max_seq - window)
+        k_att = jax.lax.dynamic_slice(ck, (0, start, 0, 0),
+                                      (ck.shape[0], window) + ck.shape[2:])
+        v_att = jax.lax.dynamic_slice(cv, (0, start, 0, 0),
+                                      (cv.shape[0], window) + cv.shape[2:])
+        kpos_att = start + jnp.arange(window)
+        k_valid = None  # every slice position <= pos is valid by construction
+    else:
+        k_att, v_att = ck, cv
+        kpos_att = jnp.arange(max_seq)
+        k_valid = pos + 1
+    out = chunked_attention(
+        q,
+        k_att,
+        v_att,
+        q_positions=qpos,
+        k_positions=kpos_att,
+        causal=True,
+        window=window,
+        logit_softcap=cfg.attn_logit_softcap,
+        kv_chunk=2048,
+        k_valid=k_valid,
+    )
+    return out.reshape(B, 1, -1) @ p["wo"], ck, cv
+
+
+def _dense_decode_block(p, x, cfg, ck, cv, pos, layer_idx, max_seq):
+    if cfg.local_global_period:
+        is_local = (layer_idx % cfg.local_global_period) == 0
+        window = jnp.where(is_local, cfg.sliding_window, max_seq + 1)
+        window = window  # traced window: mask arithmetic handles it
+    elif cfg.sliding_window is not None:
+        window = cfg.sliding_window
+    else:
+        window = None
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    a, ck, cv = _decode_attn(p["attn"], h, cfg, ck, cv, pos, window=window, max_seq=max_seq)
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["ln1_post"], cfg.rms_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    m = mlp_block(p["mlp"], h, cfg.mlp_activation)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, p["ln2_post"], cfg.rms_eps)
+    return x + m, ck, cv
+
+
+def _embed_token(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)  # (B,1,d)
+    if cfg.sandwich_norm:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def serve_step(params, cfg, cache: Dict, tokens, pos):
+    """tokens: (B,) int32; pos: scalar int32 — returns (logits (B,V), cache)."""
+    fam = cfg.family
+    max_seq = (
+        cache["k"].shape[2]
+        if "k" in cache
+        else (cache["k_moe"].shape[2] if "k_moe" in cache else 0)
+    )
+    if fam != "audio":
+        x = _embed_token(params, cfg, tokens)
+
+    if fam in ("dense", "vlm"):
+        def body(carry, blk):
+            xx = carry
+            p, ck, cv, idx = blk
+            xx, ck, cv = _dense_decode_block(p, xx, cfg, ck, cv, pos, idx, max_seq)
+            return xx, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], jnp.arange(cfg.num_layers))
+        )
+        cache = {"k": nk, "v": nv}
+    elif fam == "moe":
+        from repro.models import moe as moe_lib
+
+        n_super = cfg.num_layers // cfg.moe_every
+
+        def body(carry, blk):
+            xx = carry
+            if cfg.moe_every == 2:
+                xx, dk, dv = _dense_decode_block(
+                    blk["pd"], xx, cfg, blk["k_dense"], blk["v_dense"], pos, 0, max_seq
+                )
+            h = rms_norm(xx, blk["pm"]["ln1"], cfg.rms_eps)
+            a, mk, mv = _decode_attn(
+                blk["pm"]["attn"], h, cfg, blk["k_moe"], blk["v_moe"], pos,
+                window=None, max_seq=max_seq,
+            )
+            xx = xx + a
+            h = rms_norm(xx, blk["pm"]["ln2"], cfg.rms_eps)
+            m, _ = moe_lib.moe_apply(blk["pm"]["moe"], h, cfg)
+            xx = xx + m
+            out_cache = {"k_moe": mk, "v_moe": mv}
+            if cfg.moe_every == 2:
+                out_cache.update({"k_dense": dk, "v_dense": dv})
+            return xx, out_cache
+
+        xs = {"pm": params["blocks_moe"], "k_moe": cache["k_moe"], "v_moe": cache["v_moe"]}
+        if cfg.moe_every == 2:
+            xs.update(
+                pd=params["blocks_dense"], k_dense=cache["k_dense"], v_dense=cache["v_dense"]
+            )
+        x, cache = jax.lax.scan(body, x, xs)
+    elif fam == "ssm":
+        def body(carry, blk):
+            xx = carry
+            p, mc = blk
+            y, mc = mamba2.mamba_decode_step(p, mc, xx[:, 0, :], cfg)
+            return xx + y[:, None, :], mc
+
+        x, mcache = jax.lax.scan(body, x, (params["blocks"], cache["mamba"]))
+        cache = {"mamba": mcache}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        k_every = cfg.shared_attn_every
+        n_groups = cfg.num_layers // k_every
+        max_seq = cache["k"].shape[2]
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape((n_groups, k_every) + a.shape[1:]), params["blocks"]
+        )
+        grouped_mc = jax.tree.map(
+            lambda a: a.reshape((n_groups, k_every) + a.shape[1:]), cache["mamba"]
+        )
+
+        def body(carry, blk):
+            xx = carry
+
+            def inner(c, pmc):
+                p, mc = pmc
+                y, mc = mamba2.mamba_decode_step(p, mc, c[:, 0, :], cfg)
+                return c + y[:, None, :], mc
+
+            xx, mc = jax.lax.scan(inner, xx, (blk["p"], blk["mc"]))
+            xx, ck, cv = _dense_decode_block(
+                shared, xx, cfg, blk["ck"], blk["cv"], pos, 0, max_seq
+            )
+            return xx, {"mc": mc, "ck": ck, "cv": cv}
+
+        x, out = jax.lax.scan(
+            body, x, {"p": grouped_p, "mc": grouped_mc, "ck": cache["k"], "cv": cache["v"]}
+        )
+        mcache = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), out["mc"]
+        )
+        cache = {"mamba": mcache, "k": out["ck"], "v": out["cv"]}
+    elif fam == "audio":
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        x = x + sinusoidal_embedding(max_seq, cfg.d_model, x.dtype)[pos][None, None]
+
+        def body(carry, blk):
+            xx = carry
+            p, ck, cv, ek, ev = blk
+            xx, ck, cv = _dense_decode_block(p, xx, cfg, ck, cv, pos, 0, max_seq)
+            # cross attention against precomputed encoder K/V
+            h = rms_norm(xx, p["lnx"], cfg.rms_eps)
+            q, _, _ = attention_qkv(p["xattn"], h, cfg)
+            a = chunked_attention(
+                q, ek, ev,
+                q_positions=pos[None] if pos.ndim == 0 else pos,
+                k_positions=jnp.arange(ek.shape[1]),
+                causal=False,
+            )
+            B = h.shape[0]
+            xx = xx + a.reshape(B, 1, -1) @ p["xattn"]["wo"]
+            return xx, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["ek"], cache["ev"])
+        )
+        cache = {"k": nk, "v": nv, "ek": cache["ek"], "ev": cache["ev"]}
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = (h[:, 0, :] @ _head_weight(params, cfg)).astype(jnp.float32)
+    return softcap(logits, cfg.final_logit_softcap), cache

@@ -1,0 +1,307 @@
+"""Core transformer layers: norms, RoPE, chunked (flash-style) GQA
+attention, MLPs, parameter initializers.
+
+Everything is a pure function over parameter dicts; attention uses an
+online-softmax two-level chunking so activation memory is
+O(q_chunk x kv_chunk) instead of O(S^2) — required for the 32k shapes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos/sin tables (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(dt)
+
+
+def sinusoidal_embedding(seq: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    emb = jnp.zeros((seq, dim), dtype=jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (GQA, causal / sliding-window / cross)
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    if n <= target:
+        return n
+    c = target
+    while n % c:
+        c //= 2
+    return max(c, 1)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    q_positions,
+    k_positions,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    k_valid: Optional[int] = None,
+    remat: bool = False,
+):
+    """Flash-style attention in pure JAX.
+
+    q: (B, Sq, nq, hd);  k, v: (B, Sk, nkv, hd);  nq % nkv == 0.
+    q_positions: (Sq,) absolute positions of queries.
+    k_positions: (Sk,) absolute positions of keys.
+    k_valid: scalar or None — keys with index >= k_valid are masked
+       (decode caches allocated to max length).
+    Returns (B, Sq, nq, hd).
+    """
+    B, Sq, nq, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Sk, kv_chunk)
+    n_q, n_k = Sq // qc, Sk // kc
+
+    # (B, nkv, g, Sq, hd)
+    qh = q.reshape(B, Sq, nkv, g, hd).transpose(0, 2, 3, 1, 4) * scale
+    kh = k.transpose(0, 2, 1, 3)  # (B, nkv, Sk, hd)
+    vh = v.transpose(0, 2, 1, 3)
+
+    qh = qh.reshape(B, nkv, g, n_q, qc, hd)
+    kh = kh.reshape(B, nkv, n_k, kc, hd)
+    vh = vh.reshape(B, nkv, n_k, kc, hd)
+    qpos = q_positions.reshape(n_q, qc)
+    kpos = k_positions.reshape(n_k, kc)
+    kidx = jnp.arange(Sk).reshape(n_k, kc)
+
+    def q_body(_, qi):
+        qblk = qh[:, :, :, qi]  # (B, nkv, g, qc, hd)
+        qp = qpos[qi]  # (qc,)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kblk = kh[:, :, ki]  # (B, nkv, kc, hd)
+            vblk = vh[:, :, ki]
+            kp = kpos[ki]  # (kc,)
+            s = jnp.einsum(
+                "bngqh,bnkh->bngqk", qblk, kblk, preferred_element_type=jnp.float32
+            )
+            s = softcap(s, logit_softcap)
+            mask = jnp.ones((qc, kc), dtype=bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= (qp[:, None] - kp[None, :]) < window
+            if k_valid is not None:
+                mask &= kidx[ki][None, :] < k_valid
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngqk,bnkh->bngqh", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nkv, g, qc), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, qc), dtype=jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, qc, hd), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(n_k))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    if remat:
+        # flash-attention-style backward: recompute score blocks instead
+        # of saving every (qc, kc) p-matrix the kv-scan would stash
+        q_body = jax.checkpoint(q_body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(n_q))
+    # outs: (n_q, B, nkv, g, qc, hd) -> (B, Sq, nq, hd)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, nq, Sq, hd)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nq * hd), dtype),
+        "wk": dense_init(ks[1], (d, nkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, nkv * hd), dtype),
+        "wo": dense_init(ks[3], (nq * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def attention_qkv(p, x, cfg):
+    """Project x -> q, k, v with GQA shapes."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def attention_block(
+    p,
+    x,
+    cfg,
+    *,
+    positions,
+    is_local=None,
+    kv_override=None,
+    causal: bool = True,
+):
+    """Full attention sublayer for train/prefill.
+
+    is_local: traced bool (gemma2 alternation) — selects sliding window.
+    kv_override: (k, v, k_positions) for cross-attention.
+    """
+    B, S, _ = x.shape
+    q, k, v = attention_qkv(p, x, cfg)
+    if kv_override is not None:
+        k, v, kpos = kv_override
+    else:
+        kpos = positions
+        if cfg.use_rope:
+            cos, sin = rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+
+    def run(window):
+        return chunked_attention(
+            q,
+            k,
+            v,
+            q_positions=positions,
+            k_positions=kpos,
+            causal=causal,
+            window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            remat=cfg.attn_remat,
+        )
+
+    if cfg.sliding_window is None:
+        out = run(None)
+    elif is_local is None:
+        # homogeneous stacks with a window configured (e.g. zamba2 shared
+        # block / gemma2 long-context serving) use the window everywhere.
+        out = run(cfg.sliding_window)
+    else:
+        # traced gemma2 local/global alternation.
+        out = jax.lax.cond(
+            is_local,
+            lambda: run(cfg.sliding_window),
+            lambda: run(None),
+        )
+    B_, S_, nq, hd = out.shape
+    return out.reshape(B_, S_, nq * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "wi": dense_init(ks[0], (d, ff), dtype),
+            "wg": dense_init(ks[1], (d, ff), dtype),
+            "wo": dense_init(ks[2], (ff, d), dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, ff), dtype),
+        "wo": dense_init(ks[2], (ff, d), dtype),
+    }
+
+
+def mlp_block(p, x, activation: str):
+    if activation == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

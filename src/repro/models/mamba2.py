@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in JAX.
+
+Train/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear recurrence across chunks); decode is the O(1)-state recurrent
+update.  ``ssd_chunked`` doubles as the numerical oracle for the Pallas
+``ssd_scan`` kernel (see repro/kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      discretization steps (post-softplus)
+    A:  (h,)           negative decay rates
+    Bm: (b, s, n)      input projections (ngroups=1, shared across heads)
+    Cm: (b, s, n)      output projections
+    h0: optional initial state (b, h, p, n)
+    Returns (y, h_final): y (b, s, h, p), h_final (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]  # (b, nc, l, h) log-decays (<=0)
+    cs = jnp.cumsum(dA, axis=2)  # cumulative log decay within chunk
+
+    # ---- intra-chunk (quadratic in `chunk`) -----------------------------
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b, nc, l, l)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the exponent BEFORE exp: the j>i entries would otherwise be
+    # exp(positive) -> inf and poison the backward pass via inf*0.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (b,nc,i,j,h)
+    diff = jnp.where(causal[None, None, :, :, None], diff, -jnp.inf)
+    M = CB[..., None] * jnp.exp(diff)
+    xbar = xc * dtc[..., None]  # (b, nc, l, h, p)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xbar)
+
+    # ---- chunk-final states ---------------------------------------------
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (b, nc, l, h)
+    states = jnp.einsum("bclh,bclhp,bcln->bchpn", decay_to_end * dtc, xc, Bc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (b, nc, h)
+
+    # ---- inter-chunk recurrence (f32 carry) -------------------------------
+    def scan_body(carry, inp):
+        st, cd = inp  # states (b,h,p,n), chunk_decay (b,h)
+        prev = carry
+        new = cd[:, :, None, None].astype(jnp.float32) * prev + st.astype(jnp.float32)
+        return new, prev
+
+    init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    h_final, h_prevs = jax.lax.scan(
+        scan_body,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_prevs, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """Naive sequential recurrence (oracle for tests)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    hstate = h0 if h0 is not None else jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(hstate, t):
+        dt_t = dt[:, t]  # (b, h)
+        da = jnp.exp(dt_t * A[None, :])  # (b, h)
+        x_t = x[:, t]  # (b, h, p)
+        B_t = Bm[:, t]  # (b, n)
+        C_t = Cm[:, t]
+        hstate = da[:, :, None, None] * hstate + (
+            (dt_t[:, :, None] * x_t)[..., None] * B_t[:, None, None, :]
+        )
+        y_t = jnp.einsum("bhpn,bn->bhp", hstate, C_t)
+        return hstate, y_t
+
+    hstate, ys = jax.lax.scan(body, hstate.astype(jnp.float32), jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hstate.astype(x.dtype)
+
+
+def ssd_decode_step(hstate, x_t, dt_t, A, B_t, C_t, D):
+    """One-token recurrent update.  hstate: (b, h, p, n)."""
+    da = jnp.exp(dt_t * A[None, :])
+    hstate = da[:, :, None, None] * hstate + (
+        (dt_t[:, :, None] * x_t)[..., None] * B_t[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", hstate, C_t) + D[None, :, None] * x_t
+    return y, hstate
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg, dtype):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * ds + nh), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d), dtype),
+        "ln": jnp.zeros((d,), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C); w: (k, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _split_proj(zxbcdt, cfg):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds :]
+    return z, xBC, dt
+
+
+def mamba_block(p, x, cfg, *, ssd_impl=None):
+    """Train/prefill forward. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, p["ln"], cfg.rms_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(B, S, nh, hp)
+    Bm = xBC[..., di : di + ds]
+    Cm = xBC[..., di + ds :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    run = ssd_impl or (lambda *a: ssd_chunked(*a, chunk=min(cfg.ssm_chunk, S)))
+    y, _ = run(xs, dt, A, Bm, Cm)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_init_cache(cfg, batch: int, dtype):
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di + 2 * ds), dtype),
+        "ssm": jnp.zeros((batch, nh, hp, ds), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, cache, x_t, cfg):
+    """x_t: (B, d) one token -> (y, cache)."""
+    B, d = x_t.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x_t, p["ln"], cfg.rms_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    # conv over (cached k-1 inputs, current)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xBC_c = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+    xs = xBC_c[..., :di].reshape(B, nh, hp)
+    Bm = xBC_c[..., di : di + ds]
+    Cm = xBC_c[..., di + ds :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_decode_step(
+        cache["ssm"], xs.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32), p["D"]
+    )
+    y = y.reshape(B, di).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,255 @@
+"""Mixture-of-experts layer: top-k router, sort-based capacity dispatch,
+shared experts, Switch-style load-balance auxiliary loss.
+
+Dispatch strategy (TPU-friendly): flatten tokens, argsort by expert id,
+scatter into an (E, C, d) buffer, one batched einsum per FFN matrix,
+gather back.  With experts sharded over the expert axis the scatter /
+gather become the all-to-all of classic expert parallelism.
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+# Beyond-paper perf knob (EXPERIMENTS.md §Perf): an explicit sharding
+# for the (E, cap, d) dispatch buffer.  Without it XLA's propagation may
+# replicate the buffer and all-reduce expert gradients over the expert
+# axis; constraining it to the expert axis turns dispatch into the
+# canonical all-to-all of expert parallelism.
+_EXPERT_BUFFER_SHARDING: contextvars.ContextVar[Optional[object]] = contextvars.ContextVar(
+    "expert_buffer_sharding", default=None
+)
+_TOKEN_SHARDING: contextvars.ContextVar[Optional[object]] = contextvars.ContextVar(
+    "moe_token_sharding", default=None
+)
+
+
+def set_expert_buffer_sharding(sharding, token_sharding=None) -> None:
+    """sharding: jax.NamedSharding for the (E, cap, d) dispatch buffer;
+    token_sharding: NamedSharding for the (B, S, d) combined output.
+    Constraining the combine output to stay token-sharded turns the
+    naive full-buffer all-reduce into a reduce-scatter-shaped exchange.
+    """
+    _EXPERT_BUFFER_SHARDING.set(sharding)
+    _TOKEN_SHARDING.set(token_sharding)
+
+
+def _constrain(buf):
+    sh = _EXPERT_BUFFER_SHARDING.get()
+    if sh is not None:
+        return jax.lax.with_sharding_constraint(buf, sh)
+    return buf
+
+
+def _constrain_tokens(y):
+    sh = _TOKEN_SHARDING.get()
+    if sh is not None:
+        return jax.lax.with_sharding_constraint(y, sh)
+    return y
+
+
+# Expert-parallel dispatch via shard_map + all_to_all (EXPERIMENTS.md
+# §Perf B).  When set, moe_apply routes through moe_apply_ep: tokens are
+# dispatched into per-source-shard buffers and exchanged with the expert
+# owners point-to-point instead of XLA's gather → mask → all-reduce.
+_EP_CONTEXT: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "moe_ep_context", default=None
+)
+
+
+def set_ep_context(mesh=None, data_axis: str = "data") -> None:
+    if mesh is None:
+        _EP_CONTEXT.set(None)
+    else:
+        _EP_CONTEXT.set({"mesh": mesh, "axis": data_axis})
+
+
+def init_moe(key, cfg, dtype):
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wi": dense_init(ks[1], (E, d, ff), dtype),
+        "wg": dense_init(ks[2], (E, d, ff), dtype),
+        "wo": dense_init(ks[3], (E, ff, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        sff = ff * cfg.num_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(ks2[0], (d, sff), dtype),
+            "wg": dense_init(ks2[1], (d, sff), dtype),
+            "wo": dense_init(ks2[2], (sff, d), dtype),
+        }
+    return p
+
+
+def _dispatch_local(xt, idx, gates, E: int, cap: int):
+    """Sort-based dispatch into an (E, cap, d) buffer (local tokens).
+
+    Returns (buf, s_tok, eid_c, pos_c, keep, s_gate)."""
+    T, d = xt.shape
+    k = idx.shape[-1]
+    flat_eid = idx.reshape(T * k)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gates.reshape(T * k)
+    order = jnp.argsort(flat_eid, stable=True)
+    s_eid = flat_eid[order]
+    s_tok = flat_tok[order]
+    s_gate = flat_gate[order]
+    counts = jnp.bincount(flat_eid, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[s_eid]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    eid_c = jnp.where(keep, s_eid, 0)
+    buf = jnp.zeros((E, cap, d), xt.dtype)
+    buf = buf.at[eid_c, pos_c].add(jnp.where(keep[:, None], xt[s_tok], 0).astype(xt.dtype))
+    return buf, s_tok, eid_c, pos_c, keep, s_gate
+
+
+def moe_apply_ep(p, x, cfg, mesh, data_axis: str = "data", *, capacity_factor: float = 1.25):
+    """Expert-parallel MoE: shard_map over the expert/data axis.
+
+    Inside each shard: route the LOCAL tokens, build an (E, cap_l, d)
+    buffer, all_to_all the expert dim to the owning shards, run the
+    local experts, all_to_all back, combine locally.  The only
+    cross-device traffic is the two all_to_alls (+ a pmean for the aux
+    loss) — no full-token-buffer all-reduce.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    n_sh = mesh.shape[data_axis]
+    assert E % n_sh == 0
+
+    def shard_fn(p_l, x_l):
+        Bl, S, d = x_l.shape
+        T = Bl * S
+        xt = x_l.reshape(T, d)
+        logits = xt.astype(jnp.float32) @ p_l["router"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        me = jax.lax.pmean(probs.mean(axis=0), data_axis)
+        ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+        ce = jax.lax.pmean(ce, data_axis)
+        aux = E * jnp.sum(me * ce)
+
+        cap = int(max(1, (T * k * capacity_factor) // E))
+        buf, s_tok, eid_c, pos_c, keep, s_gate = _dispatch_local(xt, idx, gates, E, cap)
+
+        # exchange with expert owners: (E, cap, d) -> (E/n, n*cap, d)
+        buf_x = jax.lax.all_to_all(buf, data_axis, split_axis=0, concat_axis=1, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf_x, p_l["wi"])
+        hg = jnp.einsum("ecd,edf->ecf", buf_x, p_l["wg"])
+        out_x = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * h, p_l["wo"])
+        # send results back: (E/n, n*cap, d) -> (E, cap, d)
+        out_buf = jax.lax.all_to_all(out_x, data_axis, split_axis=1, concat_axis=0, tiled=True)
+
+        gate_c = jnp.where(keep, s_gate, 0.0).astype(x_l.dtype)
+        y_slots = out_buf[eid_c, pos_c] * gate_c[:, None]
+        y = jnp.zeros((T, d), x_l.dtype).at[s_tok].add(y_slots)
+        # aux emitted per shard (identical values); avoids an
+        # unproven-replicated scalar output that trips XLA:CPU's
+        # AllReducePromotion pass
+        return y.reshape(Bl, S, d), aux[None]
+
+    p_specs = {
+        "router": P(),
+        "wi": P(data_axis, None, None),
+        "wg": P(data_axis, None, None),
+        "wo": P(data_axis, None, None),
+    }
+    p_routed = {k: v for k, v in p.items() if k in p_specs}
+    y, aux = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(p_specs, P(data_axis)),
+        out_specs=(P(data_axis), P(data_axis)),
+        axis_names={data_axis},
+        check_vma=False,
+    )(p_routed, x)
+    if cfg.num_shared_experts:
+        # shared experts run outside the manual region so their
+        # model-axis psum stays in XLA's auto-sharded (promotable) path
+        B, S, d = x.shape
+        xt = x.reshape(B * S, d)
+        sp = p["shared"]
+        y = y + ((jax.nn.silu(xt @ sp["wg"]) * (xt @ sp["wi"])) @ sp["wo"]).reshape(B, S, d)
+    return y, aux.mean()
+
+
+def moe_apply(p, x, cfg, *, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    ep = _EP_CONTEXT.get()
+    if ep is not None and cfg.num_experts % ep["mesh"].shape[ep["axis"]] == 0:
+        return moe_apply_ep(p, x, cfg, ep["mesh"], ep["axis"],
+                            capacity_factor=capacity_factor)
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balance aux loss: E * sum_e f_e * p_e
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -------------------------------------------
+    # small token counts (decode steps, smoke tests) get a drop-free
+    # capacity; large batches use the standard capacity factor.
+    if T * k <= 1024:
+        cap = T * k
+    else:
+        cap = int(max(1, (T * k * capacity_factor) // E))
+    flat_eid = idx.reshape(T * k)  # expert of each slot
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gates.reshape(T * k)
+
+    order = jnp.argsort(flat_eid, stable=True)
+    s_eid = flat_eid[order]
+    s_tok = flat_tok[order]
+    s_gate = flat_gate[order]
+
+    counts = jnp.bincount(flat_eid, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[s_eid]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    eid_c = jnp.where(keep, s_eid, 0)
+
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    buf = buf.at[eid_c, pos_c].add(
+        jnp.where(keep[:, None], xt[s_tok], 0).astype(x.dtype)
+    )
+    buf = _constrain(buf)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    hg = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    out_buf = _constrain(jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * h, p["wo"]))
+
+    # combine in the compute dtype (a f32 gate would promote the whole
+    # (T, d) combine buffer to f32 — 2x the collective bytes)
+    gate_c = jnp.where(keep, s_gate, 0.0).astype(x.dtype)
+    y_slots = out_buf[eid_c, pos_c] * gate_c[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[s_tok].add(y_slots)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xt @ sp["wg"]) * (xt @ sp["wi"])) @ sp["wo"]
+
+    return _constrain_tokens(y.reshape(B, S, d)), aux

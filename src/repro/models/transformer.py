@@ -1,0 +1,343 @@
+"""Model stacks for all assigned architecture families.
+
+All stacks scan over stacked per-layer parameters (compile-time O(1) in
+depth) with ``jax.checkpoint`` on the layer body (activation remat).
+
+Families:
+  dense / vlm  — decoder-only GQA transformer (vlm prepends stubbed
+                 patch embeddings)
+  moe          — interleaved dense/MoE superblocks (moe_every in {1,2})
+  ssm          — Mamba2 (SSD) stack
+  hybrid       — Mamba2 stack + weight-tied shared attention block
+  audio        — whisper-style encoder-decoder (frames stubbed)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, moe as moe_lib
+from repro.models.layers import (
+    attention_block,
+    attention_qkv,
+    apply_rope,
+    chunked_attention,
+    dense_init,
+    init_attention,
+    init_mlp,
+    mlp_block,
+    rms_norm,
+    rope_tables,
+    sinusoidal_embedding,
+    softcap,
+)
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stacked_init(fn: Callable, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ===========================================================================
+# parameter init
+# ===========================================================================
+
+
+def _init_dense_layer(cfg, dtype):
+    def init_one(key):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(k1, cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_activation, dtype),
+        }
+        if cfg.sandwich_norm:
+            p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype)
+            p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype)
+        return p
+
+    return init_one
+
+
+def _init_moe_layer(cfg, dtype):
+    def init_one(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(k1, cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "moe": moe_lib.init_moe(k2, cfg, dtype),
+        }
+
+    return init_one
+
+
+def init_params(cfg, key) -> PyTree:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, PyTree] = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = _stacked_init(_init_dense_layer(cfg, dtype), keys[2], cfg.num_layers)
+    elif fam == "moe":
+        assert cfg.moe_every in (1, 2), "moe_every in {1,2} supported"
+        n_super = cfg.num_layers // cfg.moe_every
+        if cfg.moe_every == 2:
+            params["blocks_dense"] = _stacked_init(_init_dense_layer(cfg, dtype), keys[2], n_super)
+        params["blocks_moe"] = _stacked_init(_init_moe_layer(cfg, dtype), keys[3], n_super)
+    elif fam == "ssm":
+        params["blocks"] = _stacked_init(
+            lambda k: mamba2.init_mamba_block(k, cfg, dtype), keys[2], cfg.num_layers
+        )
+    elif fam == "hybrid":
+        params["blocks"] = _stacked_init(
+            lambda k: mamba2.init_mamba_block(k, cfg, dtype), keys[2], cfg.num_layers
+        )
+        params["shared_attn"] = _init_dense_layer(cfg, dtype)(keys[3])
+    elif fam == "audio":
+        params["encoder"] = _stacked_init(_init_dense_layer(cfg, dtype), keys[2], cfg.num_encoder_layers)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+
+        def init_dec(key):
+            k1, k2, k3 = jax.random.split(key, 3)
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "lnx": jnp.zeros((cfg.d_model,), dtype),
+                "xattn": init_attention(k2, cfg, dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_activation, dtype),
+            }
+
+        params["blocks"] = _stacked_init(init_dec, keys[3], cfg.num_layers)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+
+def _dense_block_apply(p, x, cfg, positions, layer_idx, kv_override=None, causal=True):
+    if cfg.local_global_period:
+        is_local = (layer_idx % cfg.local_global_period) == 0
+    else:
+        is_local = None
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    a = attention_block(
+        p["attn"], h, cfg, positions=positions, is_local=is_local,
+        kv_override=kv_override, causal=causal,
+    )
+    if cfg.sandwich_norm:
+        a = rms_norm(a, p["ln1_post"], cfg.rms_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    m = mlp_block(p["mlp"], h, cfg.mlp_activation)
+    if cfg.sandwich_norm:
+        m = rms_norm(m, p["ln2_post"], cfg.rms_eps)
+    return x + m
+
+
+def _moe_block_apply(p, x, cfg, positions, layer_idx):
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    a = attention_block(p["attn"], h, cfg, positions=positions)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    m, aux = moe_lib.moe_apply(p["moe"], h, cfg)
+    return x + m, aux
+
+
+def _embed_inputs(params, cfg, batch):
+    """Returns (x, positions, label_offset)."""
+    dtype = _dtype(cfg)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.sandwich_norm:  # gemma-style embedding scale
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    offset = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+        offset = batch["patches"].shape[1]
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    return x, positions, offset
+
+
+def forward_hidden(params, cfg, batch):
+    """Returns (hidden (B, S, d), moe_aux_loss scalar)."""
+    fam = cfg.family
+    aux = jnp.float32(0.0)
+    if fam == "audio":
+        return _audio_forward_hidden(params, cfg, batch), aux
+
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+
+    if fam in ("dense", "vlm"):
+        def body(carry, blk):
+            xx = carry
+            p, idx = blk
+            xx = _dense_block_apply(p, xx, cfg, positions, idx)
+            return xx, None
+
+        body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["blocks"], jnp.arange(cfg.num_layers)))
+    elif fam == "moe":
+        n_super = cfg.num_layers // cfg.moe_every
+
+        def body(carry, blk):
+            xx, aux_c = carry
+            idx = blk["idx"]
+            if cfg.moe_every == 2:
+                xx = _dense_block_apply(blk["dense"], xx, cfg, positions, 2 * idx)
+            xx, a = _moe_block_apply(blk["moe"], xx, cfg, positions, idx)
+            return (xx, aux_c + a), None
+
+        xs = {"moe": params["blocks_moe"], "idx": jnp.arange(n_super)}
+        if cfg.moe_every == 2:
+            xs["dense"] = params["blocks_dense"]
+        body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), xs)
+    elif fam == "ssm":
+        def body(carry, blk):
+            xx = carry
+            xx = xx + mamba2.mamba_block(blk, xx, cfg)
+            return xx, None
+
+        body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif fam == "hybrid":
+        # scan over groups of `shared_attn_every` mamba layers, each
+        # followed by the weight-tied shared attention block.
+        shared = params["shared_attn"]
+        k_every = cfg.shared_attn_every
+        assert cfg.num_layers % k_every == 0
+        n_groups = cfg.num_layers // k_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, k_every) + a.shape[1:]), params["blocks"]
+        )
+
+        def group_body(carry, gp):
+            xx = carry
+
+            def inner(c, p):
+                return c + mamba2.mamba_block(p, c, cfg), None
+
+            xx, _ = jax.lax.scan(inner, xx, gp)
+            xx = _dense_block_apply(shared, xx, cfg, positions, 0)
+            return xx, None
+
+        group_body = jax.checkpoint(group_body)
+        x, _ = jax.lax.scan(group_body, x, grouped)
+    else:
+        raise ValueError(fam)
+
+    return rms_norm(x, params["final_norm"], cfg.rms_eps), aux
+
+
+def _audio_forward_hidden(params, cfg, batch):
+    dtype = _dtype(cfg)
+    frames = batch["frames"].astype(dtype)  # (B, F, d) stubbed embeddings
+    B, F, d = frames.shape
+    enc = frames + sinusoidal_embedding(F, d, dtype)[None]
+    enc_pos = jnp.arange(F)
+
+    def enc_body(carry, blk):
+        xx = _dense_block_apply(blk, carry, cfg, enc_pos, 0, causal=False)
+        return xx, None
+
+    enc, _ = jax.lax.scan(jax.checkpoint(enc_body), enc, params["encoder"])
+    enc = rms_norm(enc, params["enc_final_norm"], cfg.rms_eps)
+
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoidal_embedding(S, d, dtype)[None]
+    positions = jnp.arange(S)
+
+    def dec_body(carry, blk):
+        xx = carry
+        xx = _dense_block_apply(blk, xx, cfg, positions, 0)
+        # cross attention
+        h = rms_norm(xx, blk["lnx"], cfg.rms_eps)
+        _, ek, ev = attention_qkv(blk["xattn"], enc, cfg)
+        a = attention_block(
+            blk["xattn"], h, cfg, positions=positions,
+            kv_override=(ek, ev, enc_pos), causal=False,
+        )
+        return xx + a, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(dec_body), x, params["blocks"])
+    return rms_norm(x, params["final_norm"], cfg.rms_eps)
+
+
+# ===========================================================================
+# loss (chunked vocab projection)
+# ===========================================================================
+
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def lm_loss(params, cfg, batch, *, chunk: int = 512):
+    """Mean next-token cross entropy (labels == -1 are masked)."""
+    hidden, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patches" in batch:
+        hidden = hidden[:, batch["patches"].shape[1] :]
+    B, S, d = hidden.shape
+    head = _head_weight(params, cfg)
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+
+    def body(carry, i):
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        l = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        logits = (h @ head).astype(jnp.float32)
+        logits = softcap(logits, cfg.final_logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), jnp.arange(n))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_coef * aux
+    return loss
+
+
+def logits_full(params, cfg, batch):
+    """Full (B, S, V) logits — small models / tests only."""
+    hidden, _ = forward_hidden(params, cfg, batch)
+    if cfg.family == "vlm" and "patches" in batch:
+        hidden = hidden[:, batch["patches"].shape[1] :]
+    logits = (hidden @ _head_weight(params, cfg)).astype(jnp.float32)
+    return softcap(logits, cfg.final_logit_softcap)

@@ -1,0 +1,84 @@
+"""Minimal pure-JAX optimizer substrate (no optax in the container).
+
+Transforms follow the (init, update) convention:
+    opt = sgd(momentum=0.9)
+    opt_state = opt.init(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates, lr)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def _f32(t: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        g = _f32(grads)
+        if momentum == 0.0:
+            return g, state
+        new_state = jax.tree.map(lambda m, gi: momentum * m + (1.0 - momentum) * gi, state, g)
+        return new_state, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.copy, z), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        g = _f32(grads)
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, gi: b1 * m + (1 - b1) * gi, state["mu"], g)
+        nu = jax.tree.map(lambda v, gi: b2 * v + (1 - b2) * gi * gi, state["nu"], g)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v, p: m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            + weight_decay * p.astype(jnp.float32),
+            mu,
+            nu,
+            params,
+        )
+        return upd, {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree, lr) -> PyTree:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype), params, updates
+    )
+
+
+def global_norm(tree: PyTree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree)

@@ -1,0 +1,183 @@
+"""Partition rules: map every parameter / batch / cache leaf to a
+``PartitionSpec`` over the production mesh.
+
+Population placement (DESIGN.md §3): parameters carry a leading
+``n_agents`` axis sharded over ``MeshConfig.population_axes``; within an
+agent, tensor-parallel over ``model_axes`` and (MoE) expert-parallel
+over ``expert_axes``.  Every rule checks divisibility against the mesh
+so reduced smoke configs on 1 device fall back to replication
+automatically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+
+PyTree = Any
+
+# leaf names that shard their LAST dim over model axes
+_LAST_MODEL = {"wq", "wk", "wv", "wi", "wg", "bq", "bk", "bv", "in_proj", "conv_w", "conv_b", "lm_head"}
+# leaf names that shard their FIRST (non-population) dim over model axes
+_FIRST_MODEL = {"wo", "out_proj"}
+# replicated small leaves
+_REPLICATED = {"ln", "ln1", "ln2", "lnx", "ln1_post", "ln2_post", "final_norm",
+               "enc_final_norm", "A_log", "D", "dt_bias", "router"}
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _maybe(axes: Tuple[str, ...], dim: int, mesh: Mesh):
+    """The subset of ``axes`` present on the mesh, if it divides dim.
+
+    Axes absent from the mesh are dropped (e.g. population over
+    ("pod", "data") falls back to ("data",) on the single-pod mesh).
+    """
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    if dim % _axes_size(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return tuple(out)
+
+
+# tree keys whose children carry a leading stacked-layer dimension
+_STACKED_KEYS = {"blocks", "blocks_moe", "blocks_dense", "encoder"}
+
+
+def param_pspec(
+    path,
+    shape: Tuple[int, ...],
+    mcfg: MeshConfig,
+    mesh: Mesh,
+    *,
+    population: bool,
+) -> P:
+    names = _names(path)
+    name = names[-1] if names else ""
+    spec: list = [None] * len(shape)
+    off = 0
+    if population and len(shape) >= 1:
+        spec[0] = _maybe(mcfg.population_axes, shape[0], mesh)
+        off = 1
+    if any(n in _STACKED_KEYS for n in names):
+        off += 1  # stacked-layer dim (replicated; scanned over)
+    body = shape[off:]
+    # expert-stacked MoE weights: routed experts live under "moe" and are
+    # (E, d, ff) / (E, ff, d) after the layer dim; shared experts are 2-D
+    is_expert = "moe" in names and "shared" not in names and len(body) == 3
+
+    def set_last(axes):
+        spec[-1] = _maybe(axes, shape[-1], mesh)
+
+    def set_first(axes):
+        spec[off] = _maybe(axes, shape[off], mesh)
+
+    if name in _REPLICATED or not body:
+        pass
+    elif name == "embed":
+        set_first(mcfg.model_axes)  # vocab-sharded embedding
+    elif name == "norm":  # mamba gated-norm over d_inner
+        set_last(mcfg.model_axes)
+    elif name in _LAST_MODEL:
+        if is_expert:  # (E, d, ff)
+            set_first(mcfg.expert_axes)
+        else:
+            # FSDP: shard the contraction dim over fsdp_axes; XLA
+            # all-gathers per use and reduce-scatters the gradient
+            set_first(mcfg.fsdp_axes)
+        set_last(mcfg.model_axes)
+    elif name in _FIRST_MODEL:
+        if is_expert:  # (E, ff, d)
+            set_first(mcfg.expert_axes)
+            spec[off + 1] = _maybe(mcfg.model_axes, shape[off + 1], mesh)
+        else:
+            set_first(mcfg.model_axes)
+            if mcfg.fsdp_axes:
+                spec[-1] = _maybe(mcfg.fsdp_axes, shape[-1], mesh)
+    return P(*spec)
+
+
+def params_pspecs(params_shapes: PyTree, mcfg: MeshConfig, mesh: Mesh, *, population: bool) -> PyTree:
+    """params_shapes: pytree of ShapeDtypeStruct (e.g. from eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf.shape, mcfg, mesh, population=population),
+        params_shapes,
+    )
+
+
+def batch_pspecs(batch_shapes: PyTree, mcfg: MeshConfig, mesh: Mesh, *, population: bool) -> PyTree:
+    """Training batches: (n_agents, per_batch, ...) leaves."""
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        s: list = [None] * len(shape)
+        if population:
+            s[0] = _maybe(mcfg.population_axes, shape[0], mesh)
+            if len(shape) > 1 and mcfg.batch_axes:
+                s[1] = _maybe(mcfg.batch_axes, shape[1], mesh)
+        else:
+            # inference batches shard over pod+data when available
+            s[0] = _maybe(("pod", "data"), shape[0], mesh)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_pspecs(cache_shapes: PyTree, mcfg: MeshConfig, mesh: Mesh) -> PyTree:
+    """Decode caches.  KV leaves are (L, B, S, n_kv, hd); mamba conv is
+    (L, B, k, C); mamba ssm state is (L, B, nh, hp, ds).
+
+    Batch shards over "data" when divisible; for B == 1 (long-context)
+    the sequence dim shards over "data" instead (flash-decoding style).
+    """
+
+    batch_axes = ("pod", "data")
+
+    def spec(path, leaf):
+        names = _names(path)
+        shape = leaf.shape
+        s: list = [None] * len(shape)
+        is_kv = names[-1].startswith(("k", "v", "ek", "ev")) and len(shape) == 5
+        if is_kv:
+            L, B, S, nkv, hd = shape
+            if B > 1 and _maybe(batch_axes, B, mesh):
+                s[1] = _maybe(batch_axes, B, mesh)
+            elif _maybe(batch_axes, S, mesh):
+                s[2] = _maybe(batch_axes, S, mesh)
+            if _maybe(mcfg.model_axes, nkv, mesh):
+                s[3] = _maybe(mcfg.model_axes, nkv, mesh)
+            elif _maybe(mcfg.model_axes, hd, mesh):
+                s[4] = _maybe(mcfg.model_axes, hd, mesh)
+        elif names and names[-1] == "conv" or (len(shape) == 4 and "mamba" in names):
+            # (L, B, k, C)
+            s[1] = _maybe(batch_axes, shape[1], mesh)
+            s[-1] = _maybe(mcfg.model_axes, shape[-1], mesh)
+        elif len(shape) == 5:  # ssm state (L, B, nh, hp, ds)
+            s[1] = _maybe(batch_axes, shape[1], mesh)
+            s[2] = _maybe(mcfg.model_axes, shape[2], mesh)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def to_shardings(pspecs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

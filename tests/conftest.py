@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real (1-device) CPU platform — the 512-device flag
+# is set ONLY inside repro/launch/dryrun.py (its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

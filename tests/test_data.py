@@ -1,0 +1,61 @@
+"""Data substrate tests."""
+import numpy as np
+
+from repro.data import AgentBatcher, agent_data_splits, brackets, synthetic
+
+
+def test_brackets_labels_correct():
+    toks, labs = brackets.make_dataset(n_samples=64, seq_len=17, seed=0)
+    assert toks.shape == (64, 17)
+    for i in range(64):
+        cls_pos = np.argmax(toks[i] == brackets.CLS)
+        seq = toks[i, :cls_pos]
+        gold = labs[i, cls_pos]
+        assert gold in (brackets.LBL_TRUE, brackets.LBL_FALSE)
+        assert (gold == brackets.LBL_TRUE) == brackets.is_valid(seq)
+        # all other label positions masked
+        assert (labs[i, :cls_pos] == -1).all()
+
+
+def test_brackets_roughly_balanced():
+    toks, labs = brackets.make_dataset(n_samples=512, seq_len=17, seed=1)
+    pos = (labs == brackets.LBL_TRUE).sum()
+    assert 150 < pos < 360
+
+
+def test_agent_splits_cover_data_twice():
+    """Paper: two copies of the data — one split over ZO, one over FO."""
+    shards = agent_data_splits(100, n_zeroth=3, n_first=2, seed=0)
+    assert len(shards) == 5
+    zo_idx = np.concatenate(shards[:3])
+    fo_idx = np.concatenate(shards[3:])
+    assert sorted(zo_idx.tolist()) == list(range(100))
+    assert sorted(fo_idx.tolist()) == list(range(100))
+
+
+def test_agent_batcher_shapes():
+    data = {"x": np.arange(200).reshape(100, 2).astype(np.float32),
+            "y": np.arange(100).astype(np.int32)}
+    b = AgentBatcher(data, n_zeroth=2, n_first=2, batch=8, seed=0)
+    out = b.next_batches()
+    assert out["x"].shape == (4, 8, 2)
+    assert out["y"].shape == (4, 8)
+
+
+def test_prototype_classification_learnable_structure():
+    task = synthetic.PrototypeClassification(d=16, n_classes=4, noise=0.1, seed=0)
+    x, y = task.sample(np.random.default_rng(0), 256)
+    # nearest-prototype classifier should be near-perfect at low noise
+    d2 = ((x[:, None, :] - task.prototypes[None]) ** 2).sum(-1)
+    acc = (d2.argmin(1) == y).mean()
+    assert acc > 0.95
+
+
+def test_lm_stream_is_markov():
+    sample = synthetic.lm_token_stream(vocab=64, seed=0)
+    toks = sample(np.random.default_rng(1), 4, 128)
+    assert toks.shape == (4, 128)
+    assert toks.max() < 64
+    # determinism of the table: same rng seed -> same tokens
+    toks2 = sample(np.random.default_rng(1), 4, 128)
+    np.testing.assert_array_equal(toks, toks2)

@@ -1,0 +1,67 @@
+"""Gossip invariants (load-balancing view of the paper's Lemma 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip
+
+
+def test_matching_is_involution():
+    for seed in range(20):
+        for n in (2, 5, 8, 16, 17):
+            p = np.asarray(gossip.sample_matching(jax.random.PRNGKey(seed), n))
+            assert (p[p] == np.arange(n)).all(), (n, seed)
+
+
+def test_round_robin_all_pairs_meet():
+    n = 8
+    sched = gossip.round_robin_schedule(n)
+    assert sched.shape == (n - 1, n)
+    met = set()
+    for r in range(n - 1):
+        p = sched[r]
+        assert (p[p] == np.arange(n)).all()
+        assert (p != np.arange(n)).all()  # perfect matching, no fixed points
+        for i in range(n):
+            met.add((min(i, p[i]), max(i, p[i])))
+    assert len(met) == n * (n - 1) // 2  # tournament: every pair once
+
+
+def test_mix_pairwise_preserves_mean_and_contracts():
+    key = jax.random.PRNGKey(1)
+    X = {"w": jax.random.normal(key, (16, 7, 3)), "b": jax.random.normal(key, (16,))}
+    partner = gossip.sample_matching(jax.random.PRNGKey(2), 16)
+    Y = gossip.mix_pairwise(X, partner)
+    for k in X:
+        np.testing.assert_allclose(np.asarray(X[k].mean(0)), np.asarray(Y[k].mean(0)), atol=1e-6)
+
+    def gamma(t):
+        return sum(float(((v - v.mean(0, keepdims=True)) ** 2).sum()) for v in t.values())
+
+    assert gamma(Y) <= gamma(X) + 1e-6
+
+
+def test_all_reduce_zeroes_gamma():
+    X = {"w": jax.random.normal(jax.random.PRNGKey(3), (8, 5))}
+    Y = gossip.mix_all_reduce(X)
+    assert float(((Y["w"] - Y["w"].mean(0)) ** 2).sum()) < 1e-10
+    np.testing.assert_allclose(np.asarray(Y["w"][0]), np.asarray(X["w"].mean(0)), atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["dense", "rr_static", "all_reduce", "none"])
+def test_gossip_step_modes(mode):
+    X = {"w": jax.random.normal(jax.random.PRNGKey(4), (8, 5))}
+    Y = gossip.gossip_step(X, mode=mode, key=jax.random.PRNGKey(5), step=3, n=8)
+    assert Y["w"].shape == X["w"].shape
+    np.testing.assert_allclose(np.asarray(Y["w"].mean(0)), np.asarray(X["w"].mean(0)), atol=1e-6)
+
+
+def test_gossip_jit_traceable():
+    @jax.jit
+    def f(X, step):
+        return gossip.gossip_step(X, mode="dense", key=jax.random.PRNGKey(0), step=step, n=8)
+
+    X = {"w": jnp.ones((8, 4))}
+    Y = f(X, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(Y["w"]), 1.0)

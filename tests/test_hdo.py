@@ -1,0 +1,96 @@
+"""HDO end-to-end behaviour: convergence, consensus, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, consensus_distance, init_state, schedules, zo_mask
+
+D = 16
+W_TRUE = jax.random.normal(jax.random.PRNGKey(42), (D,))
+
+
+def loss_fn(params, batch):
+    return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+
+
+def make_batches(key, n_agents, bsz=8):
+    X = jax.random.normal(key, (n_agents, bsz, D))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def run(cfg, steps=150):
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    for t in range(steps):
+        state, m = step(state, make_batches(jax.random.fold_in(jax.random.PRNGKey(9), t), cfg.n_agents))
+    Xe = jax.random.normal(jax.random.PRNGKey(5), (256, D))
+    mu = jax.tree.map(lambda x: x.mean(0), state.params)
+    return float(jnp.mean((Xe @ mu["w"] - Xe @ W_TRUE) ** 2)), state
+
+
+BASE = dict(lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False, nu=1e-3, rv=4)
+
+
+def test_pure_fo_converges():
+    loss, _ = run(HDOConfig(n_agents=4, n_zeroth=0, gossip="dense", **BASE))
+    assert loss < 1e-3
+
+
+def test_hybrid_converges():
+    loss, state = run(HDOConfig(n_agents=8, n_zeroth=6, gossip="dense", **BASE))
+    assert loss < 1e-2
+    assert float(consensus_distance(state.params)) < 1e-3  # consensus (Fig 7)
+
+
+def test_pure_zo_converges():
+    loss, _ = run(HDOConfig(n_agents=8, n_zeroth=8, gossip="dense", **BASE))
+    assert loss < 5e-2
+
+
+def test_fwd_grad_population_converges():
+    loss, _ = run(HDOConfig(n_agents=8, n_zeroth=8, gossip="dense",
+                            estimator_zo="fwd_grad", **BASE))
+    assert loss < 5e-2
+
+
+def test_rr_gossip_equivalent_convergence():
+    loss, _ = run(HDOConfig(n_agents=8, n_zeroth=4, gossip="rr_static", **BASE))
+    assert loss < 1e-2
+
+
+def test_hybrid_beats_mono_zo_same_size():
+    """Paper Figs 2-4: hybrid outperforms the same-size pure-ZO population."""
+    l_hybrid, _ = run(HDOConfig(n_agents=8, n_zeroth=4, gossip="dense", **BASE), steps=100)
+    l_zo, _ = run(HDOConfig(n_agents=8, n_zeroth=8, gossip="dense", **BASE), steps=100)
+    assert l_hybrid < l_zo
+
+
+def test_momentum_runs():
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="dense", lr=0.02, momentum=0.9,
+                    warmup_steps=5, cosine_steps=60, use_cosine=True, nu=1e-3, rv=2)
+    loss, _ = run(cfg, steps=60)
+    assert np.isfinite(loss)
+
+
+def test_zo_mask():
+    cfg = HDOConfig(n_agents=6, n_zeroth=2)
+    m = np.asarray(zo_mask(cfg))
+    assert m.tolist() == [True, True, False, False, False, False]
+
+
+def test_warmup_cosine_schedule():
+    s = schedules.warmup_cosine(0.1, warmup_steps=10, cosine_steps=100)
+    assert float(s(0)) == pytest.approx(0.01)
+    assert float(s(9)) == pytest.approx(0.1)
+    assert float(s(100)) == pytest.approx(0.0, abs=1e-6)
+    vals = [float(s(t)) for t in range(0, 100, 5)]
+    assert max(vals) <= 0.1 * (1 + 1e-5) and min(vals) >= 0.0
+
+
+def test_state_is_pytree():
+    cfg = HDOConfig(n_agents=3, n_zeroth=1)
+    state = init_state({"w": jnp.zeros((4,))}, cfg)
+    leaves = jax.tree.leaves(state)
+    assert any(l.shape == (3, 4) for l in leaves)

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (REQUIRED): reduced variant of each of
+the 10 assigned architectures runs one forward + one train step on CPU,
+asserting output shapes and no NaNs.  Plus decode-vs-forward parity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, init_state
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def smoke_batch(cfg, B=2, S=32):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(KEY, (B, cfg.num_patches, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = dataclasses.replace(get_smoke_config(request.param), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    cfg, model, params = arch_setup
+    B, S = 2, 32
+    batch = smoke_batch(cfg, B, S)
+    logits = model.logits(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_step_no_nans(arch_setup):
+    """One HDO train step (2 agents: 1 FO + 1 ZO) on the reduced arch."""
+    cfg, model, params = arch_setup
+    hcfg = HDOConfig(n_agents=2, n_zeroth=1, rv=1, estimator_zo="fwd_grad",
+                     gossip="dense", lr=0.01, momentum=0.9, warmup_steps=0,
+                     use_cosine=False)
+    step = jax.jit(build_hdo_step(model.loss, hcfg))
+    state = init_state(params, hcfg)
+    batch = smoke_batch(cfg)
+    batches = jax.tree.map(lambda x: jnp.stack([x, x]), batch)
+    state, metrics = step(state, batches)
+    assert np.isfinite(float(metrics["loss_mean"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_decode_matches_forward(arch_setup):
+    cfg, model, params = arch_setup
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family in ("vlm", "audio"):
+        pytest.skip("parity test covers pure text decoders; vlm/audio via dryrun")
+    full = model.logits(params, batch)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.serve_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=1e-3)
+
+
+def test_audio_decode_runs():
+    cfg = dataclasses.replace(get_smoke_config("whisper-base"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(2, 16)
+    logits, cache = jax.jit(model.serve_step)(params, cache, jnp.zeros((2,), jnp.int32), jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_vlm_decode_runs():
+    cfg = dataclasses.replace(get_smoke_config("pixtral-12b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(2, 16)
+    logits, cache = jax.jit(model.serve_step)(params, cache, jnp.zeros((2,), jnp.int32), jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_gemma2_softcap_bounds_attention_logits():
+    """Behavioural check: logits stay finite with adversarial scale."""
+    cfg = dataclasses.replace(get_smoke_config("gemma2-9b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    params = jax.tree.map(lambda x: x * 10.0 if x.ndim >= 2 else x, params)
+    logits = model.logits(params, smoke_batch(cfg))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_masked_labels_ignored_in_loss():
+    cfg = dataclasses.replace(get_smoke_config("qwen1.5-0.5b"), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = smoke_batch(cfg)
+    l_full = float(model.loss(params, batch))
+    labels = batch["labels"].at[:, ::2].set(-1)
+    l_masked = float(model.loss(params, {**batch, "labels": labels}))
+    assert np.isfinite(l_masked) and abs(l_masked - l_full) > 0  # different subset

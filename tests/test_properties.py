@@ -1,0 +1,116 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gossip
+from repro.core.schedules import warmup_cosine
+from repro.kernels.rng import counter_normal
+from repro.launch.hlo_analysis import HloCostModel, _shape_elems_bytes
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    n=st.sampled_from([2, 4, 6, 8, 16]),
+    seed=st.integers(0, 2**16),
+    shape=st.sampled_from([(3,), (4, 5), (2, 3, 2)]),
+)
+def test_gossip_preserves_mean_and_contracts_gamma(n, seed, shape):
+    key = jax.random.PRNGKey(seed)
+    X = {"w": jax.random.normal(key, (n,) + shape)}
+    partner = gossip.sample_matching(jax.random.fold_in(key, 1), n)
+    Y = gossip.mix_pairwise(X, partner)
+    np.testing.assert_allclose(np.asarray(Y["w"].mean(0)), np.asarray(X["w"].mean(0)),
+                               atol=1e-5)
+
+    def gamma(t):
+        v = t["w"]
+        return float(((v - v.mean(0, keepdims=True)) ** 2).sum())
+
+    assert gamma(Y) <= gamma(X) + 1e-5
+
+
+@given(n=st.sampled_from([2, 4, 8, 12, 16, 32]))
+def test_round_robin_is_tournament(n):
+    sched = gossip.round_robin_schedule(n)
+    met = set()
+    for r in range(n - 1):
+        p = sched[r]
+        assert (p[p] == np.arange(n)).all()
+        assert (p != np.arange(n)).all()
+        met |= {(min(i, int(p[i])), max(i, int(p[i]))) for i in range(n)}
+    assert len(met) == n * (n - 1) // 2
+
+
+@given(
+    lr=st.floats(1e-4, 1.0),
+    warm=st.integers(0, 50),
+    total=st.integers(51, 500),
+    t=st.integers(0, 600),
+)
+def test_schedule_bounded(lr, warm, total, t):
+    s = warmup_cosine(lr, warm, total)
+    v = float(s(t))
+    assert 0.0 <= v <= lr * (1 + 1e-6)
+
+
+@given(seed=st.integers(0, 2**20), r=st.integers(0, 255))
+def test_counter_normal_deterministic(seed, r):
+    idx = jnp.arange(256, dtype=jnp.uint32)
+    a = counter_normal(jnp.uint32(seed), idx, jnp.uint32(r))
+    b = counter_normal(jnp.uint32(seed), idx, jnp.uint32(r))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert bool(jnp.all(jnp.isfinite(a)))
+
+
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+    dtype=st.sampled_from(["f32", "bf16", "s32", "pred"]),
+)
+def test_shape_parser(dims, dtype):
+    s = f"{dtype}[{','.join(map(str, dims))}]{{0}}"
+    elems, byts = _shape_elems_bytes(s)
+    exp = int(np.prod(dims)) if dims else 1
+    assert elems == exp
+    sizes = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}
+    assert byts == exp * sizes[dtype]
+
+
+@given(trip=st.integers(1, 100), m=st.integers(1, 32), k=st.integers(1, 32))
+def test_hlo_cost_model_while_scaling(trip, m, k):
+    """Synthetic HLO: while(trip) around one dot -> flops = trip * dot."""
+    hlo = f"""
+HloModule synthetic
+
+%body (p: (s32[], f32[{m},{k}])) -> (s32[], f32[{m},{k}]) {{
+  %p = (s32[], f32[{m},{k}]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[{m},{k}] get-tuple-element(%p), index=1
+  %w = f32[{k},{k}] constant(0)
+  %d = f32[{m},{k}] dot(%g1, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  ROOT %t = (s32[], f32[{m},{k}]) tuple(%g0, %d)
+}}
+
+%cond (p: (s32[], f32[{m},{k}])) -> pred[] {{
+  %p = (s32[], f32[{m},{k}]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant({trip})
+  ROOT %lt = pred[] compare(%g0, %c), direction=LT
+}}
+
+ENTRY %main (x: f32[{m},{k}]) -> f32[{m},{k}] {{
+  %x = f32[{m},{k}] parameter(0)
+  %i = s32[] constant(0)
+  %t0 = (s32[], f32[{m},{k}]) tuple(%i, %x)
+  %w0 = (s32[], f32[{m},{k}]) while(%t0), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trip}"}}}}
+  ROOT %out = f32[{m},{k}] get-tuple-element(%w0), index=1
+}}
+"""
+    model = HloCostModel(hlo)
+    cost = model.entry_cost()
+    expected_dot = 2 * m * k * k
+    assert cost.flops >= trip * expected_dot
+    assert cost.flops <= trip * (expected_dot + m * k + 8) + 8
