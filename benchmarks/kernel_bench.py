@@ -1,6 +1,14 @@
 """Kernel microbenchmarks: wall time of the jitted Pallas wrappers
 (interpret mode on CPU — structural check; real perf is a TPU artifact)
 and of their jnp oracles, printed as ``name,us_per_call,derived``.
+
+The ``estimator_*`` section compares a full ZO gradient estimate via
+the tree-pytree path (``estimators.zo_estimate``: every Gaussian u_r
+materialized) against the fused flat engine (``flatzo``: u_r
+regenerated in VMEM) at d >= 1e6 — the ``derived`` column carries the
+analytic HBM traffic of the Gaussian draws alone, which is O(rv*d)
+for tree and 0 for fused (the candidate evals' traffic is common to
+both paths).
 """
 from __future__ import annotations
 
@@ -10,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line
+from repro.core import estimators, flatzo
 from repro.kernels import ops, ref
 
 
@@ -34,6 +43,10 @@ def main() -> None:
     us_r = _time(lambda: jax.jit(lambda v: ref.zo_perturb_ref(v, 7, 1, 1e-3))(x))
     print(csv_line("kernel_zo_perturb_interp", us_k, f"ref_us={us_r:.1f}"))
 
+    us_k = _time(lambda: ops.zo_perturb_batch(x, 7, 4, 1e-3))
+    us_r = _time(lambda: jax.jit(lambda v: ref.zo_perturb_batch_ref(v, 7, 4, 1e-3))(x))
+    print(csv_line("kernel_zo_perturb_batch_rv4_interp", us_k, f"ref_us={us_r:.1f}"))
+
     y = jax.random.normal(jax.random.PRNGKey(2), (d,))
     us_k = _time(lambda: ops.gossip_avg(x, y))
     us_r = _time(lambda: jax.jit(ref.gossip_avg_ref)(x, y))
@@ -49,6 +62,41 @@ def main() -> None:
     us_k = _time(lambda: ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=128), n=2)
     us_r = _time(lambda: jax.jit(ref.ssd_scan_ref)(xs, dt, A, Bm, Cm), n=2)
     print(csv_line("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.1f}"))
+
+    estimator_bench()
+
+
+def estimator_bench(d: int = 1 << 20):
+    """Full ZO estimate, tree vs fused, at d >= 1e6.
+
+    ``noise_mb`` is the analytic HBM footprint of the Gaussian draws:
+    the tree path materializes rv f32 vectors per estimate
+    (rv * d * 4 bytes); the fused path regenerates them in VMEM and
+    writes none, whatever rv is.
+    """
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (d,)) * 0.01}
+    target = jax.random.normal(jax.random.PRNGKey(5), (d,)) * 0.01
+
+    def loss_fn(p):
+        r = p["w"] - target
+        return jnp.dot(r, r) / d
+
+    for rv in (2, 8):
+        tree = jax.jit(
+            lambda k: estimators.zo_estimate(loss_fn, params, k, kind="multi_rv",
+                                             rv=rv, nu=1e-3)[1]
+        )
+        fused = jax.jit(
+            lambda k: flatzo.flat_zo_estimate(loss_fn, params, k, kind="multi_rv",
+                                              rv=rv, nu=1e-3)[1]
+        )
+        key = jax.random.PRNGKey(0)
+        us_t = _time(lambda: tree(key), n=2)
+        us_f = _time(lambda: fused(key), n=2)
+        noise_tree_mb = rv * d * 4 / 1e6
+        print(csv_line(f"estimator_tree_d{d}_rv{rv}", us_t,
+                       f"noise_mb={noise_tree_mb:.1f}"))
+        print(csv_line(f"estimator_fused_d{d}_rv{rv}", us_f, "noise_mb=0.0"))
 
 
 if __name__ == "__main__":

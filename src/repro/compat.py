@@ -1,0 +1,101 @@
+"""JAX version compatibility shims.
+
+The repo pins no single JAX release: the container ships 0.4.37 while
+the shard_map / AbstractMesh APIs kept moving upstream.  Policy: every
+call site that touches a moved or re-signatured JAX API goes through
+this module, never through ``jax.<attr>`` directly, so a version bump
+is a one-file change.
+
+Shimmed surfaces:
+  * ``shard_map``     — ``jax.shard_map`` (>= 0.6) vs
+                        ``jax.experimental.shard_map.shard_map`` (0.4.x),
+                        reconciling ``axis_names=`` / ``check_vma=``
+                        (new) with ``check_rep=`` (old).
+  * ``abstract_mesh`` — ``AbstractMesh(shape_tuple)`` (0.4.37) vs
+                        ``AbstractMesh(shape, names)`` (newer).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional, Set
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh", "replicate_operand"]
+
+
+def _resolve_shard_map() -> Callable:
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn  # JAX <= 0.5
+
+    return fn
+
+
+_SHARD_MAP = _resolve_shard_map()
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_SHARD_MAP).parameters)
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[Set[str]] = None,
+    check_vma: bool = False,
+) -> Callable:
+    """Portable ``shard_map`` with the modern keyword surface.
+
+    ``axis_names`` (partial manual sharding) and ``check_vma`` (varying
+    manual-axes check) are forwarded when the installed JAX understands
+    them; on 0.4.x ``check_vma`` maps onto the old ``check_rep`` flag
+    and partial ``axis_names`` degrades to full-manual over the whole
+    mesh — specs that omit an axis replicate over it, so the region is
+    computed once per shard of the unmentioned axes (numerically
+    identical; the 0.4.x ``auto=`` path aborts XLA:CPU's partitioner).
+    """
+    kwargs: dict[str, Any] = {
+        "mesh": mesh,
+        "in_specs": in_specs,
+        "out_specs": out_specs,
+    }
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None and "axis_names" in _SHARD_MAP_PARAMS:
+        kwargs["axis_names"] = set(axis_names)
+    return _SHARD_MAP(f, **kwargs)
+
+
+def replicate_operand(x, mesh):
+    """Pin a shard_map operand to fully-replicated layout.
+
+    On JAX 0.4.x with ``jax_threefry_partitionable=False`` (the
+    default), a threefry-derived array (``jax.random.split`` /
+    ``fold_in`` of a traced key) that feeds a shard_map gets its
+    *producer* partitioned by XLA — and the non-partitionable threefry
+    lowering is not offset-invariant, so every shard computes wrong key
+    bits.  Constraining the operand replicated forces the producer to
+    run whole on each device.  Apply this to RNG-derived operands only:
+    it is an all-gather for anything actually sharded.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sharding = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(lambda v: jax.lax.with_sharding_constraint(v, sharding), x)
+
+
+def abstract_mesh(shape, names):
+    """``jax.sharding.AbstractMesh`` across the signature change.
+
+    0.4.37 takes a single ``shape_tuple`` of ``(name, size)`` pairs;
+    newer releases take ``(axis_sizes, axis_names)``.
+    """
+    cls = jax.sharding.AbstractMesh
+    params = list(inspect.signature(cls.__init__).parameters)
+    if len(params) > 1 and params[1] == "shape_tuple":
+        return cls(tuple(zip(names, shape)))
+    return cls(tuple(shape), tuple(names))

@@ -187,7 +187,20 @@ class HDOConfig:
     rv: int = 4  # random vectors per ZO estimate
     nu: float = 1e-4  # smoothing radius (paper: nu = eta / sqrt(d))
     nu_from_lr: bool = False  # if True use nu = lr / sqrt(d) per Theorem 1
-    gossip: str = "dense"  # dense | rr_ppermute | all_reduce | none
+    # ZO estimator implementation:
+    #   "tree"  — pytree estimators (tree_normal materializes each
+    #             Gaussian u_r: O(rv*d) extra HBM traffic per estimate);
+    #   "fused" — flat-parameter engine over the counter-RNG Pallas
+    #             kernels: u_r regenerated in VMEM, so the Gaussian
+    #             materialization cost drops to zero and only the
+    #             candidate evals' own traffic remains (core/flatzo.py).
+    #             ``fwd_grad`` has no fused form, falls back to "tree".
+    zo_impl: str = "tree"
+    # gossip topology: dense | rr_static | rr_ppermute | all_reduce | none
+    # ("rr_static" = trace-time round-robin tournament, the CPU/single-
+    #  host derandomization; "rr_ppermute" = its shard_map/ppermute
+    #  lowering, needs mesh + one agent per population shard)
+    gossip: str = "dense"
     lr: float = 0.01
     momentum: float = 0.9
     warmup_steps: int = 50

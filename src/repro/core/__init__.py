@@ -1,5 +1,6 @@
 """HDO core — the paper's contribution as a composable JAX module."""
 from repro.core.estimators import fo_estimate, tree_normal, zo_estimate
+from repro.core.flatzo import flat_zo_estimate
 from repro.core.gossip import (
     gossip_step,
     mix_all_reduce,
@@ -20,6 +21,7 @@ from repro.core.schedules import constant, warmup_cosine
 __all__ = [
     "fo_estimate",
     "zo_estimate",
+    "flat_zo_estimate",
     "tree_normal",
     "gossip_step",
     "mix_all_reduce",

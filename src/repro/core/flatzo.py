@@ -1,0 +1,90 @@
+"""Flat-parameter fused zeroth-order engine (``HDOConfig.zo_impl="fused"``).
+
+The tree-pytree estimators in ``core/estimators.py`` materialize a full
+Gaussian pytree u_r per draw (``tree_normal``), so one ZO estimate moves
+O(rv * d) floats through HBM.  This engine ravels the agent's params
+once (``jax.flatten_util.ravel_pytree``), then
+
+  1. builds each perturbed candidate with the ``zo_perturb`` Pallas
+     kernel — the Gaussian u_r is regenerated from the counter RNG
+     inside VMEM tiles and never stored,
+  2. evaluates the loss on the unraveled candidate,
+  3. assembles g = (1/rv) sum_r c_r u_r with the ``zo_combine`` kernel
+     (written directly in the params' dtype), again regenerating every
+     u_r on the fly.
+
+This removes the O(rv * d) Gaussian materialization entirely: the only
+HBM traffic left is the candidate evals themselves (one x read + one
+candidate write per function evaluation, which any multi-point scheme
+pays) plus a single O(d) write of g — the noise term the tree path
+adds on top drops to zero.
+
+The counter RNG draws differ from ``jax.random.normal``, so the fused
+path is distribution-equivalent (same estimator, same statistics) but
+not bit-equal to the tree path; parity is asserted on converged
+solutions (see tests/test_perf_variants.py).
+
+``fwd_grad`` needs a materialized tangent for ``jax.jvp`` and is not
+fused; callers fall back to the tree implementation for it.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.kernels import ops
+
+PyTree = Any
+LossFn = Callable[[PyTree], jnp.ndarray]  # params -> scalar loss
+
+# estimator kinds the fused engine implements (fwd_grad excluded)
+FUSED_KINDS = ("biased_1pt", "biased_2pt", "multi_rv")
+
+
+def seed_from_key(key) -> jnp.ndarray:
+    """Non-negative int32 kernel seed derived from a PRNG key (vmap-safe)."""
+    return (jax.random.bits(key, dtype=jnp.uint32) >> 1).astype(jnp.int32)
+
+
+def flat_zo_estimate(
+    loss_fn: LossFn,
+    params: PyTree,
+    key,
+    *,
+    kind: str = "multi_rv",
+    rv: int = 4,
+    nu: float = 1e-4,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Fused zeroth-order estimate: (loss_at_x, grad_estimate).
+
+    Drop-in for ``estimators.zo_estimate`` on the finite-difference
+    kinds; ``key`` seeds the counter RNG instead of ``jax.random``.
+    """
+    if kind not in FUSED_KINDS:
+        raise ValueError(f"fused ZO engine supports {FUSED_KINDS}, got {kind!r}")
+    flat, unravel = ravel_pytree(params)
+    d = flat.shape[0]
+    seed = seed_from_key(key)
+    nu = jnp.asarray(nu, jnp.float32)
+    two_point = kind in ("biased_2pt", "multi_rv")
+    n_draws = rv if kind == "multi_rv" else 1
+
+    loss0 = loss_fn(params)
+    flat_loss = lambda v: loss_fn(unravel(v))
+
+    def coeff(_, r):
+        lp = flat_loss(ops.zo_perturb(flat, seed, r, nu, interpret=interpret))
+        if two_point:
+            lm = flat_loss(ops.zo_perturb(flat, seed, r, -nu, interpret=interpret))
+            c = (lp - lm) / (2.0 * nu)
+        else:
+            c = (lp - loss0) / nu
+        return None, c.astype(jnp.float32)
+
+    _, coeffs = jax.lax.scan(coeff, None, jnp.arange(n_draws))
+    g_flat = ops.zo_combine(coeffs, seed, d, out_dtype=flat.dtype, interpret=interpret)
+    return loss0, unravel(g_flat)

@@ -19,8 +19,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import HDOConfig
-from repro.core import estimators, gossip, schedules
+from repro.core import estimators, flatzo, gossip, schedules
 
 PyTree = Any
 
@@ -93,7 +94,20 @@ def build_hdo_step(
     def per_agent_fo(params_i, batch_i):
         return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
 
+    if cfg.zo_impl not in ("tree", "fused"):
+        raise ValueError(f"unknown zo_impl {cfg.zo_impl!r}")
+    use_fused = cfg.zo_impl == "fused" and cfg.estimator_zo in flatzo.FUSED_KINDS
+
     def per_agent_zo(params_i, batch_i, key_i, nu):
+        if use_fused:
+            return flatzo.flat_zo_estimate(
+                lambda p: loss_fn(p, batch_i),
+                params_i,
+                key_i,
+                kind=cfg.estimator_zo,
+                rv=cfg.rv,
+                nu=nu,
+            )
         return estimators.zo_estimate(
             lambda p: loss_fn(p, batch_i),
             params_i,
@@ -158,7 +172,11 @@ def build_hdo_step(
                 return jax.lax.cond(is_zo_shard, zo_branch, fo_branch, None)
 
             pspec = P(pop_axes if len(pop_axes) > 1 else pop_axes[0])
-            losses, g = jax.shard_map(
+            # keys are threefry-derived from the traced step counter;
+            # without this pin XLA partitions the key computation and
+            # the 0.4.x lowering produces wrong bits (see compat)
+            agent_keys = compat.replicate_operand(agent_keys, mesh)
+            losses, g = compat.shard_map(
                 shard_fn,
                 mesh=mesh,
                 in_specs=(pspec, pspec, pspec, P()),
@@ -258,7 +276,7 @@ def build_hdo_step(
                 )
 
             pspec = P(axis)
-            new_params = jax.shard_map(
+            new_params = compat.shard_map(
                 gossip_shard,
                 mesh=mesh,
                 in_specs=(pspec, P()),

@@ -30,11 +30,11 @@ def _pad_to_block(x):
     return x, d
 
 
-@partial(jax.jit, static_argnames=("d", "interpret"))
-def zo_combine(coeffs, seed, d: int, interpret: bool | None = None):
+@partial(jax.jit, static_argnames=("d", "out_dtype", "interpret"))
+def zo_combine(coeffs, seed, d: int, out_dtype=jnp.float32, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
     dp = d + ((-d) % BLOCK)
-    out = _zo.zo_combine(coeffs, seed, dp, interpret=interpret)
+    out = _zo.zo_combine(coeffs, seed, dp, out_dtype=out_dtype, interpret=interpret)
     return out[:d]
 
 
@@ -43,6 +43,14 @@ def zo_perturb(x, seed, r, nu, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
     xp, d = _pad_to_block(x)
     return _zo.zo_perturb(xp, seed, r, nu, interpret=interpret)[:d]
+
+
+@partial(jax.jit, static_argnames=("rv", "out_dtype", "interpret"))
+def zo_perturb_batch(x, seed, rv: int, nu, out_dtype=None, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    xp, d = _pad_to_block(x)
+    return _zo.zo_perturb_batch(xp, seed, rv, nu, out_dtype=out_dtype,
+                                interpret=interpret)[:, :d]
 
 
 @partial(jax.jit, static_argnames=("interpret",))

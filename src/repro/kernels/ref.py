@@ -32,6 +32,18 @@ def zo_perturb_ref(x, seed, r: int, nu: float):
     return (x.astype(jnp.float32) + nu * u).astype(x.dtype)
 
 
+def zo_perturb_batch_ref(x, seed, rv: int, nu: float):
+    """(rv, d) stacked candidates x + nu * u_r."""
+    d = x.shape[0]
+    idx = jnp.arange(d, dtype=jnp.uint32)
+
+    def row(r):
+        u = counter_normal(jnp.uint32(seed), idx, r.astype(jnp.uint32))
+        return (x.astype(jnp.float32) + nu * u).astype(x.dtype)
+
+    return jax.vmap(row)(jnp.arange(rv))
+
+
 def gossip_avg_ref(x, y):
     return ((x.astype(jnp.float32) + y.astype(jnp.float32)) * 0.5).astype(x.dtype)
 

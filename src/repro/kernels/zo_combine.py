@@ -35,11 +35,15 @@ def _zo_combine_body(coeffs_ref, meta_ref, o_ref, *, rv: int, block: int):
     for r in range(rv):
         u = counter_normal(seed, base, jnp.uint32(r))
         acc = acc + coeffs_ref[r] * u
-    o_ref[...] = acc / rv
+    o_ref[...] = (acc / rv).astype(o_ref.dtype)
 
 
-def zo_combine(coeffs, seed, d: int, *, interpret: bool = False):
-    """coeffs: (rv,) f32; seed: int32 scalar/array -> (d,) f32."""
+def zo_combine(coeffs, seed, d: int, *, out_dtype=jnp.float32, interpret: bool = False):
+    """coeffs: (rv,) f32; seed: int32 scalar/array -> (d,) ``out_dtype``.
+
+    Accumulation is always f32 in VMEM; ``out_dtype=bfloat16`` halves
+    the single HBM write of the estimate (the only O(d) traffic here).
+    """
     rv = int(coeffs.shape[0])
     assert d % BLOCK == 0, d
     meta = jnp.asarray(seed, jnp.int32).reshape(1)
@@ -51,7 +55,7 @@ def zo_combine(coeffs, seed, d: int, *, interpret: bool = False):
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((d,), out_dtype),
         interpret=interpret,
     )(coeffs.astype(jnp.float32), meta)
 
@@ -81,5 +85,41 @@ def zo_perturb(x, seed, r, nu, *, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=interpret,
+    )(x, meta, nu_arr)
+
+
+def _zo_perturb_batch_body(x_ref, meta_ref, nu_ref, o_ref, *, rv: int, block: int):
+    pid = pl.program_id(0)
+    base = (pid * block + jax.lax.iota(jnp.int32, block)).astype(jnp.uint32)
+    seed = meta_ref[0].astype(jnp.uint32)
+    xv = x_ref[...].astype(jnp.float32)
+    for r in range(rv):
+        u = counter_normal(seed, base, jnp.uint32(r))
+        o_ref[r, :] = (xv + nu_ref[0] * u).astype(o_ref.dtype)
+
+
+def zo_perturb_batch(x, seed, rv: int, nu, *, out_dtype=None, interpret: bool = False):
+    """x: (d,) -> (rv, d) candidates x + nu * u_r, one HBM read of x.
+
+    All rv rows are produced from a single pass over x (the sequential
+    ``zo_perturb`` re-reads x once per draw), so candidate generation
+    reads O(d) instead of O(rv*d).
+    """
+    d = x.shape[0]
+    assert d % BLOCK == 0, d
+    out_dtype = x.dtype if out_dtype is None else out_dtype
+    meta = jnp.asarray(seed, jnp.int32).reshape(1)
+    nu_arr = jnp.asarray(nu, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_zo_perturb_batch_body, rv=rv, block=BLOCK),
+        grid=(d // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rv, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rv, d), out_dtype),
         interpret=interpret,
     )(x, meta, nu_arr)

@@ -35,6 +35,9 @@ def main() -> None:
     ap.add_argument("--zo", type=int, default=4)
     ap.add_argument("--estimator", default="multi_rv",
                     choices=["biased_1pt", "biased_2pt", "multi_rv", "fwd_grad"])
+    ap.add_argument("--zo-impl", default="tree", choices=["tree", "fused"],
+                    help="ZO engine: pytree estimators vs the flat-parameter "
+                         "fused Pallas path (O(d) HBM traffic per estimate)")
     ap.add_argument("--rv", type=int, default=4)
     ap.add_argument("--gossip", default="dense",
                     choices=["dense", "rr_static", "all_reduce", "none"])
@@ -52,6 +55,7 @@ def main() -> None:
         n_agents=args.agents,
         n_zeroth=args.zo,
         estimator_zo=args.estimator,
+        zo_impl=args.zo_impl,
         rv=args.rv,
         gossip=args.gossip,
         lr=args.lr,
@@ -90,7 +94,7 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"# arch={cfg.name} params={n_params/1e6:.2f}M agents={args.agents} "
-          f"(zo={args.zo}) estimator={args.estimator} gossip={args.gossip}")
+          f"(zo={args.zo}) estimator={args.estimator}/{args.zo_impl} gossip={args.gossip}")
 
     step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params))
     state = init_state(params, hcfg)

@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import dense_init
 
 # Beyond-paper perf knob (EXPERIMENTS.md §Perf): an explicit sharding
@@ -170,7 +171,7 @@ def moe_apply_ep(p, x, cfg, mesh, data_axis: str = "data", *, capacity_factor: f
         "wo": P(data_axis, None, None),
     }
     p_routed = {k: v for k, v in p.items() if k in p_specs}
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(p_specs, P(data_axis)),

@@ -61,10 +61,24 @@ def test_rr_gossip_equivalent_convergence():
 
 
 def test_hybrid_beats_mono_zo_same_size():
-    """Paper Figs 2-4: hybrid outperforms the same-size pure-ZO population."""
-    l_hybrid, _ = run(HDOConfig(n_agents=8, n_zeroth=4, gossip="dense", **BASE), steps=100)
-    l_zo, _ = run(HDOConfig(n_agents=8, n_zeroth=8, gossip="dense", **BASE), steps=100)
-    assert l_hybrid < l_zo
+    """Paper Figs 2-4: hybrid outperforms the same-size pure-ZO population.
+
+    Compared mid-descent (50 steps, rv=1) where the populations are
+    well separated — at 100 steps with rv=4 both have converged to the
+    ~1e-8 float noise floor and the comparison is a coin flip — and on
+    the median over 3 ZO-perturbation seeds.
+    """
+    mid = dict(BASE, rv=1)
+
+    def median_loss(n_zeroth):
+        losses = [
+            run(HDOConfig(n_agents=8, n_zeroth=n_zeroth, gossip="dense", seed=s, **mid),
+                steps=50)[0]
+            for s in range(3)
+        ]
+        return sorted(losses)[1]
+
+    assert median_loss(4) < median_loss(8)
 
 
 def test_momentum_runs():

@@ -29,6 +29,39 @@ def test_zo_perturb_sweep(d, dtype):
     )
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d", [8192, 10000])
+@pytest.mark.parametrize("rv", [1, 3])
+def test_zo_perturb_batch_sweep(d, rv, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,), dtype)
+    out = ops.zo_perturb_batch(x, 5, rv, 1e-3)
+    exp = ref.zo_perturb_batch_ref(x, 5, rv, 1e-3)
+    assert out.shape == (rv, d) and out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=1e-5
+    )
+
+
+def test_zo_perturb_batch_rows_match_sequential():
+    """Row r of the batched kernel == the sequential zo_perturb at r."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (8192,))
+    batch = ops.zo_perturb_batch(x, 9, 4, 1e-2)
+    for r in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(batch[r]), np.asarray(ops.zo_perturb(x, 9, r, 1e-2))
+        )
+
+
+def test_zo_combine_bf16_out():
+    coeffs = jax.random.normal(jax.random.PRNGKey(2), (4,))
+    out = ops.zo_combine(coeffs, 11, 8192, out_dtype=jnp.bfloat16)
+    exp = ref.zo_combine_ref(coeffs, 11, 8192)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp), atol=0.05, rtol=0.05
+    )
+
+
 def test_zo_perturb_distinct_r_distinct_noise():
     x = jnp.zeros((8192,))
     a = ops.zo_perturb(x, 5, 0, 1.0)

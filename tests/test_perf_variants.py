@@ -10,6 +10,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.base import HDOConfig
@@ -36,6 +37,31 @@ def _run_quadratic(cfg, steps=80):
 def test_split_dispatch_matches_select():
     base = dict(n_agents=6, n_zeroth=4, gossip="rr_static", lr=0.05,
                 momentum=0.9, warmup_steps=0, use_cosine=False, rv=2, nu=1e-3)
+    w_sel = _run_quadratic(HDOConfig(dispatch="select", **base))
+    w_spl = _run_quadratic(HDOConfig(dispatch="split", **base))
+    np.testing.assert_allclose(np.asarray(w_sel), np.asarray(w_spl), atol=1e-5)
+
+
+def test_fused_zo_matches_tree_converged():
+    """zo_impl="fused" reaches the tree path's converged solution.
+
+    The counter-RNG draws differ from jax.random, so trajectories are
+    not bit-equal; on the quadratic both settle onto w_true to float
+    eps, which is where parity is asserted (same tolerance as the
+    dispatch-parity tests above).
+    """
+    base = dict(n_agents=6, n_zeroth=4, gossip="rr_static", lr=0.05,
+                momentum=0.0, warmup_steps=0, use_cosine=False, rv=2, nu=1e-3)
+    w_tree = _run_quadratic(HDOConfig(zo_impl="tree", **base), steps=300)
+    w_fused = _run_quadratic(HDOConfig(zo_impl="fused", **base), steps=300)
+    np.testing.assert_allclose(np.asarray(w_tree), np.asarray(w_fused), atol=1e-5)
+
+
+def test_fused_split_dispatch_matches_select():
+    """The fused engine is dispatch-invariant (same seeds -> same draws)."""
+    base = dict(n_agents=6, n_zeroth=4, gossip="rr_static", lr=0.05,
+                momentum=0.9, warmup_steps=0, use_cosine=False, rv=2, nu=1e-3,
+                zo_impl="fused")
     w_sel = _run_quadratic(HDOConfig(dispatch="select", **base))
     w_spl = _run_quadratic(HDOConfig(dispatch="split", **base))
     np.testing.assert_allclose(np.asarray(w_sel), np.asarray(w_spl), atol=1e-5)
@@ -72,6 +98,7 @@ def test_ring_cache_matches_full_cache():
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_moe_ep_parity_subprocess():
     """Expert-parallel shard_map MoE == reference (needs 8 devices)."""
     script = textwrap.dedent("""
@@ -88,8 +115,11 @@ def test_moe_ep_parity_subprocess():
         y0, a0 = jax.jit(lambda p, x: moe_lib.moe_apply(p, x, cfg, capacity_factor=cf))(p, x)
         moe_lib.set_ep_context(mesh, "data")
         y1, a1 = jax.jit(lambda p, x: moe_lib.moe_apply(p, x, cfg, capacity_factor=cf))(p, x)
-        assert float(jnp.max(jnp.abs(y0 - y1))) < 1e-5, "y mismatch"
-        assert float(abs(a0 - a1)) < 1e-5, "aux mismatch"
+        # 1e-4: the EP program replicates over the model axis on 0.4.x
+        # (compat full-manual fallback), so einsum reduction order and
+        # fusion differ from the unsharded reference by float noise
+        assert float(jnp.max(jnp.abs(y0 - y1))) < 1e-4, "y mismatch"
+        assert float(abs(a0 - a1)) < 1e-4, "aux mismatch"
         print("EP_PARITY_OK")
     """)
     env = dict(os.environ)
@@ -100,8 +130,10 @@ def test_moe_ep_parity_subprocess():
     assert "EP_PARITY_OK" in proc.stdout
 
 
+@pytest.mark.slow
 def test_shard_cond_parity_subprocess():
-    """shard_cond dispatch == select on a multi-device population."""
+    """shard_cond dispatch == select on a multi-device population,
+    for both the tree and the fused ZO engines."""
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -113,20 +145,22 @@ def test_shard_cond_parity_subprocess():
         w_true = jax.random.normal(jax.random.PRNGKey(42), (d,))
         def loss_fn(params, batch):
             return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
-        outs = {}
-        for disp in ("select", "shard_cond"):
-            cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="rr_static", lr=0.05,
-                            momentum=0.0, warmup_steps=0, use_cosine=False,
-                            rv=2, nu=1e-3, dispatch=disp)
-            step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=d, mesh=mesh,
-                                          population_axes=("data",)))
-            state = init_state({"w": jnp.zeros((d,))}, cfg)
-            for t in range(40):
-                k = jax.random.fold_in(jax.random.PRNGKey(9), t)
-                X = jax.random.normal(k, (4, 8, d))
-                state, m = step(state, {"X": X, "y": X @ w_true})
-            outs[disp] = np.asarray(state.params["w"])
-        np.testing.assert_allclose(outs["select"], outs["shard_cond"], atol=1e-5)
+        for impl in ("tree", "fused"):
+            outs = {}
+            for disp in ("select", "shard_cond"):
+                cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="rr_static", lr=0.05,
+                                momentum=0.0, warmup_steps=0, use_cosine=False,
+                                rv=2, nu=1e-3, dispatch=disp, zo_impl=impl)
+                step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=d, mesh=mesh,
+                                              population_axes=("data",)))
+                state = init_state({"w": jnp.zeros((d,))}, cfg)
+                for t in range(40):
+                    k = jax.random.fold_in(jax.random.PRNGKey(9), t)
+                    X = jax.random.normal(k, (4, 8, d))
+                    state, m = step(state, {"X": X, "y": X @ w_true})
+                outs[disp] = np.asarray(state.params["w"])
+            np.testing.assert_allclose(outs["select"], outs["shard_cond"],
+                                       atol=1e-5, err_msg=impl)
         print("SHARD_COND_OK")
     """)
     env = dict(os.environ)

@@ -2,6 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is a declared test extra (pyproject [test]); environments
+# without it (e.g. the pinned CPU container) skip rather than breaking
+# collection of the whole suite
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gossip

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro import checkpoint, optim
+from repro import checkpoint, compat, optim
 from repro.configs import get_config, get_mesh_config
 from repro.models import build_model
 from repro import sharding as shardlib
@@ -79,7 +79,9 @@ def test_checkpoint_structure_mismatch_raises():
 
 
 def _abstract_mesh(shape, names):
-    return jax.sharding.AbstractMesh(shape, names)
+    # constructor signature moved across JAX releases; the compat shim
+    # owns the dispatch so these tests survive future changes too
+    return compat.abstract_mesh(shape, names)
 
 
 def test_param_rules_production_mesh():

@@ -45,6 +45,7 @@ def test_hdo_trains_brackets_transformer():
     assert float(consensus_distance(state.params)) < 1.0
 
 
+@pytest.mark.slow
 def test_eq1_noise_scaling_with_d():
     """Theory probe: ZO estimator second moment scales ~ d (Eq. 1 /
     Lemma 5: E||G||^2 <= ~2(d+4)||grad||^2)."""
