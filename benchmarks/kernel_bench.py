@@ -5,19 +5,23 @@ and of their jnp oracles, printed as ``name,us_per_call,derived``.
 The ``estimator_*`` section compares a full ZO gradient estimate via
 the tree-pytree path (``estimators.zo_estimate``: every Gaussian u_r
 materialized) against the fused flat engine (``flatzo``: u_r
-regenerated in VMEM) at d >= 1e6 — the ``derived`` column carries the
-analytic HBM traffic of the Gaussian draws alone, which is O(rv*d)
-for tree and 0 for fused (the candidate evals' traffic is common to
-both paths).
+regenerated in VMEM) for **all four estimator kinds** at d >= 1e6.
+``--json`` additionally writes the machine-readable
+``BENCH_estimators.json`` (wall time + analytic HBM traffic per entry)
+— the artifact CI uploads from the slow lane to seed the perf
+trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line
+from repro.configs.base import ZO_ESTIMATORS
 from repro.core import estimators, flatzo
 from repro.kernels import ops, ref
 
@@ -31,7 +35,7 @@ def _time(fn, *args, n=5):
     return (time.time() - t0) / n * 1e6
 
 
-def main() -> None:
+def main(json_path: str | None = None) -> None:
     d = 1 << 16
     coeffs = jax.random.normal(jax.random.PRNGKey(0), (8,))
     us_k = _time(lambda: ops.zo_combine(coeffs, 7, d))
@@ -63,16 +67,23 @@ def main() -> None:
     us_r = _time(lambda: jax.jit(ref.ssd_scan_ref)(xs, dt, A, Bm, Cm), n=2)
     print(csv_line("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.1f}"))
 
-    estimator_bench()
+    estimator_bench(json_path=json_path)
 
 
-def estimator_bench(d: int = 1 << 20):
-    """Full ZO estimate, tree vs fused, at d >= 1e6.
+def estimator_bench(d: int = 1 << 20, rv: int = 8, json_path: str | None = None):
+    """Full ZO estimate, tree vs fused, every estimator kind, at d >= 1e6.
 
-    ``noise_mb`` is the analytic HBM footprint of the Gaussian draws:
-    the tree path materializes rv f32 vectors per estimate
-    (rv * d * 4 bytes); the fused path regenerates them in VMEM and
-    writes none, whatever rv is.
+    Analytic HBM traffic per estimate (beyond the candidate/JVP evals
+    both paths pay identically):
+      * ``noise_bytes``   — Gaussian draws materialized to HBM.  Tree:
+        rv_eff f32 vectors (``tree_normal``).  Fused: 0 for the
+        finite-difference kinds (regenerated in VMEM); for ``fwd_grad``
+        each tangent is written once because ``jax.jvp`` must consume
+        it — still generated kernel-side in a single O(d) pass.
+      * ``combine_bytes`` — estimate assembly.  Tree: the O(d) f32
+        accumulator is read+written once per draw.  Fused:
+        ``zo_combine`` regenerates every u_r in VMEM and performs one
+        O(d) write of g.
     """
     params = {"w": jax.random.normal(jax.random.PRNGKey(4), (d,)) * 0.01}
     target = jax.random.normal(jax.random.PRNGKey(5), (d,)) * 0.01
@@ -81,23 +92,45 @@ def estimator_bench(d: int = 1 << 20):
         r = p["w"] - target
         return jnp.dot(r, r) / d
 
-    for rv in (2, 8):
+    entries = []
+    key = jax.random.PRNGKey(0)
+    for kind in ZO_ESTIMATORS:
+        rv_eff = rv if kind in ("multi_rv", "fwd_grad") else 1
         tree = jax.jit(
-            lambda k: estimators.zo_estimate(loss_fn, params, k, kind="multi_rv",
-                                             rv=rv, nu=1e-3)[1]
+            lambda k, _kind=kind: estimators.zo_estimate(
+                loss_fn, params, k, kind=_kind, rv=rv, nu=1e-3)[1]
         )
         fused = jax.jit(
-            lambda k: flatzo.flat_zo_estimate(loss_fn, params, k, kind="multi_rv",
-                                              rv=rv, nu=1e-3)[1]
+            lambda k, _kind=kind: flatzo.flat_zo_estimate(
+                loss_fn, params, k, kind=_kind, rv=rv, nu=1e-3)[1]
         )
-        key = jax.random.PRNGKey(0)
         us_t = _time(lambda: tree(key), n=2)
         us_f = _time(lambda: fused(key), n=2)
-        noise_tree_mb = rv * d * 4 / 1e6
-        print(csv_line(f"estimator_tree_d{d}_rv{rv}", us_t,
-                       f"noise_mb={noise_tree_mb:.1f}"))
-        print(csv_line(f"estimator_fused_d{d}_rv{rv}", us_f, "noise_mb=0.0"))
+        for impl, us in (("tree", us_t), ("fused", us_f)):
+            noise = rv_eff * d * 4 if (impl == "tree" or kind == "fwd_grad") else 0
+            combine = 2 * rv_eff * d * 4 if impl == "tree" else d * 4
+            entries.append({
+                "kind": kind, "impl": impl, "d": d, "rv": rv_eff,
+                "us_per_call": round(us, 1),
+                "noise_bytes": noise, "combine_bytes": combine,
+            })
+            print(csv_line(f"estimator_{impl}_{kind}_d{d}_rv{rv_eff}", us,
+                           f"noise_mb={noise / 1e6:.1f}"))
+    if json_path:
+        payload = {"d": d, "backend": jax.default_backend(),
+                   "interpret_mode": jax.default_backend() != "tpu",
+                   "entries": entries}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return entries
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_estimators.json", default=None,
+                    metavar="PATH",
+                    help="write the estimator entries to PATH "
+                         "(default BENCH_estimators.json)")
+    args = ap.parse_args()
+    main(json_path=args.json)

@@ -21,7 +21,12 @@ from repro.configs import (
     zamba2_2_7b,
 )
 from repro.configs.base import (
+    DISPATCH_MODES,
+    GOSSIP_MODES,
     INPUT_SHAPES,
+    MOMENTUM_DTYPES,
+    ZO_ESTIMATORS,
+    ZO_IMPLS,
     HDOConfig,
     InputShape,
     MeshConfig,
@@ -63,7 +68,12 @@ def all_configs() -> Dict[str, ModelConfig]:
 
 __all__ = [
     "ARCH_IDS",
+    "DISPATCH_MODES",
+    "GOSSIP_MODES",
     "INPUT_SHAPES",
+    "MOMENTUM_DTYPES",
+    "ZO_ESTIMATORS",
+    "ZO_IMPLS",
     "HDOConfig",
     "InputShape",
     "MeshConfig",

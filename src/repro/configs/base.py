@@ -176,6 +176,14 @@ class ModelConfig:
 # HDO (the paper's technique)
 # ---------------------------------------------------------------------------
 
+# the legal values for HDOConfig's string knobs, validated at
+# construction so a typo fails at config time, not deep inside a trace
+ZO_ESTIMATORS = ("biased_1pt", "biased_2pt", "multi_rv", "fwd_grad")
+ZO_IMPLS = ("tree", "fused")
+DISPATCH_MODES = ("select", "split", "shard_cond")
+GOSSIP_MODES = ("dense", "rr_static", "rr_ppermute", "all_reduce", "none")
+MOMENTUM_DTYPES = ("float32", "bfloat16")
+
 
 @dataclasses.dataclass(frozen=True)
 class HDOConfig:
@@ -194,7 +202,8 @@ class HDOConfig:
     #             kernels: u_r regenerated in VMEM, so the Gaussian
     #             materialization cost drops to zero and only the
     #             candidate evals' own traffic remains (core/flatzo.py).
-    #             ``fwd_grad`` has no fused form, falls back to "tree".
+    #             Covers every estimator kind — ``fwd_grad`` runs the
+    #             zo_tangent kernel + jvp path (flatzo.flat_fwd_grad).
     zo_impl: str = "tree"
     # gossip topology: dense | rr_static | rr_ppermute | all_reduce | none
     # ("rr_static" = trace-time round-robin tournament, the CPU/single-
@@ -218,6 +227,31 @@ class HDOConfig:
     # momentum accumulator dtype ("float32" paper-faithful; "bfloat16"
     # halves optimizer-state HBM — beyond-paper memory optimization)
     momentum_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.estimator_zo not in ZO_ESTIMATORS:
+            raise ValueError(
+                f"estimator_zo must be one of {ZO_ESTIMATORS}, got {self.estimator_zo!r}"
+            )
+        if self.zo_impl not in ZO_IMPLS:
+            raise ValueError(f"zo_impl must be one of {ZO_IMPLS}, got {self.zo_impl!r}")
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"dispatch must be one of {DISPATCH_MODES}, got {self.dispatch!r}"
+            )
+        if self.gossip not in GOSSIP_MODES:
+            raise ValueError(f"gossip must be one of {GOSSIP_MODES}, got {self.gossip!r}")
+        if self.momentum_dtype not in MOMENTUM_DTYPES:
+            raise ValueError(
+                f"momentum_dtype must be one of {MOMENTUM_DTYPES}, "
+                f"got {self.momentum_dtype!r}"
+            )
+        if not 0 <= self.n_zeroth <= self.n_agents:
+            raise ValueError(
+                f"n_zeroth must lie in [0, n_agents={self.n_agents}], got {self.n_zeroth}"
+            )
+        if self.rv < 1:
+            raise ValueError(f"rv must be >= 1, got {self.rv}")
 
     @property
     def n_first(self) -> int:

@@ -16,16 +16,17 @@ evaluations (or JVPs), never ``jax.grad``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ZO_ESTIMATORS
+
 PyTree = Any
 LossFn = Callable[[PyTree], jnp.ndarray]  # params -> scalar loss
 
-ZO_KINDS = ("biased_1pt", "biased_2pt", "multi_rv", "fwd_grad")
+ZO_KINDS = ZO_ESTIMATORS  # canonical list lives with the config knob
 
 
 def tree_normal(key, tree: PyTree) -> PyTree:

@@ -22,10 +22,16 @@ adds on top drops to zero.
 The counter RNG draws differ from ``jax.random.normal``, so the fused
 path is distribution-equivalent (same estimator, same statistics) but
 not bit-equal to the tree path; parity is asserted on converged
-solutions (see tests/test_perf_variants.py).
+solutions (see tests/test_perf_variants.py) and on the estimator mean
+(tests/test_properties.py).
 
-``fwd_grad`` needs a materialized tangent for ``jax.jvp`` and is not
-fused; callers fall back to the tree implementation for it.
+``fwd_grad`` (unbiased forward-mode (u . grad F) u) is fused through
+``flat_fwd_grad``: the ``zo_tangent`` kernel materializes each tangent
+u_r in a single O(d) pass on the same counter stream, ``jax.jvp``
+pushes it through the loss, and ``zo_combine`` assembles
+g = (1/rv) sum_r jvp_r u_r by regenerating every u_r in VMEM — the
+tangent itself must exist for the JVP, but the rv-deep accumulator and
+the per-leaf Gaussian generation of the tree path drop to zero.
 """
 from __future__ import annotations
 
@@ -35,13 +41,14 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.core.estimators import ZO_KINDS
 from repro.kernels import ops
 
 PyTree = Any
 LossFn = Callable[[PyTree], jnp.ndarray]  # params -> scalar loss
 
-# estimator kinds the fused engine implements (fwd_grad excluded)
-FUSED_KINDS = ("biased_1pt", "biased_2pt", "multi_rv")
+# the fused engine implements every estimator kind
+FUSED_KINDS = ZO_KINDS
 
 
 def seed_from_key(key) -> jnp.ndarray:
@@ -66,6 +73,8 @@ def flat_zo_estimate(
     """
     if kind not in FUSED_KINDS:
         raise ValueError(f"fused ZO engine supports {FUSED_KINDS}, got {kind!r}")
+    if kind == "fwd_grad":
+        return flat_fwd_grad(loss_fn, params, key, rv=rv, interpret=interpret)
     flat, unravel = ravel_pytree(params)
     d = flat.shape[0]
     seed = seed_from_key(key)
@@ -88,3 +97,36 @@ def flat_zo_estimate(
     _, coeffs = jax.lax.scan(coeff, None, jnp.arange(n_draws))
     g_flat = ops.zo_combine(coeffs, seed, d, out_dtype=flat.dtype, interpret=interpret)
     return loss0, unravel(g_flat)
+
+
+def flat_fwd_grad(
+    loss_fn: LossFn,
+    params: PyTree,
+    key,
+    *,
+    rv: int = 4,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Fused unbiased forward-gradient estimate: (loss_at_x, grad_estimate).
+
+    Per draw r the ``zo_tangent`` kernel writes u_r in one O(d) pass,
+    ``jax.jvp`` yields jvp_r = u_r . grad F (one forward pass, no
+    backprop), and ``zo_combine`` rebuilds g = (1/rv) sum_r jvp_r u_r
+    from the same counter stream — no tangent is kept past its JVP and
+    no O(d) accumulator exists outside the combine kernel's VMEM tiles.
+    """
+    flat, unravel = ravel_pytree(params)
+    d = flat.shape[0]
+    seed = seed_from_key(key)
+
+    def draw(_, r):
+        # f32 tangent: bit-identical to the u_r zo_combine regenerates;
+        # unravel casts to each leaf's dtype at the jvp boundary (the
+        # same per-leaf rounding the tree path applies to its tangents)
+        u_flat = ops.zo_tangent(seed, r, d, interpret=interpret)
+        primal, jvp = jax.jvp(loss_fn, (params,), (unravel(u_flat),))
+        return None, (primal, jvp.astype(jnp.float32))
+
+    _, (primals, coeffs) = jax.lax.scan(draw, None, jnp.arange(rv))
+    g_flat = ops.zo_combine(coeffs, seed, d, out_dtype=flat.dtype, interpret=interpret)
+    return primals[0], unravel(g_flat)

@@ -13,7 +13,6 @@ lives on its own sub-mesh).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -66,7 +65,7 @@ def build_hdo_step(
     cfg: HDOConfig,
     *,
     param_dim: Optional[int] = None,
-    donate: bool = True,
+    donate: bool = False,
     mesh=None,
     population_axes: Tuple[str, ...] = (),
 ) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
@@ -75,6 +74,13 @@ def build_hdo_step(
     ``loss_fn(params, batch)`` is a single-agent loss; ``batches`` is a
     pytree whose leaves have leading axis ``n_agents`` (each agent's
     local shard of the data — the paper's split-data setup).
+
+    ``donate=True`` returns the step already jitted with the incoming
+    state's buffers donated (in-place update of params/momentum — the
+    caller must rebind ``state = step(state, ...)`` and never reuse the
+    old state).  The default returns the raw traceable function so
+    callers can apply their own ``jax.jit`` (e.g. with shardings, as
+    ``launch/dryrun.py`` does).
 
     ``dispatch="shard_cond"`` additionally needs ``mesh`` +
     ``population_axes``: the estimation phase runs under a partial
@@ -94,9 +100,9 @@ def build_hdo_step(
     def per_agent_fo(params_i, batch_i):
         return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
 
-    if cfg.zo_impl not in ("tree", "fused"):
-        raise ValueError(f"unknown zo_impl {cfg.zo_impl!r}")
-    use_fused = cfg.zo_impl == "fused" and cfg.estimator_zo in flatzo.FUSED_KINDS
+    # every estimator kind has a fused form (fwd_grad since the
+    # zo_tangent kernel landed) — "fused" never falls back to the tree
+    use_fused = cfg.zo_impl == "fused"
 
     def per_agent_zo(params_i, batch_i, key_i, nu):
         if use_fused:
@@ -300,6 +306,8 @@ def build_hdo_step(
             metrics["loss_zo_mean"] = losses[: cfg.n_zeroth].mean()
         return HDOState(params=new_params, momentum=new_mom, step=t + 1), metrics
 
+    if donate:
+        return jax.jit(step, donate_argnums=(0,))
     return step
 
 

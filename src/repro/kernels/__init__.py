@@ -1,6 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
   zo_combine / zo_perturb — fused counter-RNG zeroth-order estimator
+  zo_tangent              — kernel-side fwd_grad tangent, same RNG stream
   gossip_avg              — streamed pairwise model average
   ssd_scan                — Mamba2 chunked SSD scan
 

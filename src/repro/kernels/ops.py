@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import gossip_avg as _gossip
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import zo_combine as _zo
+from repro.kernels import zo_tangent as _zt
 
 BLOCK = _zo.BLOCK
 
@@ -36,6 +37,13 @@ def zo_combine(coeffs, seed, d: int, out_dtype=jnp.float32, interpret: bool | No
     dp = d + ((-d) % BLOCK)
     out = _zo.zo_combine(coeffs, seed, dp, out_dtype=out_dtype, interpret=interpret)
     return out[:d]
+
+
+@partial(jax.jit, static_argnames=("d", "dtype", "interpret"))
+def zo_tangent(seed, r, d: int, dtype=jnp.float32, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    dp = d + ((-d) % BLOCK)
+    return _zt.zo_tangent(seed, r, dp, dtype=dtype, interpret=interpret)[:d]
 
 
 @partial(jax.jit, static_argnames=("interpret",))

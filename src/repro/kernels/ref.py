@@ -24,6 +24,12 @@ def zo_combine_ref(coeffs, seed, d: int):
     return acc / rv
 
 
+def zo_tangent_ref(seed, r: int, d: int, dtype=jnp.float32):
+    """u_r = counter_normal(seed, ., r) — the fwd_grad tangent."""
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    return counter_normal(jnp.uint32(seed), idx, jnp.uint32(r)).astype(dtype)
+
+
 def zo_perturb_ref(x, seed, r: int, nu: float):
     """x + nu * u_r (flattened parameter perturbation)."""
     d = x.shape[0]

@@ -1,0 +1,58 @@
+"""Kernel-side tangent generation for the fused forward-gradient path.
+
+``fwd_grad`` (Baydin-style (u . grad F) u) needs the tangent u_r as a
+*materialized* vector: ``jax.jvp`` pushes it through the loss, so unlike
+the finite-difference kinds it can never stay virtual.  What the kernel
+buys is the generation itself — one O(d) pass that writes u_r straight
+from the counter RNG, instead of the tree path's per-leaf
+``jax.random.normal`` + pytree reassembly — and, crucially, stream
+compatibility: u_r here is bit-identical to the u_r that ``zo_perturb``
+adds and that ``zo_combine`` regenerates in VMEM, so the estimate
+g = (1/rv) sum_r jvp_r u_r can be assembled by ``zo_combine`` without
+ever storing the rv tangents or an O(d) accumulator.
+
+  zo_tangent_kernel : out = u_r = counter_normal(seed, ., r)
+
+Same (8, 128)-aligned 1-D blocking and tiny-array-operand seeding as
+``zo_combine.py`` (BLOCK is shared), so the kernel never recompiles
+across draws or steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.rng import counter_normal
+from repro.kernels.zo_combine import BLOCK
+
+
+def _zo_tangent_body(meta_ref, o_ref, *, block: int):
+    pid = pl.program_id(0)
+    base = (pid * block + jax.lax.iota(jnp.int32, block)).astype(jnp.uint32)
+    seed = meta_ref[0].astype(jnp.uint32)
+    r = meta_ref[1].astype(jnp.uint32)
+    o_ref[...] = counter_normal(seed, base, r).astype(o_ref.dtype)
+
+
+def zo_tangent(seed, r, d: int, *, dtype=jnp.float32, interpret: bool = False):
+    """(d,) tangent u_r on the shared counter-RNG stream.
+
+    seed/r: int32 scalars/arrays (array operands — no recompiles across
+    draws).  Positions are global indices, so the f32 output is
+    bit-equal to ``(zo_perturb(x, seed, r, nu) - x) / nu`` at x = 0,
+    nu = 1 and to the u_r that ``zo_combine`` regenerates in VMEM
+    (narrower ``dtype``\\s round that shared f32 stream on output).
+    """
+    assert d % BLOCK == 0, d
+    meta = jnp.stack([jnp.asarray(seed, jnp.int32), jnp.asarray(r, jnp.int32)])
+    return pl.pallas_call(
+        functools.partial(_zo_tangent_body, block=BLOCK),
+        grid=(d // BLOCK,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), dtype),
+        interpret=interpret,
+    )(meta)

@@ -24,7 +24,12 @@ import jax.numpy as jnp
 
 from repro import sharding as shardlib
 from repro.configs import INPUT_SHAPES, get_config, get_mesh_config
-from repro.configs.base import HDOConfig
+from repro.configs.base import (
+    DISPATCH_MODES,
+    GOSSIP_MODES,
+    MOMENTUM_DTYPES,
+    HDOConfig,
+)
 from repro.core import hdo as hdolib
 from repro.launch import hlo_analysis, specs
 from repro.launch.mesh import make_production_mesh
@@ -225,13 +230,11 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--gossip", default="dense",
-                    choices=["dense", "rr_static", "rr_ppermute", "all_reduce", "none"])
+    ap.add_argument("--gossip", default="dense", choices=list(GOSSIP_MODES))
     ap.add_argument("--rv", type=int, default=2)
-    ap.add_argument("--dispatch", default="select",
-                    choices=["select", "split", "shard_cond"])
+    ap.add_argument("--dispatch", default="select", choices=list(DISPATCH_MODES))
     ap.add_argument("--momentum-dtype", default="float32",
-                    choices=["float32", "bfloat16"])
+                    choices=list(MOMENTUM_DTYPES))
     ap.add_argument("--attn-remat", action="store_true")
     ap.add_argument("--window-slice", action="store_true")
     ap.add_argument("--moe-constraint", nargs="?", const=True, default=False,

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro import checkpoint
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.configs.base import HDOConfig
+from repro.configs.base import HDOConfig, ZO_ESTIMATORS, ZO_IMPLS
 from repro.core import build_hdo_step, consensus_distance, init_state
 from repro.data import AgentBatcher, brackets, synthetic
 from repro.models import build_model
@@ -33,9 +33,8 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--agents", type=int, default=8)
     ap.add_argument("--zo", type=int, default=4)
-    ap.add_argument("--estimator", default="multi_rv",
-                    choices=["biased_1pt", "biased_2pt", "multi_rv", "fwd_grad"])
-    ap.add_argument("--zo-impl", default="tree", choices=["tree", "fused"],
+    ap.add_argument("--estimator", default="multi_rv", choices=list(ZO_ESTIMATORS))
+    ap.add_argument("--zo-impl", default="tree", choices=list(ZO_IMPLS),
                     help="ZO engine: pytree estimators vs the flat-parameter "
                          "fused Pallas path (O(d) HBM traffic per estimate)")
     ap.add_argument("--rv", type=int, default=4)

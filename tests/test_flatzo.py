@@ -26,7 +26,7 @@ def quad():
     return A, b, p, d
 
 
-@pytest.mark.parametrize("kind", ["biased_1pt", "biased_2pt", "multi_rv"])
+@pytest.mark.parametrize("kind", ["biased_1pt", "biased_2pt", "multi_rv", "fwd_grad"])
 def test_fused_mean_close_to_grad(quad, kind):
     """E[G] ~ grad f — same statistics as the tree estimators."""
     A, b, p, d = quad
@@ -70,10 +70,57 @@ def test_fused_vmap_over_agents(quad):
     assert float(jnp.abs(g["x"][0] - g["x"][1]).max()) > 1e-3
 
 
-def test_fused_rejects_fwd_grad(quad):
+def test_fused_fwd_grad_primal_is_loss0(quad):
+    """flat_fwd_grad's primal comes from the jvp — still F(x) exactly."""
+    A, b, p, d = quad
+    loss = quad_loss(A, b)
+    val, _ = flatzo.flat_fwd_grad(loss, p, jax.random.PRNGKey(0), rv=3)
+    np.testing.assert_allclose(np.asarray(val), np.asarray(loss(p)), rtol=1e-6)
+
+
+def test_fused_fwd_grad_single_draw_identity():
+    """For one draw, flat_fwd_grad gives exactly (u . g) u with u the
+    zo_tangent draw — the Baydin forward-gradient identity on the
+    counter stream."""
+    from repro.kernels import ops
+
+    d = 8
+    g = jnp.arange(1.0, d + 1.0)
+    loss = lambda p: p["x"] @ g
+    p = {"x": jnp.zeros((d,))}
+    key = jax.random.PRNGKey(3)
+    _, est = flatzo.flat_fwd_grad(loss, p, key, rv=1)
+    u = ops.zo_tangent(flatzo.seed_from_key(key), 0, d)
+    np.testing.assert_allclose(
+        np.asarray(est["x"]), np.asarray((u @ g) * u), rtol=1e-5
+    )
+
+
+def test_fused_fwd_grad_preserves_structure_and_dtypes():
+    tree = {"a": jnp.zeros((3, 4)), "b": {"c": jnp.zeros((5,), jnp.bfloat16)}}
+    loss = lambda p: sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(p))
+    _, g = flatzo.flat_fwd_grad(loss, tree, jax.random.PRNGKey(1), rv=2)
+    assert g["a"].shape == (3, 4) and g["a"].dtype == jnp.float32
+    assert g["b"]["c"].shape == (5,) and g["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_fused_fwd_grad_vmap_over_agents(quad):
+    A, b, p, d = quad
+    loss = quad_loss(A, b)
+    n = 4
+    ps = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), p)
+    keys = jax.random.split(jax.random.PRNGKey(2), n)
+    losses, g = jax.vmap(
+        lambda pi, ki: flatzo.flat_fwd_grad(loss, pi, ki, rv=2)
+    )(ps, keys)
+    assert losses.shape == (n,) and g["x"].shape == (n, d)
+    assert float(jnp.abs(g["x"][0] - g["x"][1]).max()) > 1e-3
+
+
+def test_fused_rejects_unknown_kind(quad):
     A, b, p, d = quad
     with pytest.raises(ValueError):
-        flatzo.flat_zo_estimate(quad_loss(A, b), p, jax.random.PRNGKey(0), kind="fwd_grad")
+        flatzo.flat_zo_estimate(quad_loss(A, b), p, jax.random.PRNGKey(0), kind="nope")
 
 
 def test_seed_from_key_nonnegative_int32():

@@ -1,4 +1,6 @@
 """HDO end-to-end behaviour: convergence, consensus, schedules."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -53,6 +55,65 @@ def test_fwd_grad_population_converges():
     loss, _ = run(HDOConfig(n_agents=8, n_zeroth=8, gossip="dense",
                             estimator_zo="fwd_grad", **BASE))
     assert loss < 5e-2
+
+
+def test_fused_fwd_grad_population_converges():
+    """zo_impl="fused" + fwd_grad runs the flat_fwd_grad engine end-to-
+    end through build_hdo_step (no tree fallback since PR 2)."""
+    loss, _ = run(HDOConfig(n_agents=8, n_zeroth=8, gossip="dense",
+                            estimator_zo="fwd_grad", zo_impl="fused", **BASE))
+    assert loss < 5e-2
+
+
+@pytest.mark.parametrize("zo_impl", ["tree", "fused"])
+@pytest.mark.parametrize("estimator_zo", ["multi_rv", "fwd_grad"])
+def test_split_dispatch_step_identical_to_select(zo_impl, estimator_zo):
+    """One step under dispatch="split" vs the masked SPMD-uniform
+    baseline: identical per-agent losses and params (both paths share
+    agent_keys, so any drift is a bug — not just statistical parity)."""
+    cfg_sel = HDOConfig(n_agents=6, n_zeroth=4, gossip="dense", dispatch="select",
+                        estimator_zo=estimator_zo, zo_impl=zo_impl, momentum=0.9,
+                        lr=0.05, warmup_steps=0, use_cosine=False, nu=1e-3, rv=2)
+    cfg_spl = dataclasses.replace(cfg_sel, dispatch="split")
+    batches = make_batches(jax.random.PRNGKey(3), cfg_sel.n_agents)
+    state0 = init_state({"w": jnp.zeros((D,))}, cfg_sel)
+    s_sel, m_sel = jax.jit(build_hdo_step(loss_fn, cfg_sel, param_dim=D))(state0, batches)
+    s_spl, m_spl = jax.jit(build_hdo_step(loss_fn, cfg_spl, param_dim=D))(state0, batches)
+    np.testing.assert_array_equal(np.asarray(s_sel.params["w"]),
+                                  np.asarray(s_spl.params["w"]))
+    np.testing.assert_array_equal(np.asarray(s_sel.momentum["w"]),
+                                  np.asarray(s_spl.momentum["w"]))
+    for k in m_sel:
+        np.testing.assert_array_equal(np.asarray(m_sel[k]), np.asarray(m_spl[k]),
+                                      err_msg=k)
+
+
+def test_donated_step_matches_undonated():
+    """donate=True returns a jitted step with the state buffers donated;
+    results are unchanged."""
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="dense", **BASE)
+    plain = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+    donated = build_hdo_step(loss_fn, cfg, param_dim=D, donate=True)
+    batches = make_batches(jax.random.PRNGKey(1), cfg.n_agents)
+    s_plain, _ = plain(init_state({"w": jnp.zeros((D,))}, cfg), batches)
+    s_don, _ = donated(init_state({"w": jnp.zeros((D,))}, cfg), batches)
+    np.testing.assert_array_equal(np.asarray(s_plain.params["w"]),
+                                  np.asarray(s_don.params["w"]))
+
+
+def test_config_validation_rejects_typos():
+    with pytest.raises(ValueError):
+        HDOConfig(estimator_zo="multirv")
+    with pytest.raises(ValueError):
+        HDOConfig(zo_impl="flat")
+    with pytest.raises(ValueError):
+        HDOConfig(dispatch="shard")
+    with pytest.raises(ValueError):
+        HDOConfig(gossip="ring")
+    with pytest.raises(ValueError):
+        HDOConfig(momentum_dtype="bf16")
+    with pytest.raises(ValueError):
+        HDOConfig(n_agents=4, n_zeroth=5)
 
 
 def test_rr_gossip_equivalent_convergence():

@@ -62,6 +62,57 @@ def test_zo_combine_bf16_out():
     )
 
 
+@pytest.mark.parametrize("d", [8192, 16384, 20000, 50001])
+@pytest.mark.parametrize("r", [0, 3])
+def test_zo_tangent_matches_ref_bit_exact(d, r):
+    """ops.zo_tangent == its jnp oracle bit-for-bit (shared counter
+    stream), across block boundaries and non-multiple-of-BLOCK padding."""
+    out = ops.zo_tangent(99, r, d)
+    exp = ref.zo_tangent_ref(99, r, d)
+    assert out.shape == (d,) and out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("d", [8192, 24576, 20000, 50001])
+def test_zo_tangent_equals_perturb_displacement(d):
+    """u_r == (zo_perturb(x, seed, r, nu) - x) / nu on the same stream.
+
+    At x = 0, nu = 1 the identity is bit-exact; for generic x it holds
+    to f32 rounding of the add/sub round-trip.
+    """
+    u = ops.zo_tangent(7, 1, d)
+    zero = jnp.zeros((d,))
+    np.testing.assert_array_equal(
+        np.asarray(ops.zo_perturb(zero, 7, 1, 1.0)), np.asarray(u)
+    )
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    nu = 1e-2
+    fd = (ops.zo_perturb(x, 7, 1, nu) - x) / nu
+    np.testing.assert_allclose(np.asarray(fd), np.asarray(u), atol=1e-3)
+
+
+def test_zo_tangent_bf16_out():
+    u32 = ops.zo_tangent(11, 2, 8192)
+    u16 = ops.zo_tangent(11, 2, 8192, dtype=jnp.bfloat16)
+    assert u16.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(u16, np.float32), np.asarray(u32), atol=0.05, rtol=0.05
+    )
+
+
+def test_zo_tangent_stream_matches_combine():
+    """zo_combine with a one-hot coefficient reproduces u_r / rv —
+    tangent generation and estimate assembly share one RNG stream."""
+    d, rv = 8192, 4
+    for r in range(rv):
+        coeffs = jnp.zeros((rv,)).at[r].set(1.0)
+        g = ops.zo_combine(coeffs, 13, d)
+        u = ops.zo_tangent(13, r, d)
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(u) / rv, atol=1e-6
+        )
+
+
 def test_zo_perturb_distinct_r_distinct_noise():
     x = jnp.zeros((8192,))
     a = ops.zo_perturb(x, 5, 0, 1.0)

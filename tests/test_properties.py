@@ -10,13 +10,77 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import gossip
+from repro.core import estimators, flatzo, gossip
 from repro.core.schedules import warmup_cosine
 from repro.kernels.rng import counter_normal
 from repro.launch.hlo_analysis import HloCostModel, _shape_elems_bytes
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# ZO estimator contracts: tree and fused are distribution-equivalent,
+# not bit-equal (flatzo.py docstring) — both must satisfy E[g] ~ grad F
+# on a quadratic with closed-form gradient, within CLT tolerance.
+# ---------------------------------------------------------------------------
+
+_EST_D = 8
+_EST_RV = 8
+_EST_SAMPLES = 256
+
+
+def _est_quadratic():
+    key = jax.random.PRNGKey(17)
+    A = jax.random.normal(key, (_EST_D, _EST_D))
+    A = A @ A.T / _EST_D + jnp.eye(_EST_D)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (_EST_D,))
+    x0 = jax.random.normal(jax.random.fold_in(key, 2), (_EST_D,))
+    loss = lambda p: 0.5 * p["x"] @ A @ p["x"] - b @ p["x"]
+    return loss, {"x": x0}, A @ x0 - b
+
+
+_EST_LOSS, _EST_P0, _EST_GRAD = _est_quadratic()
+_EST_CACHE = {}
+
+
+def _batched_estimator(impl, kind):
+    """(n_keys,) keys -> (n_keys, d) estimates; jitted+vmapped, cached
+    so each (impl, kind) compiles once across hypothesis examples."""
+    if (impl, kind) not in _EST_CACHE:
+        engine = estimators.zo_estimate if impl == "tree" else flatzo.flat_zo_estimate
+        one = lambda k: engine(_EST_LOSS, _EST_P0, k, kind=kind, rv=_EST_RV,
+                               nu=1e-4)[1]["x"]
+        _EST_CACHE[(impl, kind)] = jax.jit(jax.vmap(one))
+    return _EST_CACHE[(impl, kind)]
+
+
+@pytest.mark.parametrize("impl", ["tree", "fused"])
+@pytest.mark.parametrize("kind", ["multi_rv", "fwd_grad"])
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=5, deadline=None)
+def test_zo_estimator_unbiased(impl, kind, seed):
+    """E[g] ~ grad F across seeds.  Relative error of the sample mean is
+    ~ sqrt((d+1)/(N*rv)) ~ 0.066 here; 0.3 is a >4-sigma budget."""
+    est = _batched_estimator(impl, kind)
+    keys = jax.random.split(jax.random.PRNGKey(seed), _EST_SAMPLES)
+    g_bar = est(keys).mean(0)
+    rel = float(jnp.linalg.norm(g_bar - _EST_GRAD) / jnp.linalg.norm(_EST_GRAD))
+    assert rel < 0.3, (impl, kind, rel)
+
+
+@pytest.mark.parametrize("kind", ["multi_rv", "fwd_grad"])
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=5, deadline=None)
+def test_tree_and_fused_means_agree(kind, seed):
+    """Tree and fused draw from different RNGs, so single estimates
+    differ — but their sample means must land on the same gradient
+    (distribution equivalence, the flatzo contract)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), _EST_SAMPLES)
+    g_tree = _batched_estimator("tree", kind)(keys).mean(0)
+    g_fused = _batched_estimator("fused", kind)(keys).mean(0)
+    scale = float(jnp.linalg.norm(_EST_GRAD))
+    assert float(jnp.linalg.norm(g_tree - g_fused)) / scale < 0.5, kind
 
 
 @given(
