@@ -10,11 +10,17 @@ regenerated in VMEM) for **all four estimator kinds** at d >= 1e6.
 ``BENCH_estimators.json`` (wall time + analytic HBM traffic per entry)
 — the artifact CI uploads from the slow lane to seed the perf
 trajectory.
+
+The ``gossip_*`` section compares the fused k-neighbor ``gossip_mix``
+kernel against chained ``gossip_avg`` calls and the jnp oracle at
+d >= 1e6; ``--json`` writes it to ``BENCH_gossip.json`` (uploaded from
+the same CI lane).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -68,6 +74,65 @@ def main(json_path: str | None = None) -> None:
     print(csv_line("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.1f}"))
 
     estimator_bench(json_path=json_path)
+    # the gossip artifact lands next to the estimator one
+    gossip_json = (
+        os.path.join(os.path.dirname(json_path) or ".", "BENCH_gossip.json")
+        if json_path else None
+    )
+    gossip_bench(json_path=gossip_json)
+
+
+def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
+    """Gossip interaction step at d >= 1e6: the fused k-neighbor
+    ``gossip_mix`` kernel vs chained ``gossip_avg`` passes vs the jnp
+    oracle, per topology degree.
+
+    Analytic HBM traffic per mixed agent (the gossip step is pure
+    memory traffic — these are the roofline terms):
+      * ``gossip_mix``   — one read of x + k neighbor reads + one write:
+        (k + 2) * d * 4 bytes, regardless of k's chaining.
+      * ``chained_avg``  — emulating a k-neighbor combine with binary
+        averages costs k passes: each reads two O(d) vectors and writes
+        one, 3 * k * d * 4 bytes (and computes the wrong weighting for
+        irregular graphs — it is the structural baseline only).
+    """
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    entries = []
+    for k in (1, 2, 4):
+        nbrs = jax.random.normal(jax.random.PRNGKey(1), (k, d))
+        w = jnp.full((k,), 1.0 / (k + 1))
+        w_self = 1.0 / (k + 1)
+        us_mix = _time(lambda: ops.gossip_mix(x, nbrs, w_self, w), n=3)
+        us_ref = _time(
+            lambda: jax.jit(ref.gossip_mix_ref)(x, nbrs, w_self, w), n=3)
+
+        def chained(x, nbrs):
+            out = x
+            for s in range(nbrs.shape[0]):
+                out = ops.gossip_avg(out, nbrs[s])
+            return out
+
+        us_chain = _time(lambda: chained(x, nbrs), n=3)
+        rows = [
+            ("gossip_mix", us_mix, (k + 2) * d * 4),
+            ("chained_avg", us_chain, 3 * k * d * 4),
+            ("jnp_ref", us_ref, (k + 2) * d * 4),
+        ]
+        for impl, us, hbm in rows:
+            entries.append({
+                "impl": impl, "k": k, "d": d,
+                "us_per_call": round(us, 1), "hbm_bytes": hbm,
+            })
+            print(csv_line(f"gossip_{impl}_k{k}_d{d}", us,
+                           f"hbm_mb={hbm / 1e6:.1f}"))
+    if json_path:
+        payload = {"d": d, "backend": jax.default_backend(),
+                   "interpret_mode": jax.default_backend() != "tpu",
+                   "entries": entries}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return entries
 
 
 def estimator_bench(d: int = 1 << 20, rv: int = 8, json_path: str | None = None):
@@ -130,7 +195,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", nargs="?", const="BENCH_estimators.json", default=None,
                     metavar="PATH",
-                    help="write the estimator entries to PATH "
-                         "(default BENCH_estimators.json)")
+                    help="write the estimator entries to PATH (default "
+                         "BENCH_estimators.json); the gossip entries go to "
+                         "BENCH_gossip.json alongside it")
     args = ap.parse_args()
     main(json_path=args.json)

@@ -177,11 +177,19 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 # the legal values for HDOConfig's string knobs, validated at
-# construction so a typo fails at config time, not deep inside a trace
+# construction so a typo fails at config time, not deep inside a trace.
+# These tuples are the single source for every CLI ``choices=`` list.
 ZO_ESTIMATORS = ("biased_1pt", "biased_2pt", "multi_rv", "fwd_grad")
 ZO_IMPLS = ("tree", "fused")
 DISPATCH_MODES = ("select", "split", "shard_cond")
-GOSSIP_MODES = ("dense", "rr_static", "rr_ppermute", "all_reduce", "none")
+GOSSIP_MODES = (
+    "dense", "rr_static", "rr_ppermute", "all_reduce", "none",
+    "graph", "graph_ppermute",
+)
+TOPOLOGIES = (
+    "ring", "torus", "hypercube", "erdos_renyi",
+    "tv_round_robin", "tv_erdos_renyi",
+)
 MOMENTUM_DTYPES = ("float32", "bfloat16")
 
 
@@ -205,11 +213,25 @@ class HDOConfig:
     #             Covers every estimator kind — ``fwd_grad`` runs the
     #             zo_tangent kernel + jvp path (flatzo.flat_fwd_grad).
     zo_impl: str = "tree"
-    # gossip topology: dense | rr_static | rr_ppermute | all_reduce | none
+    # gossip scheme: dense | rr_static | rr_ppermute | all_reduce | none
+    #   | graph | graph_ppermute
     # ("rr_static" = trace-time round-robin tournament, the CPU/single-
     #  host derandomization; "rr_ppermute" = its shard_map/ppermute
-    #  lowering, needs mesh + one agent per population shard)
+    #  lowering, needs mesh + one agent per population shard; "graph" =
+    #  weighted mixing-matrix gossip over a static neighbor topology
+    #  (repro.topology), "graph_ppermute" = its shard_map lowering for
+    #  permutation-column topologies)
     gossip: str = "dense"
+    # graph-gossip knobs (used when gossip is "graph"/"graph_ppermute"):
+    #   topology       — neighbor graph family (repro.topology constructors)
+    #   topology_p     — Erdős–Rényi edge probability
+    #   topology_seed  — seed for randomized topologies
+    #   topology_rounds— cycle length for tv_erdos_renyi (tv_round_robin's
+    #                    cycle is structurally n-1 tournament rounds)
+    topology: str = "ring"
+    topology_p: float = 0.3
+    topology_seed: int = 0
+    topology_rounds: int = 8
     lr: float = 0.01
     momentum: float = 0.9
     warmup_steps: int = 50
@@ -241,6 +263,16 @@ class HDOConfig:
             )
         if self.gossip not in GOSSIP_MODES:
             raise ValueError(f"gossip must be one of {GOSSIP_MODES}, got {self.gossip!r}")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(
+                f"topology must be one of {TOPOLOGIES}, got {self.topology!r}"
+            )
+        if not 0.0 < self.topology_p <= 1.0:
+            raise ValueError(f"topology_p must lie in (0, 1], got {self.topology_p}")
+        if self.topology_rounds < 1:
+            raise ValueError(
+                f"topology_rounds must be >= 1, got {self.topology_rounds}"
+            )
         if self.momentum_dtype not in MOMENTUM_DTYPES:
             raise ValueError(
                 f"momentum_dtype must be one of {MOMENTUM_DTYPES}, "

@@ -16,6 +16,13 @@ Implementations (selected by ``HDOConfig.gossip``):
 
 All variants preserve the population mean exactly (load-balancing view
 of Lemma 2).
+
+This module holds the matching/averaging *primitives*; the training
+step no longer string-dispatches over them — ``build_hdo_step``
+consumes a ``repro.topology.mixer.Mixer`` built from ``HDOConfig``,
+which wraps these primitives (and adds weighted graph-topology mixing
+with spectral diagnostics).  ``gossip_step`` below is retained as the
+direct functional entry point.
 """
 from __future__ import annotations
 

@@ -4,7 +4,10 @@ One parallel step =
   1. every agent computes its local gradient estimate (FO agents:
      backprop; ZO agents: function-evaluation estimators),
   2. every agent takes a local (momentum-)SGD step,
-  3. O(n) random disjoint pairs average their models.
+  3. the population communicates through a ``Mixer`` (paper: O(n)
+     random disjoint pairs average; beyond-paper: any doubly-stochastic
+     scheme from ``repro.topology`` — round-robin tournaments,
+     weighted graph topologies, all-reduce).
 
 The population is carried as a stacked pytree with a leading
 ``n_agents`` axis (shardable over a mesh axis -> each agent's replica
@@ -20,7 +23,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.configs.base import HDOConfig
-from repro.core import estimators, flatzo, gossip, schedules
+from repro.core import estimators, flatzo, schedules
 
 PyTree = Any
 
@@ -86,16 +89,21 @@ def build_hdo_step(
     ``population_axes``: the estimation phase runs under a partial
     ``shard_map`` over the population axes with a *runtime* branch on
     the shard's agent type, so ZO devices never build the backward pass
-    (HLO conditionals are dynamic).
+    (HLO conditionals are dynamic).  The shard_map gossip lowerings
+    (``gossip="rr_ppermute"`` / ``"graph_ppermute"``) need the same two
+    arguments plus one agent per population shard.
     """
+    # deferred: topology depends on core.gossip's primitives, so a
+    # module-level import here would cycle through repro.core.__init__
+    from repro.topology.mixer import make_mixer, shard_agent_index
+
     n = cfg.n_agents
     sched = schedules.warmup_cosine(cfg.lr, cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine)
     is_zo = zo_mask(cfg)
-    rr_sched = (
-        jnp.asarray(gossip.round_robin_schedule(n))
-        if (cfg.gossip == "rr_static" and n % 2 == 0 and n > 1)
-        else None
-    )
+    mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes)
+    mixer_metrics = {
+        k: jnp.float32(v) for k, v in mixer.diagnostics().items()
+    }
 
     def per_agent_fo(params_i, batch_i):
         return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
@@ -159,12 +167,7 @@ def build_hdo_step(
             assert n0 % n_local == 0, "ZO/FO boundary must align with shards"
 
             def shard_fn(p_l, b_l, k_l, nu_s):
-                # global index of this shard's first agent
-                idx = jnp.int32(0)
-                stride = n_local
-                for a in reversed(pop_axes):
-                    idx = idx + jax.lax.axis_index(a) * stride
-                    stride = stride * mesh.shape[a]
+                idx = shard_agent_index(mesh, pop_axes, n_local)
                 is_zo_shard = idx < n0
 
                 def zo_branch(_):
@@ -244,61 +247,15 @@ def build_hdo_step(
             upd,
         )
 
-        # ---- gossip (pairwise averaging) ------------------------------
+        # ---- gossip (the Mixer interaction step) ----------------------
         gkey = jax.random.fold_in(key, 7)
-        if cfg.gossip == "rr_ppermute" and mesh is not None:
-            # TPU-native gossip: each agent exchanges ONLY with its
-            # round partner over ICI (collective-permute), instead of
-            # gathering the whole population.
-            pop_axes = tuple(a for a in population_axes if a in mesh.shape)
-            pop_size = 1
-            for a in pop_axes:
-                pop_size *= mesh.shape[a]
-            assert n == pop_size, "rr_ppermute needs one agent per population shard"
-            rr_table = gossip.round_robin_schedule(n)
-            axis = pop_axes if len(pop_axes) > 1 else pop_axes[0]
-            from jax.sharding import PartitionSpec as P
-
-            def gossip_shard(p_l, t_l):
-                def round_branch(r):
-                    perm = [(i, int(rr_table[r][i])) for i in range(n)]
-
-                    def b(p):
-                        partner = jax.tree.map(
-                            lambda x: jax.lax.ppermute(x, axis_name=axis, perm=perm), p
-                        )
-                        return jax.tree.map(
-                            lambda a_, b_: (
-                                (a_.astype(jnp.float32) + b_.astype(jnp.float32)) * 0.5
-                            ).astype(a_.dtype),
-                            p,
-                            partner,
-                        )
-
-                    return b
-
-                return jax.lax.switch(
-                    t_l % (n - 1), [round_branch(r) for r in range(n - 1)], p_l
-                )
-
-            pspec = P(axis)
-            new_params = compat.shard_map(
-                gossip_shard,
-                mesh=mesh,
-                in_specs=(pspec, P()),
-                out_specs=pspec,
-                axis_names=set(pop_axes),
-                check_vma=False,
-            )(new_params, t)
-        else:
-            new_params = gossip.gossip_step(
-                new_params, mode=cfg.gossip, key=gkey, step=t, n=n, schedule=rr_sched
-            )
+        new_params = mixer(new_params, key=gkey, step=t)
 
         metrics = {
             "loss_mean": losses.mean(),
             "loss_std": losses.std(),
             "lr": lr,
+            **mixer_metrics,
         }
         if cfg.n_first:
             metrics["loss_fo_mean"] = losses[cfg.n_zeroth :].mean()

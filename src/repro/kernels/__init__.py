@@ -3,6 +3,7 @@
   zo_combine / zo_perturb — fused counter-RNG zeroth-order estimator
   zo_tangent              — kernel-side fwd_grad tangent, same RNG stream
   gossip_avg              — streamed pairwise model average
+  gossip_mix              — fused k-neighbor weighted gossip combine
   ssd_scan                — Mamba2 chunked SSD scan
 
 See ops.py for the jitted wrappers and ref.py for the jnp oracles.

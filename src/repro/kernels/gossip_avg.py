@@ -2,11 +2,12 @@
 
 Trivial arithmetic, but fusing it saves one full HBM round-trip per
 interaction on multi-GB models (the gossip step is pure memory
-traffic).  f32 accumulate for bf16 inputs.
+traffic).  f32 accumulate for bf16 inputs.  Non-block-aligned ``d`` is
+tail-padded here (matching the ZO kernels' contract), so callers never
+see the BLOCK constraint.  The k-neighbor generalization lives in
+``gossip_mix.py``.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -22,18 +23,23 @@ def _body(x_ref, y_ref, o_ref):
 
 
 def gossip_avg(x, y, *, interpret: bool = False):
-    """x, y: (d,) same dtype -> (x + y) / 2."""
+    """x, y: (d,) same dtype -> (x + y) / 2, any d."""
     assert x.shape == y.shape and x.ndim == 1
     d = x.shape[0]
-    assert d % BLOCK == 0, d
-    return pl.pallas_call(
+    pad = (-d) % BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+    dp = d + pad
+    out = pl.pallas_call(
         _body,
-        grid=(d // BLOCK,),
+        grid=(dp // BLOCK,),
         in_specs=[
             pl.BlockSpec((BLOCK,), lambda i: (i,)),
             pl.BlockSpec((BLOCK,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((dp,), x.dtype),
         interpret=interpret,
     )(x, y)
+    return out[:d]

@@ -1,0 +1,64 @@
+"""k-neighbor weighted gossip mixing kernel.
+
+Generalizes ``gossip_avg``'s 2-partner average to the graph-topology
+interaction step: for one agent with k neighbors,
+
+    out = w_self * x + sum_s w[s] * nbrs[s],
+
+streamed in a single O(d) pass with f32 accumulation (the gossip step
+is pure HBM traffic on multi-GB models; fusing the weighted combine
+saves k-1 full round-trips over chained binary ops).  The (k + 2) * d
+traffic claim counts the kernel's own operands — it holds end-to-end
+when the neighbor buffers are already resident (the ppermute lowering
+in ``topology.mixer``), not when a gather first materializes them.
+Non-block-aligned ``d`` is tail-padded here, so callers never see the
+BLOCK constraint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192
+
+
+def _body(x_ref, nbrs_ref, w_ref, o_ref, *, k: int):
+    acc = w_ref[0] * x_ref[...].astype(jnp.float32)
+    for s in range(k):
+        acc = acc + w_ref[s + 1] * nbrs_ref[s, :].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def gossip_mix(x, nbrs, w_self, w, *, interpret: bool = False):
+    """x: (d,), nbrs: (k, d) same dtype, w_self scalar, w: (k,) f32
+    -> (d,) in x.dtype.  Weights are array operands (no recompilation
+    across steps / topologies of equal degree)."""
+    assert x.ndim == 1 and nbrs.ndim == 2 and nbrs.shape[1] == x.shape[0], (
+        x.shape, nbrs.shape)
+    d = x.shape[0]
+    k = nbrs.shape[0]
+    wts = jnp.concatenate([
+        jnp.asarray(w_self, jnp.float32).reshape(1),
+        jnp.asarray(w, jnp.float32).reshape(k),
+    ])
+    pad = (-d) % BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        nbrs = jnp.concatenate([nbrs, jnp.zeros((k, pad), nbrs.dtype)], axis=1)
+    dp = d + pad
+    out = pl.pallas_call(
+        functools.partial(_body, k=k),
+        grid=(dp // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((k, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), x.dtype),
+        interpret=interpret,
+    )(x, nbrs, wts)
+    return out[:d]

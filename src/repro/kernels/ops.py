@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import gossip_avg as _gossip
+from repro.kernels import gossip_mix as _gmix
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import zo_combine as _zo
 from repro.kernels import zo_tangent as _zt
@@ -64,9 +65,15 @@ def zo_perturb_batch(x, seed, rv: int, nu, out_dtype=None, interpret: bool | Non
 @partial(jax.jit, static_argnames=("interpret",))
 def gossip_avg(x, y, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
-    xp, d = _pad_to_block(x)
-    yp, _ = _pad_to_block(y)
-    return _gossip.gossip_avg(xp, yp, interpret=interpret)[:d]
+    return _gossip.gossip_avg(x, y, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix(x, nbrs, w_self, w, interpret: bool | None = None):
+    """x: (d,), nbrs: (k, d), w_self scalar, w: (k,) -> W-row mix of x
+    with its k neighbors (one fused O(d) pass)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gmix.gossip_mix(x, nbrs, w_self, w, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

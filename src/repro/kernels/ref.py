@@ -54,6 +54,15 @@ def gossip_avg_ref(x, y):
     return ((x.astype(jnp.float32) + y.astype(jnp.float32)) * 0.5).astype(x.dtype)
 
 
+def gossip_mix_ref(x, nbrs, w_self, w):
+    """out = w_self * x + sum_s w[s] * nbrs[s], f32 accumulation in the
+    kernel's (unrolled, in-order) association so parity is bit-exact."""
+    acc = jnp.asarray(w_self, jnp.float32) * x.astype(jnp.float32)
+    for s in range(nbrs.shape[0]):
+        acc = acc + jnp.asarray(w[s], jnp.float32) * nbrs[s].astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm):
     """Sequential-recurrence oracle (see models.mamba2.ssd_reference).
 

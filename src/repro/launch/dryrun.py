@@ -28,6 +28,7 @@ from repro.configs.base import (
     DISPATCH_MODES,
     GOSSIP_MODES,
     MOMENTUM_DTYPES,
+    TOPOLOGIES,
     HDOConfig,
 )
 from repro.core import hdo as hdolib
@@ -55,7 +56,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
                  rv: int, dispatch: str = "select", momentum_dtype: str = "float32",
                  attn_remat: bool = False, window_slice: bool = False,
                  moe_constraint: bool = False, donate: bool = False,
-                 fsdp: bool = False):
+                 fsdp: bool = False, topology: str = "ring"):
     """Returns (lowered, mesh, meta) for one combination, or None if skipped."""
     shape = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
@@ -97,6 +98,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
             estimator_zo="multi_rv",
             rv=rv,
             gossip=gossip if n_agents > 1 else "none",
+            topology=topology,
             momentum=0.9,
             dispatch=dispatch,
             momentum_dtype=momentum_dtype,
@@ -171,12 +173,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
             dispatch: str = "select", momentum_dtype: str = "float32",
             attn_remat: bool = False, window_slice: bool = False,
             moe_constraint: bool = False, donate: bool = False,
-            fsdp: bool = False, label: str = "") -> Dict[str, Any]:
+            fsdp: bool = False, label: str = "",
+            topology: str = "ring") -> Dict[str, Any]:
     t0 = time.time()
     built = build_dryrun(arch, shape_name, multi_pod=multi_pod, gossip=gossip,
                          rv=rv, dispatch=dispatch, momentum_dtype=momentum_dtype,
                          attn_remat=attn_remat, window_slice=window_slice,
-                         moe_constraint=moe_constraint, donate=donate, fsdp=fsdp)
+                         moe_constraint=moe_constraint, donate=donate, fsdp=fsdp,
+                         topology=topology)
     if built is None:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "skipped": "long_500k requires sub-quadratic attention (DESIGN.md §4)"}
@@ -231,6 +235,8 @@ def main() -> None:
     ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--gossip", default="dense", choices=list(GOSSIP_MODES))
+    ap.add_argument("--topology", default="ring", choices=list(TOPOLOGIES),
+                    help="neighbor graph for --gossip graph/graph_ppermute")
     ap.add_argument("--rv", type=int, default=2)
     ap.add_argument("--dispatch", default="select", choices=list(DISPATCH_MODES))
     ap.add_argument("--momentum-dtype", default="float32",
@@ -249,7 +255,8 @@ def main() -> None:
                      gossip=args.gossip, rv=args.rv, dispatch=args.dispatch,
                      momentum_dtype=args.momentum_dtype, attn_remat=args.attn_remat,
                      window_slice=args.window_slice, moe_constraint=args.moe_constraint,
-                     donate=args.donate, fsdp=args.fsdp, label=args.label)
+                     donate=args.donate, fsdp=args.fsdp, label=args.label,
+                     topology=args.topology)
     line = json.dumps(report)
     print(line)
     if args.out:

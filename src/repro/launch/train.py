@@ -6,6 +6,13 @@
 Trains the (reduced) architecture with the HDO population on a
 synthetic LM stream, logging per-step metrics and checkpointing at the
 end.  ``--arch brackets`` trains the paper's Transformer-on-Dyck task.
+
+Gossip topologies: besides the paper's random pairing (``--gossip
+dense``), ``--gossip graph --topology {ring,torus,hypercube,
+erdos_renyi,tv_round_robin,tv_erdos_renyi}`` mixes with
+Metropolis–Hastings doubly-stochastic weights over a static neighbor
+graph (see ``repro.topology``); the step then also logs the spectral
+diagnostics (lambda_2, spectral gap, predicted Gamma contraction).
 """
 from __future__ import annotations
 
@@ -20,14 +27,22 @@ import numpy as np
 
 from repro import checkpoint
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.configs.base import HDOConfig, ZO_ESTIMATORS, ZO_IMPLS
+from repro.configs.base import (
+    GOSSIP_MODES,
+    HDOConfig,
+    TOPOLOGIES,
+    ZO_ESTIMATORS,
+    ZO_IMPLS,
+)
 from repro.core import build_hdo_step, consensus_distance, init_state
 from repro.data import AgentBatcher, brackets, synthetic
 from repro.models import build_model
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--steps", type=int, default=100)
@@ -38,8 +53,25 @@ def main() -> None:
                     help="ZO engine: pytree estimators vs the flat-parameter "
                          "fused Pallas path (O(d) HBM traffic per estimate)")
     ap.add_argument("--rv", type=int, default=4)
+    # choices derive from configs.base so the CLI can never drift from
+    # what HDOConfig.__post_init__ accepts (single-source rule); the
+    # ppermute lowerings are excluded because this driver builds no
+    # mesh — they are dryrun/TPU surfaces and would fail at step build
     ap.add_argument("--gossip", default="dense",
-                    choices=["dense", "rr_static", "all_reduce", "none"])
+                    choices=[g for g in GOSSIP_MODES if not g.endswith("_ppermute")],
+                    help="interaction step: paper's random pairing (dense), "
+                         "round-robin tournament, graph-topology weighted "
+                         "mixing, all_reduce, or none")
+    ap.add_argument("--topology", default="ring", choices=list(TOPOLOGIES),
+                    help="neighbor graph for --gossip graph/graph_ppermute "
+                         "(Metropolis–Hastings doubly-stochastic weights)")
+    ap.add_argument("--topology-p", type=float, default=0.3,
+                    help="Erdős–Rényi edge probability")
+    ap.add_argument("--topology-seed", type=int, default=0,
+                    help="seed for randomized topologies")
+    ap.add_argument("--topology-rounds", type=int, default=8,
+                    help="cycle length for tv_erdos_renyi (tv_round_robin "
+                         "always cycles its n-1 tournament rounds)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--batch", type=int, default=8)
@@ -57,6 +89,10 @@ def main() -> None:
         zo_impl=args.zo_impl,
         rv=args.rv,
         gossip=args.gossip,
+        topology=args.topology,
+        topology_p=args.topology_p,
+        topology_seed=args.topology_seed,
+        topology_rounds=args.topology_rounds,
         lr=args.lr,
         momentum=args.momentum,
         warmup_steps=min(50, args.steps // 5),
@@ -92,8 +128,11 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    gossip_desc = args.gossip + (
+        f"/{args.topology}" if args.gossip in ("graph", "graph_ppermute") else ""
+    )
     print(f"# arch={cfg.name} params={n_params/1e6:.2f}M agents={args.agents} "
-          f"(zo={args.zo}) estimator={args.estimator}/{args.zo_impl} gossip={args.gossip}")
+          f"(zo={args.zo}) estimator={args.estimator}/{args.zo_impl} gossip={gossip_desc}")
 
     step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params))
     state = init_state(params, hcfg)

@@ -1,0 +1,76 @@
+"""Graph-topology communication subsystem.
+
+Generalizes the paper's random-pairing interaction step to weighted
+mixing-matrix gossip over static (and time-varying) neighbor graphs:
+
+  * ``graphs``   — topology constructors (ring, torus, hypercube,
+                   Erdős–Rényi, time-varying variants) emitting
+                   Metropolis–Hastings doubly-stochastic weights with
+                   static neighbor tables;
+  * ``spectral`` — lambda_2 / spectral-gap diagnostics and the
+                   predicted per-round Gamma_t contraction;
+  * ``mixer``    — the ``Mixer`` interface ``build_hdo_step`` consumes
+                   (all legacy gossip modes + the graph modes and their
+                   shard_map/ppermute lowerings).
+
+See ``kernels/gossip_mix.py`` for the fused k-neighbor combine kernel.
+"""
+from repro.topology.graphs import (
+    TimeVaryingTopology,
+    Topology,
+    erdos_renyi,
+    hypercube,
+    make_topology,
+    matching_topology,
+    ring,
+    torus,
+    tv_erdos_renyi,
+    tv_round_robin,
+)
+from repro.topology.mixer import (
+    AllReduceMixer,
+    DenseMatchingMixer,
+    GraphMixer,
+    GraphPpermuteMixer,
+    IdentityMixer,
+    Mixer,
+    RRPpermuteMixer,
+    RoundRobinMixer,
+    TimeVaryingGraphMixer,
+    make_mixer,
+)
+from repro.topology.spectral import (
+    diagnostics,
+    mixing_eigenvalues,
+    predicted_contraction,
+    slem,
+    spectral_gap,
+)
+
+__all__ = [
+    "Topology",
+    "TimeVaryingTopology",
+    "ring",
+    "torus",
+    "hypercube",
+    "erdos_renyi",
+    "matching_topology",
+    "tv_round_robin",
+    "tv_erdos_renyi",
+    "make_topology",
+    "Mixer",
+    "IdentityMixer",
+    "AllReduceMixer",
+    "DenseMatchingMixer",
+    "RoundRobinMixer",
+    "GraphMixer",
+    "TimeVaryingGraphMixer",
+    "RRPpermuteMixer",
+    "GraphPpermuteMixer",
+    "make_mixer",
+    "mixing_eigenvalues",
+    "slem",
+    "spectral_gap",
+    "predicted_contraction",
+    "diagnostics",
+]

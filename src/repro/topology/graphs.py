@@ -1,0 +1,262 @@
+"""Graph topologies for weighted gossip (the paper's interaction step,
+generalized).
+
+The paper mixes with random disjoint pairings; any symmetric
+doubly-stochastic mixing matrix W contracts the consensus potential
+Gamma_t the same way, at a rate set by W's second-largest eigenvalue
+modulus (see ``repro.topology.spectral``).  This module builds the
+standard communication graphs and equips them with Metropolis–Hastings
+weights
+
+    W_ij = 1 / (1 + max(deg_i, deg_j))   for j in N(i),
+    W_ii = 1 - sum_j W_ij,
+
+which are symmetric doubly-stochastic for *any* undirected graph, so
+every topology here preserves the population mean exactly.
+
+A ``Topology`` stores a static padded neighbor table (``(n, k)``;
+nodes with fewer than k neighbors are padded with themselves at weight
+0) so the mixing step is a trace-time-constant gather — and, when
+every neighbor-table column is a permutation (ring / torus /
+hypercube by construction), a ``ppermute``-lowerable exchange.
+Time-varying topologies are a cycle of static rounds selected by step
+index, the same derandomization contract as ``rr_static``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.gossip import round_robin_schedule
+
+__all__ = [
+    "Topology",
+    "TimeVaryingTopology",
+    "ring",
+    "torus",
+    "hypercube",
+    "erdos_renyi",
+    "matching_topology",
+    "tv_round_robin",
+    "tv_erdos_renyi",
+    "make_topology",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A static undirected communication graph with MH mixing weights.
+
+    ``neighbors[i, s]`` is node i's s-th neighbor (slot order is
+    direction-structured for the lattice graphs, so columns are
+    permutations); ``weights[i, s]`` its mixing weight (0 on padded
+    self-slots); ``self_weight[i]`` = W_ii.
+    """
+
+    name: str
+    n: int
+    neighbors: np.ndarray  # (n, k) int32
+    weights: np.ndarray  # (n, k) float32
+    self_weight: np.ndarray  # (n,) float32
+
+    @property
+    def k(self) -> int:
+        return self.neighbors.shape[1]
+
+    def mixing_matrix(self) -> np.ndarray:
+        """Dense (n, n) float64 W — the analysis-side view."""
+        W = np.zeros((self.n, self.n), np.float64)
+        for i in range(self.n):
+            W[i, i] += float(self.self_weight[i])
+            for s in range(self.k):
+                W[i, int(self.neighbors[i, s])] += float(self.weights[i, s])
+        return W
+
+    def columns_are_permutations(self) -> bool:
+        """True when every neighbor slot is a global permutation — the
+        precondition for the shard_map/ppermute lowering."""
+        ar = np.arange(self.n)
+        return all(
+            np.array_equal(np.sort(self.neighbors[:, s]), ar)
+            for s in range(self.k)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeVaryingTopology:
+    """A cycle of static topologies selected by ``step % len(rounds)``."""
+
+    name: str
+    n: int
+    rounds: Tuple[Topology, ...]
+
+    @property
+    def cycle_len(self) -> int:
+        return len(self.rounds)
+
+
+def _mh_topology(name: str, n: int, nbr_lists: Sequence[Sequence[int]]) -> Topology:
+    """Builds a Topology from slot-ordered adjacency lists with
+    Metropolis–Hastings weights, padding ragged rows with self-loops at
+    weight 0."""
+    deg = np.array([len(nb) for nb in nbr_lists], np.int64)
+    if n > 1 and (deg == 0).any():
+        raise ValueError(f"{name}: isolated node (zero degree) in topology")
+    k = int(deg.max()) if n > 1 else 1
+    neighbors = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, k))
+    weights = np.zeros((n, k), np.float32)
+    for i, nbrs in enumerate(nbr_lists):
+        if len(set(nbrs)) != len(nbrs):
+            raise ValueError(f"{name}: duplicate neighbor in slot list of node {i}")
+        for s, j in enumerate(nbrs):
+            if j == i:
+                raise ValueError(f"{name}: self-loop listed as neighbor of node {i}")
+            neighbors[i, s] = j
+            weights[i, s] = 1.0 / (1.0 + max(int(deg[i]), int(deg[j])))
+    self_weight = (1.0 - weights.sum(axis=1)).astype(np.float32)
+    topo = Topology(name=name, n=n, neighbors=neighbors, weights=weights,
+                    self_weight=self_weight)
+    W = topo.mixing_matrix()
+    assert np.allclose(W, W.T), name
+    assert np.allclose(W.sum(axis=1), 1.0) and (W >= -1e-12).all(), name
+    return topo
+
+
+def ring(n: int) -> Topology:
+    """Cycle graph; slots are (left, right) shifts, so columns are
+    permutations.  n == 2 degenerates to the single-edge matching."""
+    if n < 2:
+        raise ValueError(f"ring needs n >= 2, got {n}")
+    if n == 2:
+        return _mh_topology("ring", 2, [[1], [0]])
+    return _mh_topology("ring", n, [[(i - 1) % n, (i + 1) % n] for i in range(n)])
+
+
+def _torus_dims(n: int) -> Tuple[int, int]:
+    r = int(np.sqrt(n))
+    while r >= 2:
+        if n % r == 0:
+            return r, n // r
+        r -= 1
+    raise ValueError(f"torus needs n = rows * cols with rows, cols >= 2, got n={n}")
+
+
+def torus(n: int, rows: int | None = None) -> Topology:
+    """2-D periodic lattice; slots are (up, down, left, right) shifts
+    (deduplicated when a dimension has length 2)."""
+    if rows is None:
+        rows, cols = _torus_dims(n)
+    else:
+        if rows < 2 or n % rows or n // rows < 2:
+            raise ValueError(f"torus: invalid rows={rows} for n={n}")
+        cols = n // rows
+    nbrs: List[List[int]] = []
+    for i in range(n):
+        r, c = divmod(i, cols)
+        cand = [
+            ((r - 1) % rows) * cols + c,
+            ((r + 1) % rows) * cols + c,
+            r * cols + (c - 1) % cols,
+            r * cols + (c + 1) % cols,
+        ]
+        seen: List[int] = []
+        for j in cand:
+            if j not in seen:
+                seen.append(j)
+        nbrs.append(seen)
+    return _mh_topology("torus", n, nbrs)
+
+
+def hypercube(n: int) -> Topology:
+    """log2(n)-dimensional hypercube; slot b flips bit b (an involution
+    permutation)."""
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"hypercube needs n a power of two >= 2, got {n}")
+    dim = n.bit_length() - 1
+    return _mh_topology("hypercube", n, [[i ^ (1 << b) for b in range(dim)] for i in range(n)])
+
+
+def erdos_renyi(n: int, p: float = 0.3, seed: int = 0, *,
+                require_connected: bool = True, max_tries: int = 100) -> Topology:
+    """G(n, p) random graph.  With ``require_connected`` the sample is
+    redrawn (seed+1, seed+2, ...) until connected — a disconnected W
+    has lambda_2 = 1 and never reaches consensus."""
+    if n < 2:
+        raise ValueError(f"erdos_renyi needs n >= 2, got {n}")
+    for attempt in range(max_tries):
+        rng = np.random.default_rng(seed + attempt)
+        upper = rng.random((n, n)) < p
+        adj = np.triu(upper, 1)
+        adj = adj | adj.T
+        if not require_connected or _connected(adj):
+            nbrs = [list(np.flatnonzero(adj[i])) for i in range(n)]
+            return _mh_topology("erdos_renyi", n, nbrs)
+    raise ValueError(
+        f"erdos_renyi(n={n}, p={p}): no connected sample in {max_tries} tries "
+        "(raise topology_p)"
+    )
+
+
+def _connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.flatnonzero(adj[i]):
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+def matching_topology(partner: np.ndarray, name: str = "matching") -> Topology:
+    """A perfect matching as a 1-regular graph.  MH weights give each
+    pair (1/2, 1/2) — exactly the paper's pairwise averaging."""
+    n = len(partner)
+    assert (partner[partner] == np.arange(n)).all(), "not an involution"
+    return _mh_topology(name, n, [[int(partner[i])] for i in range(n)])
+
+
+def tv_round_robin(n: int) -> TimeVaryingTopology:
+    """The round-robin tournament expressed as a time-varying graph:
+    round r is the matching rr_schedule[r], so this reproduces
+    ``rr_static``'s averaging semantics through the weighted-mixing
+    path.  The cycle length is structurally n - 1."""
+    if n % 2 or n < 2:
+        raise ValueError(f"tv_round_robin needs an even population, got n={n}")
+    sched = round_robin_schedule(n)
+    rounds = tuple(
+        matching_topology(sched[r], name=f"rr_match_{r}") for r in range(len(sched))
+    )
+    return TimeVaryingTopology(name="tv_round_robin", n=n, rounds=rounds)
+
+
+def tv_erdos_renyi(n: int, p: float = 0.3, seed: int = 0, rounds: int = 8) -> TimeVaryingTopology:
+    """A cycle of independent G(n, p) samples — randomized gossip with a
+    trace-time-static schedule."""
+    tops = tuple(
+        erdos_renyi(n, p, seed=seed + 1000 * r) for r in range(rounds)
+    )
+    return TimeVaryingTopology(name="tv_erdos_renyi", n=n, rounds=tops)
+
+
+def make_topology(name: str, n: int, *, p: float = 0.3, seed: int = 0,
+                  rounds: int = 8):
+    """Topology factory keyed by ``HDOConfig.topology``."""
+    if name == "ring":
+        return ring(n)
+    if name == "torus":
+        return torus(n)
+    if name == "hypercube":
+        return hypercube(n)
+    if name == "erdos_renyi":
+        return erdos_renyi(n, p, seed)
+    if name == "tv_round_robin":
+        return tv_round_robin(n)
+    if name == "tv_erdos_renyi":
+        return tv_erdos_renyi(n, p, seed, rounds)
+    raise ValueError(f"unknown topology {name!r}")

@@ -1,0 +1,379 @@
+"""The ``Mixer`` interface: one object per gossip scheme.
+
+``build_hdo_step`` used to string-dispatch the interaction step inline
+(with the ``rr_ppermute`` shard_map branch hard-coded in the step
+body); it now builds a single ``Mixer`` at trace-build time and calls
+``mixer(params, key=..., step=...)``.  Every pre-existing mode is an
+instance here with unchanged semantics (``dense`` is bit-identical:
+same ``sample_matching`` + ``mix_pairwise`` on the same key), and the
+graph-topology modes plug in through the same interface.
+
+Mixers over a static weighted graph (``GraphMixer`` and its
+shard_map/ppermute lowering ``GraphPpermuteMixer``) also expose
+spectral ``diagnostics()`` — lambda_2, spectral gap, and the predicted
+per-round Gamma contraction — which the step surfaces as training
+metrics next to ``consensus_distance``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.configs.base import HDOConfig
+from repro.core.gossip import (
+    mix_all_reduce,
+    mix_pairwise,
+    round_robin_schedule,
+    sample_matching,
+)
+from repro.kernels import ops
+from repro.topology import spectral
+from repro.topology.graphs import TimeVaryingTopology, Topology, make_topology
+
+PyTree = Any
+
+__all__ = [
+    "Mixer",
+    "shard_agent_index",
+    "IdentityMixer",
+    "AllReduceMixer",
+    "DenseMatchingMixer",
+    "RoundRobinMixer",
+    "GraphMixer",
+    "TimeVaryingGraphMixer",
+    "RRPpermuteMixer",
+    "GraphPpermuteMixer",
+    "make_mixer",
+]
+
+
+class Mixer:
+    """params (leading axis n_agents), PRNG key, step index -> params.
+
+    Must preserve the population mean; ``diagnostics()`` returns static
+    floats merged into the step's metrics (empty when no closed-form
+    rate exists, e.g. random matchings).
+    """
+
+    def __call__(self, params: PyTree, *, key, step) -> PyTree:
+        raise NotImplementedError
+
+    def diagnostics(self) -> Dict[str, float]:
+        return {}
+
+
+class IdentityMixer(Mixer):
+    """No communication (``none`` / single-agent populations)."""
+
+    def __call__(self, params, *, key, step):
+        return params
+
+    def diagnostics(self):
+        return {"gossip_lambda2": 1.0, "gossip_spectral_gap": 0.0,
+                "gossip_gamma_contraction": 1.0}
+
+
+class AllReduceMixer(Mixer):
+    """Full population mean every round (W = 11^T/n, lambda_2 = 0)."""
+
+    def __call__(self, params, *, key, step):
+        return mix_all_reduce(params)
+
+    def diagnostics(self):
+        return {"gossip_lambda2": 0.0, "gossip_spectral_gap": 1.0,
+                "gossip_gamma_contraction": 0.0}
+
+
+class DenseMatchingMixer(Mixer):
+    """Paper-faithful random disjoint pairing, sampled in-trace.
+
+    Bit-identical to the pre-Mixer inline path: identical primitives on
+    the identical key.  No static diagnostics — the matching is random
+    (E[contraction] = 1/2 for even n, but per-round W has slem 1).
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __call__(self, params, *, key, step):
+        return mix_pairwise(params, sample_matching(key, self.n))
+
+
+class RoundRobinMixer(Mixer):
+    """``rr_static``: lax.switch over the n-1 tournament matchings —
+    each branch's partner table is a trace-time constant."""
+
+    def __init__(self, n: int):
+        if n % 2:
+            raise ValueError(f"rr_static needs an even population, got n={n}")
+        self.n = n
+        self.schedule = round_robin_schedule(n)
+
+    def __call__(self, params, *, key, step):
+        branches = [
+            (lambda p, _r=r: mix_pairwise(p, jnp.asarray(self.schedule[_r])))
+            for r in range(len(self.schedule))
+        ]
+        return jax.lax.switch(step % (self.n - 1), branches, params)
+
+
+class GraphMixer(Mixer):
+    """Weighted mixing over a static topology: X <- W X via a
+    trace-time-constant neighbor gather, f32 accumulation.
+
+    ``use_kernel=True`` routes each leaf (raveled per agent) through
+    the fused ``gossip_mix`` Pallas kernel instead of the jnp
+    weighted-sum.  Note the gather still materializes the (n, k, d)
+    neighbor copy here — this path fuses only the combine; the full
+    one-O(d)-pass traffic story is ``GraphPpermuteMixer``, where the
+    k neighbor buffers arrive shard-local over ICI and feed the kernel
+    directly.
+    """
+
+    def __init__(self, topo: Topology, *, use_kernel: bool = False):
+        self.topo = topo
+        self.use_kernel = use_kernel
+        self._nbr = jnp.asarray(topo.neighbors)
+        self._w = jnp.asarray(topo.weights)
+        self._w_self = jnp.asarray(topo.self_weight)
+
+    def __call__(self, params, *, key, step):
+        return jax.tree.map(self._mix_leaf, params)
+
+    def _mix_leaf(self, x):
+        n, k = self._nbr.shape
+        gathered = jnp.take(x, self._nbr.reshape(-1), axis=0).reshape(
+            (n, k) + x.shape[1:]
+        )
+        if self.use_kernel:
+            flat = x.reshape(n, -1)
+            nbrs = gathered.reshape(n, k, -1)
+            out = jax.vmap(ops.gossip_mix)(flat, nbrs, self._w_self, self._w)
+            return out.reshape(x.shape)
+        tail = (1,) * (x.ndim - 1)
+        acc = self._w_self.reshape((n,) + tail) * x.astype(jnp.float32)
+        acc = acc + (
+            self._w.reshape((n, k) + tail) * gathered.astype(jnp.float32)
+        ).sum(axis=1)
+        return acc.astype(x.dtype)
+
+    def diagnostics(self):
+        return spectral.diagnostics(self.topo)
+
+
+class TimeVaryingGraphMixer(Mixer):
+    """Cycles a static list of graph rounds by step index (lax.switch,
+    the same derandomization contract as ``rr_static``)."""
+
+    def __init__(self, topo: TimeVaryingTopology, *, use_kernel: bool = False):
+        self.topo = topo
+        self._rounds = [GraphMixer(t, use_kernel=use_kernel) for t in topo.rounds]
+
+    def __call__(self, params, *, key, step):
+        branches = [
+            (lambda p, _m=m: _m(p, key=None, step=None)) for m in self._rounds
+        ]
+        return jax.lax.switch(step % len(self._rounds), branches, params)
+
+    def diagnostics(self):
+        return spectral.diagnostics(self.topo)
+
+
+def _pop_axes_size(mesh, population_axes) -> Tuple[Tuple[str, ...], int]:
+    pop_axes = tuple(a for a in population_axes if a in mesh.shape)
+    pop_size = 1
+    for a in pop_axes:
+        pop_size *= mesh.shape[a]
+    return pop_axes, pop_size
+
+
+def shard_agent_index(mesh, pop_axes, n_local: int = 1):
+    """Global index of this shard's first agent inside a shard_map over
+    ``pop_axes`` (row-major over the axis tuple, matching the
+    ``P(pop_axes)`` population sharding).  Shared by the graph-gossip
+    ppermute lowering and ``build_hdo_step``'s shard_cond dispatch so
+    the two linearizations can never drift apart."""
+    idx = jnp.int32(0)
+    stride = n_local
+    for a in reversed(pop_axes):
+        idx = idx + jax.lax.axis_index(a) * stride
+        stride = stride * mesh.shape[a]
+    return idx
+
+
+class RRPpermuteMixer(Mixer):
+    """TPU-native round-robin: each agent exchanges ONLY with its round
+    partner over ICI (collective-permute) instead of gathering the
+    whole population.  Needs one agent per population shard."""
+
+    def __init__(self, n: int, mesh, population_axes):
+        if mesh is None:
+            raise ValueError("rr_ppermute needs a mesh")
+        if n % 2:
+            raise ValueError(f"rr_ppermute needs an even population, got n={n}")
+        pop_axes, pop_size = _pop_axes_size(mesh, population_axes)
+        if n != pop_size:
+            raise ValueError(
+                f"rr_ppermute needs one agent per population shard "
+                f"(n={n}, shards={pop_size})"
+            )
+        self.n = n
+        self.mesh = mesh
+        self.pop_axes = pop_axes
+        self.rr_table = round_robin_schedule(n)
+
+    def __call__(self, params, *, key, step):
+        n = self.n
+        axis = self.pop_axes if len(self.pop_axes) > 1 else self.pop_axes[0]
+        from jax.sharding import PartitionSpec as P
+
+        def gossip_shard(p_l, t_l):
+            def round_branch(r):
+                perm = [(i, int(self.rr_table[r][i])) for i in range(n)]
+
+                def b(p):
+                    partner = jax.tree.map(
+                        lambda x: jax.lax.ppermute(x, axis_name=axis, perm=perm), p
+                    )
+                    return jax.tree.map(
+                        lambda a_, b_: (
+                            (a_.astype(jnp.float32) + b_.astype(jnp.float32)) * 0.5
+                        ).astype(a_.dtype),
+                        p,
+                        partner,
+                    )
+
+                return b
+
+            return jax.lax.switch(
+                t_l % (n - 1), [round_branch(r) for r in range(n - 1)], p_l
+            )
+
+        pspec = P(axis)
+        return compat.shard_map(
+            gossip_shard,
+            mesh=self.mesh,
+            in_specs=(pspec, P()),
+            out_specs=pspec,
+            axis_names=set(self.pop_axes),
+            check_vma=False,
+        )(params, step)
+
+
+class GraphPpermuteMixer(Mixer):
+    """shard_map/ppermute lowering of ``GraphMixer`` for topologies
+    whose neighbor-table columns are permutations (ring / torus /
+    hypercube): one point-to-point exchange per neighbor slot, then the
+    per-agent weighted combine — through the ``gossip_mix`` kernel when
+    ``use_kernel`` is set."""
+
+    def __init__(self, topo: Topology, mesh, population_axes, *,
+                 use_kernel: bool = False):
+        if mesh is None:
+            raise ValueError("graph_ppermute needs a mesh")
+        if not topo.columns_are_permutations():
+            raise ValueError(
+                f"graph_ppermute needs permutation neighbor columns; "
+                f"topology {topo.name!r} is irregular — use gossip='graph'"
+            )
+        pop_axes, pop_size = _pop_axes_size(mesh, population_axes)
+        if topo.n != pop_size:
+            raise ValueError(
+                f"graph_ppermute needs one agent per population shard "
+                f"(n={topo.n}, shards={pop_size})"
+            )
+        self.topo = topo
+        self.mesh = mesh
+        self.pop_axes = pop_axes
+        self.use_kernel = use_kernel
+
+    def __call__(self, params, *, key, step):
+        topo = self.topo
+        n, k = topo.n, topo.k
+        axis = self.pop_axes if len(self.pop_axes) > 1 else self.pop_axes[0]
+        w = jnp.asarray(topo.weights)
+        w_self = jnp.asarray(topo.self_weight)
+        from jax.sharding import PartitionSpec as P
+
+        def gossip_shard(p_l):
+            idx = shard_agent_index(self.mesh, self.pop_axes)
+            w_i = w[idx]  # (k,)
+            ws_i = w_self[idx]
+            recvs = []
+            for s in range(k):
+                perm = [(int(topo.neighbors[j, s]), j) for j in range(n)]
+                recvs.append(jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, axis_name=axis, perm=perm), p_l
+                ))
+
+            def combine(x, *nbrs):
+                if self.use_kernel:
+                    out = ops.gossip_mix(
+                        x.reshape(-1),
+                        jnp.stack([b.reshape(-1) for b in nbrs]),
+                        ws_i, w_i,
+                    )
+                    return out.reshape(x.shape)
+                acc = ws_i * x.astype(jnp.float32)
+                for s in range(k):
+                    acc = acc + w_i[s] * nbrs[s].astype(jnp.float32)
+                return acc.astype(x.dtype)
+
+            return jax.tree.map(combine, p_l, *recvs)
+
+        pspec = P(axis)
+        return compat.shard_map(
+            gossip_shard,
+            mesh=self.mesh,
+            in_specs=(pspec,),
+            out_specs=pspec,
+            axis_names=set(self.pop_axes),
+            check_vma=False,
+        )(params)
+
+    def diagnostics(self):
+        return spectral.diagnostics(self.topo)
+
+
+def make_mixer(cfg: HDOConfig, *, mesh=None, population_axes: Tuple[str, ...] = (),
+               use_kernel: Optional[bool] = None) -> Mixer:
+    """Builds the Mixer for ``cfg.gossip`` (+ topology knobs).
+
+    ``use_kernel`` routes the graph mixers' combine through the fused
+    ``gossip_mix`` Pallas kernel; default off the kernel is used on TPU
+    only (the jnp path is the interpret-friendly oracle elsewhere).
+    """
+    n = cfg.n_agents
+    if cfg.gossip == "none" or n == 1:
+        return IdentityMixer()
+    if cfg.gossip == "all_reduce":
+        return AllReduceMixer()
+    if cfg.gossip == "dense":
+        return DenseMatchingMixer(n)
+    if cfg.gossip == "rr_static":
+        return RoundRobinMixer(n)
+    if cfg.gossip == "rr_ppermute":
+        return RRPpermuteMixer(n, mesh, population_axes)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if cfg.gossip in ("graph", "graph_ppermute"):
+        topo = make_topology(
+            cfg.topology, n, p=cfg.topology_p, seed=cfg.topology_seed,
+            rounds=cfg.topology_rounds,
+        )
+        if cfg.gossip == "graph_ppermute":
+            if isinstance(topo, TimeVaryingTopology):
+                raise ValueError(
+                    "graph_ppermute supports static topologies only; "
+                    f"got time-varying {topo.name!r}"
+                )
+            return GraphPpermuteMixer(topo, mesh, population_axes,
+                                      use_kernel=use_kernel)
+        if isinstance(topo, TimeVaryingTopology):
+            return TimeVaryingGraphMixer(topo, use_kernel=use_kernel)
+        return GraphMixer(topo, use_kernel=use_kernel)
+    raise ValueError(f"unknown gossip mode {cfg.gossip!r}")

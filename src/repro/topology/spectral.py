@@ -1,0 +1,92 @@
+"""Spectral diagnostics for gossip mixing matrices.
+
+For a symmetric doubly-stochastic W applied to the stacked population
+X (one agent per row), the deviation from the mean evolves as
+
+    X_{t+1} - 1 mu = (W - 11^T/n) (X_t - 1 mu),
+
+so the consensus potential Gamma_t = (1/n) ||X_t - 1 mu||_F^2
+contracts per gossip round by (asymptotically exactly, for generic X)
+
+    Gamma_{t+1} / Gamma_t -> slem(W)^2,
+
+where slem is the second-largest eigenvalue *modulus* (the spectral
+radius of W restricted to the consensus-orthogonal subspace).  These
+are the numbers ``build_hdo_step`` surfaces as training metrics next
+to ``consensus_distance``, and the prediction the empirical tests in
+``tests/test_topology.py`` validate against measured Gamma_t.
+
+For a time-varying cycle W_0, ..., W_{L-1} the per-cycle deviation
+operator is M = (W_{L-1} - J) ... (W_0 - J) (J = 11^T/n); we report
+the per-round geometric mean ||M||_2^(2/L) as the predicted
+contraction.  A single matching round has slem = 1 (it only averages
+within pairs), yet the full cycle can contract strongly — the
+per-cycle norm captures that.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+from repro.topology.graphs import TimeVaryingTopology, Topology
+
+__all__ = [
+    "mixing_eigenvalues",
+    "slem",
+    "spectral_gap",
+    "predicted_contraction",
+    "diagnostics",
+]
+
+AnyTopology = Union[Topology, TimeVaryingTopology]
+
+
+def mixing_eigenvalues(topo: Topology) -> np.ndarray:
+    """Eigenvalues of W, descending (W symmetric => real)."""
+    return np.linalg.eigvalsh(topo.mixing_matrix())[::-1]
+
+
+def _deviation_norm(topo: Topology) -> float:
+    """||W - J||_2 on the full space == slem on the 1-orthogonal
+    subspace (J = 11^T/n is W's projection onto the consensus line)."""
+    n = topo.n
+    M = topo.mixing_matrix() - np.ones((n, n)) / n
+    return float(np.linalg.norm(M, 2))
+
+
+def slem(topo: AnyTopology) -> float:
+    """Second-largest eigenvalue modulus of W (per-round, for
+    time-varying: geometric mean over the cycle of the product norm)."""
+    if isinstance(topo, TimeVaryingTopology):
+        return float(_cycle_norm(topo) ** (1.0 / topo.cycle_len))
+    return _deviation_norm(topo)
+
+
+def _cycle_norm(topo: TimeVaryingTopology) -> float:
+    n = topo.n
+    J = np.ones((n, n)) / n
+    M = np.eye(n)
+    for t in topo.rounds:  # round 0 applied first => left-multiplied first
+        M = (t.mixing_matrix() - J) @ M
+    return float(np.linalg.norm(M, 2))
+
+
+def spectral_gap(topo: AnyTopology) -> float:
+    """1 - slem: the consensus-rate figure of merit (bigger = faster)."""
+    return 1.0 - slem(topo)
+
+
+def predicted_contraction(topo: AnyTopology) -> float:
+    """Predicted asymptotic per-round Gamma_{t+1}/Gamma_t (= slem^2)."""
+    return slem(topo) ** 2
+
+
+def diagnostics(topo: AnyTopology) -> dict:
+    """The metric dict ``build_hdo_step`` merges into training metrics."""
+    s = slem(topo)
+    return {
+        "gossip_lambda2": s,
+        "gossip_spectral_gap": 1.0 - s,
+        "gossip_gamma_contraction": s * s,
+    }

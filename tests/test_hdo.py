@@ -109,7 +109,13 @@ def test_config_validation_rejects_typos():
     with pytest.raises(ValueError):
         HDOConfig(dispatch="shard")
     with pytest.raises(ValueError):
-        HDOConfig(gossip="ring")
+        HDOConfig(gossip="ring")  # ring is a topology, not a gossip mode
+    with pytest.raises(ValueError):
+        HDOConfig(topology="rng")
+    with pytest.raises(ValueError):
+        HDOConfig(topology_p=0.0)
+    with pytest.raises(ValueError):
+        HDOConfig(topology_rounds=0)
     with pytest.raises(ValueError):
         HDOConfig(momentum_dtype="bf16")
     with pytest.raises(ValueError):

@@ -132,6 +132,68 @@ def test_gossip_avg_sweep(dtype):
         )
 
 
+@pytest.mark.parametrize("d", [100, 8191, 12345, 50001])
+def test_gossip_avg_raw_kernel_tail_padding(d):
+    """The raw kernel (not just the ops wrapper) accepts any d — the
+    d % BLOCK hard-assert is gone; padding lives in the kernel module
+    like the ZO kernels."""
+    from repro.kernels import gossip_avg as _gossip
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    out = _gossip.gossip_avg(x, y, interpret=True)
+    assert out.shape == (d,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.gossip_avg_ref(x, y)),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("d", [8192, 12345, 24576, 50001])
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix_bit_exact_vs_ref(d, k, dtype):
+    """ops.gossip_mix == ref.gossip_mix_ref bit-for-bit across block
+    boundaries, non-aligned tails, degrees, and dtypes.
+
+    Neighbor weights are powers of two (the hypercube/matching MH
+    weights), so every product is exactly representable and LLVM FMA
+    contraction — which varies with fusion clustering between the two
+    compiled graphs — cannot change the rounding.
+    """
+    x = jax.random.normal(jax.random.PRNGKey(d + k), (d,), dtype)
+    nbrs = jax.random.normal(jax.random.PRNGKey(d + k + 1), (k, d), dtype)
+    w = jnp.asarray([2.0 ** -(s % 3 + 2) for s in range(k)])
+    w_self = 1.0 - float(w.sum())
+    out = ops.gossip_mix(x, nbrs, w_self, w)
+    exp = jax.jit(ref.gossip_mix_ref)(x, nbrs, w_self, w)
+    assert out.shape == (d,) and out.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(exp, np.float32))
+
+
+@pytest.mark.parametrize("d", [8192, 20000])
+@pytest.mark.parametrize("k", [3, 5])
+def test_gossip_mix_generic_weights_close(d, k):
+    """Generic (non-dyadic) weights: parity to 1 ulp (FMA contraction
+    may differ between the separately-compiled graphs on CPU)."""
+    key = jax.random.PRNGKey(k)
+    x = jax.random.normal(key, (d,))
+    nbrs = jax.random.normal(jax.random.fold_in(key, 1), (k, d))
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (k,)) * (0.9 / k)
+    w_self = 1.0 - float(w.sum())
+    out = ops.gossip_mix(x, nbrs, w_self, w)
+    exp = jax.jit(ref.gossip_mix_ref)(x, nbrs, w_self, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_gossip_mix_generalizes_gossip_avg():
+    """k=1 with (1/2, 1/2) weights is exactly the pairwise average."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (20000,))
+    y = jax.random.normal(jax.random.PRNGKey(6), (20000,))
+    mix = ops.gossip_mix(x, y[None], 0.5, jnp.asarray([0.5]))
+    avg = ops.gossip_avg(x, y)
+    np.testing.assert_allclose(np.asarray(mix), np.asarray(avg), atol=1e-7)
+
+
 @pytest.mark.parametrize("shape", [(1, 64, 2, 16, 8), (2, 128, 3, 32, 16), (1, 256, 1, 8, 32)])
 @pytest.mark.parametrize("chunk", [32, 64])
 def test_ssd_scan_sweep(shape, chunk):

@@ -10,6 +10,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro import topology as topolib
+from repro.configs.base import HDOConfig
 from repro.core import estimators, flatzo, gossip
 from repro.core.schedules import warmup_cosine
 from repro.kernels.rng import counter_normal
@@ -113,6 +115,55 @@ def test_round_robin_is_tournament(n):
         assert (p != np.arange(n)).all()
         met |= {(min(i, int(p[i])), max(i, int(p[i]))) for i in range(n)}
     assert len(met) == n * (n - 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# graph-topology gossip invariants (repro.topology)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.sampled_from([2, 4, 6, 8, 9, 12, 16]),
+    family=st.sampled_from(["ring", "torus", "hypercube", "erdos_renyi"]),
+    seed=st.integers(0, 2**10),
+)
+@settings(max_examples=25, deadline=None)
+def test_topology_mixing_matrix_symmetric_doubly_stochastic(n, family, seed):
+    """Metropolis–Hastings weights are symmetric doubly-stochastic and
+    nonnegative for every graph family, size, and random sample."""
+    if family == "hypercube" and (n & (n - 1)):
+        n = 8
+    if family == "torus" and n in (2, 4, 7, 9):
+        n = 12
+    topo = topolib.make_topology(family, n, p=0.5, seed=seed)
+    W = topo.mixing_matrix()
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-6)
+    assert (W >= 0).all()
+    # second eigenvalue strictly inside the unit disc => consensus
+    assert topolib.slem(topo) < 1.0 - 1e-9
+
+
+@given(
+    n=st.sampled_from([4, 6, 8, 12]),
+    gossip_mode=st.sampled_from(["dense", "rr_static", "all_reduce", "none", "graph"]),
+    topo=st.sampled_from(["ring", "erdos_renyi", "tv_round_robin"]),
+    seed=st.integers(0, 2**16),
+    step=st.integers(0, 30),
+    shape=st.sampled_from([(3,), (4, 5), (2, 3, 2)]),
+)
+@settings(max_examples=25, deadline=None)
+def test_every_mixer_preserves_population_mean(n, gossip_mode, topo, seed, step, shape):
+    """Every Mixer — legacy modes and graph topologies — is
+    doubly-stochastic mixing: the population mean never moves."""
+    cfg = HDOConfig(n_agents=n, n_zeroth=0, gossip=gossip_mode, topology=topo,
+                    topology_p=0.6, topology_rounds=3)
+    mixer = topolib.make_mixer(cfg)
+    X = {"w": jax.random.normal(jax.random.PRNGKey(seed), (n,) + shape)}
+    Y = mixer(X, key=jax.random.PRNGKey(seed + 1), step=jnp.int32(step))
+    np.testing.assert_allclose(np.asarray(Y["w"].mean(0)), np.asarray(X["w"].mean(0)),
+                               atol=1e-5)
 
 
 @given(

@@ -1,0 +1,376 @@
+"""Graph-topology subsystem: mixing-matrix invariants, Mixer
+equivalences, and the spectral-prediction-vs-measured-Gamma contract.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import topology as topolib
+from repro.configs.base import TOPOLOGIES, HDOConfig
+from repro.core import build_hdo_step, consensus_distance, gossip, init_state
+from repro.core.hdo import HDOState
+
+# (the hypothesis property-test versions of the invariants below live
+# in tests/test_properties.py, which skips gracefully when hypothesis
+# is absent; this file stays deterministic and always runs)
+
+
+def _static_topologies(n: int):
+    out = [topolib.ring(n), topolib.erdos_renyi(n, 0.5, seed=1)]
+    if n >= 4 and not (n & (n - 1)):
+        out.append(topolib.hypercube(n))
+    try:
+        out.append(topolib.torus(n))
+    except ValueError:
+        pass
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mixing-matrix invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 4, 6, 8, 9, 12, 16])
+def test_mixing_matrices_symmetric_doubly_stochastic(n):
+    """Metropolis–Hastings weights give a symmetric doubly-stochastic,
+    nonnegative W for every topology family and size."""
+    for topo in _static_topologies(n):
+        W = topo.mixing_matrix()
+        np.testing.assert_allclose(W, W.T, atol=1e-12, err_msg=topo.name)
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6, err_msg=topo.name)
+        np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-6, err_msg=topo.name)
+        assert (W >= 0).all(), topo.name
+
+
+@pytest.mark.parametrize("n", [4, 6, 8, 10, 16])
+def test_tv_topologies_symmetric_doubly_stochastic(n):
+    for tv in (topolib.tv_round_robin(n), topolib.tv_erdos_renyi(n, 0.5, seed=0, rounds=3)):
+        for topo in tv.rounds:
+            W = topo.mixing_matrix()
+            np.testing.assert_allclose(W, W.T, atol=1e-12)
+            np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_lattice_columns_are_permutations():
+    """Ring/torus/hypercube neighbor tables are slot-structured so each
+    column is a permutation — the graph_ppermute precondition."""
+    for topo in (topolib.ring(8), topolib.torus(12), topolib.hypercube(16),
+                 topolib.ring(2), topolib.torus(8)):
+        assert topo.columns_are_permutations(), topo.name
+
+
+def test_erdos_renyi_connected_and_deterministic():
+    a = topolib.erdos_renyi(12, 0.3, seed=5)
+    b = topolib.erdos_renyi(12, 0.3, seed=5)
+    np.testing.assert_array_equal(a.neighbors, b.neighbors)
+    # connectivity: lambda_2 strictly below 1
+    assert topolib.slem(a) < 1.0 - 1e-9
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        topolib.hypercube(6)
+    with pytest.raises(ValueError):
+        topolib.torus(7)  # prime: no rows*cols >= 2x2
+    with pytest.raises(ValueError):
+        topolib.ring(1)
+    with pytest.raises(ValueError):
+        topolib.tv_round_robin(5)  # tournament needs an even population
+    with pytest.raises(ValueError):
+        topolib.make_topology("petersen", 10)
+
+
+# ---------------------------------------------------------------------------
+# spectral diagnostics
+# ---------------------------------------------------------------------------
+
+
+def test_slem_closed_forms():
+    """Ring: eigs (1 + 2 cos(2 pi k / n)) / 3; hypercube (k-regular):
+    (1 + k - 2m) / (k + 1)."""
+    n = 12
+    # f32 weight storage: closed forms match to f32 eps, not f64
+    assert topolib.slem(topolib.ring(n)) == pytest.approx(
+        (1 + 2 * np.cos(2 * np.pi / n)) / 3, abs=1e-6
+    )
+    assert topolib.slem(topolib.hypercube(8)) == pytest.approx(0.5, abs=1e-6)
+    t = topolib.ring(n)
+    assert topolib.predicted_contraction(t) == pytest.approx(
+        topolib.slem(t) ** 2, abs=1e-12
+    )
+    assert topolib.spectral_gap(t) == pytest.approx(1 - topolib.slem(t), abs=1e-12)
+
+
+def test_tv_round_robin_contracts_as_a_cycle():
+    """A single matching has slem 1, but the tournament cycle contracts
+    (per-round geometric mean < 1)."""
+    tv = topolib.tv_round_robin(8)
+    single = topolib.slem(tv.rounds[0])
+    assert single == pytest.approx(1.0, abs=1e-9)
+    assert topolib.slem(tv) < 0.9
+
+
+# ---------------------------------------------------------------------------
+# Mixer invariants (old modes and new topologies)
+# ---------------------------------------------------------------------------
+
+
+def _make_params(key, n):
+    return {
+        "w": jax.random.normal(key, (n, 7, 3)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 5)),
+    }
+
+
+def _all_mixers(n):
+    cfgs = [HDOConfig(n_agents=n, n_zeroth=0, gossip=g)
+            for g in ("dense", "all_reduce", "none")]
+    if n % 2 == 0:
+        cfgs.append(HDOConfig(n_agents=n, n_zeroth=0, gossip="rr_static"))
+    for topo in TOPOLOGIES:
+        if topo == "hypercube" and (n & (n - 1) or n < 2):
+            continue
+        if topo == "torus":
+            try:
+                topolib.torus(n)
+            except ValueError:
+                continue
+        if topo == "tv_round_robin" and n % 2:
+            continue
+        cfgs.append(HDOConfig(n_agents=n, n_zeroth=0, gossip="graph",
+                              topology=topo, topology_p=0.5, topology_rounds=3))
+    return [(c.gossip if c.gossip != "graph" else f"graph/{c.topology}",
+             topolib.make_mixer(c)) for c in cfgs]
+
+
+@pytest.mark.parametrize("n,seed,step", [(4, 0, 0), (6, 1, 3), (8, 2, 7),
+                                         (12, 3, 11), (16, 4, 20)])
+def test_every_mixer_preserves_population_mean(n, seed, step):
+    """The load-balancing invariant (Lemma 2) extends to every Mixer:
+    doubly-stochastic mixing cannot move the population mean."""
+    X = _make_params(jax.random.PRNGKey(seed), n)
+    for name, mixer in _all_mixers(n):
+        Y = mixer(X, key=jax.random.PRNGKey(seed + 1), step=jnp.int32(step))
+        for k in X:
+            np.testing.assert_allclose(
+                np.asarray(Y[k].mean(0)), np.asarray(X[k].mean(0)),
+                atol=1e-5, err_msg=f"{name}/{k}",
+            )
+
+
+@pytest.mark.parametrize("n,seed", [(4, 0), (8, 1), (12, 2)])
+def test_graph_mixer_is_matrix_application(n, seed):
+    """GraphMixer == W @ X (f64 reference), for every static family."""
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, 6))
+    for topo in _static_topologies(n):
+        mixer = topolib.GraphMixer(topo)
+        got = mixer({"x": X}, key=None, step=None)["x"]
+        exp = topo.mixing_matrix() @ np.asarray(X, np.float64)
+        np.testing.assert_allclose(np.asarray(got), exp, atol=1e-5,
+                                   err_msg=topo.name)
+
+
+def test_graph_mixer_kernel_path_matches_jnp():
+    """use_kernel=True routes leaves through the fused gossip_mix
+    Pallas kernel — same mixing, one O(d) pass."""
+    topo = topolib.torus(12)
+    X = _make_params(jax.random.PRNGKey(3), 12)
+    a = topolib.GraphMixer(topo, use_kernel=False)(X, key=None, step=None)
+    b = topolib.GraphMixer(topo, use_kernel=True)(X, key=None, step=None)
+    for k in X:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]), atol=1e-6)
+
+
+def test_tv_round_robin_matches_rr_static():
+    """The tournament-as-time-varying-graph reproduces rr_static's
+    pairwise averaging (MH weights on a matching are exactly 1/2)."""
+    n = 8
+    mr = topolib.RoundRobinMixer(n)
+    mt = topolib.TimeVaryingGraphMixer(topolib.tv_round_robin(n))
+    X = _make_params(jax.random.PRNGKey(9), n)
+    for s in range(n - 1):
+        a = mr(X, key=None, step=jnp.int32(s))
+        b = mt(X, key=None, step=jnp.int32(s))
+        for k in X:
+            np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                       atol=1e-6, err_msg=f"round {s}")
+
+
+def test_make_mixer_validation():
+    with pytest.raises(ValueError):
+        topolib.make_mixer(HDOConfig(n_agents=5, n_zeroth=0, gossip="rr_static"))
+    with pytest.raises(ValueError):  # ppermute lowerings need a mesh
+        topolib.make_mixer(HDOConfig(n_agents=4, n_zeroth=0, gossip="rr_ppermute"))
+    with pytest.raises(ValueError):
+        topolib.make_mixer(HDOConfig(n_agents=4, n_zeroth=0, gossip="graph_ppermute"))
+    # n == 1 degrades to no-op for every mode
+    m = topolib.make_mixer(HDOConfig(n_agents=1, n_zeroth=0, gossip="dense"))
+    assert isinstance(m, topolib.IdentityMixer)
+
+
+# ---------------------------------------------------------------------------
+# the refactored step: bit-identity and end-to-end behaviour
+# ---------------------------------------------------------------------------
+
+D = 16
+W_TRUE = jax.random.normal(jax.random.PRNGKey(42), (D,))
+
+
+def _loss_fn(params, batch):
+    return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+
+
+def _batches(key, n, bsz=8):
+    X = jax.random.normal(key, (n, bsz, D))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def test_dense_step_bit_identical_to_pre_refactor():
+    """The Mixer refactor must not change the paper-faithful dense path
+    by a single bit: a gossip="none" step followed by the pre-refactor
+    ``gossip.gossip_step`` primitive on the step's gossip key must equal
+    the gossip="dense" step exactly."""
+    base = dict(n_agents=8, n_zeroth=4, lr=0.05, momentum=0.9, warmup_steps=0,
+                use_cosine=False, rv=2, nu=1e-3)
+    cfg_d = HDOConfig(gossip="dense", **base)
+    cfg_n = HDOConfig(gossip="none", **base)
+    state0 = init_state({"w": jnp.zeros((D,))}, cfg_d)
+    batches = _batches(jax.random.PRNGKey(3), 8)
+    s_d, _ = jax.jit(build_hdo_step(_loss_fn, cfg_d, param_dim=D))(state0, batches)
+    s_n, _ = jax.jit(build_hdo_step(_loss_fn, cfg_n, param_dim=D))(state0, batches)
+    gkey = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg_d.seed), jnp.int32(0)), 7
+    )
+    expected = gossip.gossip_step(s_n.params, mode="dense", key=gkey,
+                                  step=jnp.int32(0), n=8)
+    np.testing.assert_array_equal(np.asarray(expected["w"]),
+                                  np.asarray(s_d.params["w"]))
+
+
+def test_graph_gossip_population_converges():
+    cfg = HDOConfig(n_agents=8, n_zeroth=4, gossip="graph", topology="hypercube",
+                    lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False,
+                    rv=4, nu=1e-3)
+    step = jax.jit(build_hdo_step(_loss_fn, cfg, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    for t in range(150):
+        state, m = step(state, _batches(jax.random.fold_in(jax.random.PRNGKey(9), t), 8))
+    Xe = jax.random.normal(jax.random.PRNGKey(5), (256, D))
+    mu = state.params["w"].mean(0)
+    assert float(jnp.mean((Xe @ mu - Xe @ W_TRUE) ** 2)) < 1e-2
+    assert float(consensus_distance(state.params)) < 1e-2
+
+
+def test_spectral_metrics_surface_in_step():
+    cfg = HDOConfig(n_agents=8, n_zeroth=4, gossip="graph", topology="ring",
+                    lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False,
+                    rv=1, nu=1e-3)
+    step = jax.jit(build_hdo_step(_loss_fn, cfg, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    _, m = step(state, _batches(jax.random.PRNGKey(0), 8))
+    topo = topolib.ring(8)
+    assert float(m["gossip_lambda2"]) == pytest.approx(topolib.slem(topo), abs=1e-6)
+    assert float(m["gossip_spectral_gap"]) == pytest.approx(
+        topolib.spectral_gap(topo), abs=1e-6)
+    assert float(m["gossip_gamma_contraction"]) == pytest.approx(
+        topolib.predicted_contraction(topo), abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: measured Gamma contraction == spectral prediction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo_name,n,kw", [
+    ("ring", 12, {}),
+    ("torus", 12, {}),
+    ("erdos_renyi", 12, dict(topology_p=0.45, topology_seed=3)),
+    ("hypercube", 16, {}),
+])
+def test_measured_gamma_contraction_matches_spectral_prediction(topo_name, n, kw):
+    """On a quadratic task with lr=0 (pure interaction), the measured
+    per-round Gamma_t ratio through the full jitted HDO step converges
+    to the topology module's predicted slem^2 — the consensus half of
+    the paper's convergence bound, validated per topology."""
+    cfg = HDOConfig(n_agents=n, n_zeroth=n // 2, gossip="graph", topology=topo_name,
+                    lr=0.0, momentum=0.0, warmup_steps=0, use_cosine=False,
+                    rv=1, nu=1e-3, **kw)
+    step = jax.jit(build_hdo_step(_loss_fn, cfg, param_dim=D))
+    st = init_state({"w": jnp.zeros((D,))}, cfg)
+    # diverse start so Gamma_0 > 0 (init_state replicates one point)
+    st = HDOState(params={"w": jax.random.normal(jax.random.PRNGKey(7), (n, D))},
+                  momentum=st.momentum, step=st.step)
+    gammas = []
+    for t in range(17):
+        st, _ = step(st, _batches(jax.random.fold_in(jax.random.PRNGKey(1), t), n, 4))
+        gammas.append(float(consensus_distance(st.params)))
+    g = np.array(gammas)
+    assert g[-1] > 1e-18, "Gamma hit the float noise floor; shorten the run"
+    # rounds 9..17: transient modes (lambda_3 and below) have decayed,
+    # asymptotic ratio is slem^2
+    measured = np.exp(np.mean(np.log(g[9:] / g[8:-1])))
+    topo = topolib.make_topology(topo_name, n, p=kw.get("topology_p", 0.3),
+                                 seed=kw.get("topology_seed", 0))
+    predicted = topolib.predicted_contraction(topo)
+    assert measured == pytest.approx(predicted, rel=0.05), (topo_name, measured, predicted)
+
+
+# ---------------------------------------------------------------------------
+# shard_map/ppermute lowering parity (multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_graph_ppermute_parity_subprocess():
+    """graph_ppermute == graph on a multi-device population, for both
+    the jnp combine and the fused gossip_mix kernel combine."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.topology as T
+        from repro.configs.base import HDOConfig
+        from repro.core import build_hdo_step, init_state
+        mesh = jax.make_mesh((8,), ("data",))
+        n, d = 8, 12
+        w_true = jax.random.normal(jax.random.PRNGKey(42), (d,))
+        def loss_fn(params, batch):
+            return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+        topo = T.hypercube(n)
+        X = {"w": jax.random.normal(jax.random.PRNGKey(1), (n, 5))}
+        exp = T.GraphMixer(topo)(X, key=None, step=None)
+        for use_kernel in (False, True):
+            pm = T.GraphPpermuteMixer(topo, mesh, ("data",), use_kernel=use_kernel)
+            got = jax.jit(lambda p: pm(p, key=None, step=None))(X)
+            np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(exp["w"]),
+                                       atol=1e-6, err_msg=str(use_kernel))
+        outs = {}
+        for mode in ("graph", "graph_ppermute"):
+            cfg = HDOConfig(n_agents=n, n_zeroth=4, gossip=mode, topology="hypercube",
+                            lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False,
+                            rv=2, nu=1e-3)
+            step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=d, mesh=mesh,
+                                          population_axes=("data",)))
+            state = init_state({"w": jnp.zeros((d,))}, cfg)
+            for t in range(20):
+                k = jax.random.fold_in(jax.random.PRNGKey(9), t)
+                Xb = jax.random.normal(k, (n, 8, d))
+                state, m = step(state, {"X": Xb, "y": Xb @ w_true})
+            outs[mode] = np.asarray(state.params["w"])
+        np.testing.assert_allclose(outs["graph"], outs["graph_ppermute"], atol=1e-5)
+        print("GRAPH_PPERMUTE_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=420, env=env, cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "GRAPH_PPERMUTE_OK" in proc.stdout
