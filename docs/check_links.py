@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's markdown files.
+
+  python docs/check_links.py [root]
+
+Walks every ``*.md`` under the root (default: the repo root, i.e. the
+parent of this file's directory), extracts inline markdown links, and
+verifies that each *relative* target exists on disk (anchors stripped).
+``http(s):``/``mailto:`` links are skipped — the docs lane runs
+offline.  Exit 1 with one line per broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def iter_md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if fn.endswith(".md"):
+                yield os.path.join(dirpath, fn)
+
+
+def check(root: str) -> list[str]:
+    errors = []
+    for path in sorted(iter_md_files(root)):
+        text = open(path, encoding="utf-8").read()
+        # fenced code blocks routinely contain `foo(bar)` pseudo-links
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):  # URL scheme
+                continue
+            if target.startswith("#"):  # in-page anchor
+                continue
+            rel = target.split("#", 1)[0]
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, root)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = sum(1 for _ in iter_md_files(root))
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

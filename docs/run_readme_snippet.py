@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Extract and execute the README quickstart snippet (the fenced python
+block between the ``quickstart-snippet`` markers).
+
+  PYTHONPATH=src python docs/run_readme_snippet.py [README.md]
+
+Run by the CI docs lane so the snippet in the README is a tested
+program, not prose; ``tests/test_docs.py`` compile-checks it in tier-1
+without paying the execution cost.
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+BEGIN = "<!-- quickstart-snippet:begin -->"
+END = "<!-- quickstart-snippet:end -->"
+
+
+def extract(path: str = "README.md") -> str:
+    with open(path) as f:
+        text = f.read()
+    start, end = text.find(BEGIN), text.find(END)
+    if start < 0 or end < 0 or end < start:
+        raise SystemExit(f"{path}: quickstart-snippet markers not found")
+    section = text[start + len(BEGIN):end]
+    m = re.search(r"```python\n(.*?)```", section, re.DOTALL)
+    if m is None:
+        raise SystemExit(f"{path}: no fenced python block inside the markers")
+    return m.group(1)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "README.md"
+    code = extract(path)
+    print(f"# executing {len(code.splitlines())}-line snippet from {path}",
+          flush=True)
+    exec(compile(code, f"{path}:quickstart-snippet", "exec"), {"__name__": "__main__"})
+    print("# snippet OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -203,6 +203,21 @@ class HDOConfig:
     rv: int = 4  # random vectors per ZO estimate
     nu: float = 1e-4  # smoothing radius (paper: nu = eta / sqrt(d))
     nu_from_lr: bool = False  # if True use nu = lr / sqrt(d) per Theorem 1
+    # -- heterogeneous populations (the paper's central setting: noisy /
+    #    possibly-biased ZO agents with *different* oracles coexisting) --
+    # Per-agent overrides of the scalar knobs above.  ``sigmas`` / ``rvs``
+    # / ``estimators_zo`` describe the ZO cohort (length ``n_zeroth``,
+    # agents 0..n0-1); ``lrs`` covers the whole population (length
+    # ``n_agents``).  ``None`` means "homogeneous: every agent uses the
+    # scalar knob".  ``core/population.py`` resolves these into the
+    # stacked per-agent tables consumed by ``build_hdo_step``; a fully
+    # uniform override is collapsed back onto the homogeneous path, so
+    # all-equal values are bit-identical to not setting them (pinned by
+    # tests/test_population.py).
+    sigmas: Optional[Tuple[float, ...]] = None  # per-ZO-agent smoothing radius
+    rvs: Optional[Tuple[int, ...]] = None  # per-ZO-agent random-vector count
+    lrs: Optional[Tuple[float, ...]] = None  # per-agent base learning rate
+    estimators_zo: Optional[Tuple[str, ...]] = None  # per-ZO-agent kind (mixed)
     # ZO estimator implementation:
     #   "tree"  — pytree estimators (tree_normal materializes each
     #             Gaussian u_r: O(rv*d) extra HBM traffic per estimate);
@@ -284,6 +299,48 @@ class HDOConfig:
             )
         if self.rv < 1:
             raise ValueError(f"rv must be >= 1, got {self.rv}")
+        self._check_per_agent_knobs()
+
+    def _check_per_agent_knobs(self) -> None:
+        # normalize lists -> tuples so the frozen config stays hashable
+        for name in ("sigmas", "rvs", "lrs", "estimators_zo"):
+            v = getattr(self, name)
+            if v is not None and not isinstance(v, tuple):
+                object.__setattr__(self, name, tuple(v))
+
+        def check_len(name, vals, want, cohort):
+            if len(vals) != want:
+                raise ValueError(
+                    f"{name} must have one entry per {cohort} "
+                    f"({want}), got {len(vals)}"
+                )
+
+        if self.estimators_zo is not None:
+            check_len("estimators_zo", self.estimators_zo, self.n_zeroth, "ZO agent")
+            for k in self.estimators_zo:
+                if k not in ZO_ESTIMATORS:
+                    raise ValueError(
+                        f"estimators_zo entries must be one of {ZO_ESTIMATORS}, "
+                        f"got {k!r}"
+                    )
+        if self.sigmas is not None:
+            check_len("sigmas", self.sigmas, self.n_zeroth, "ZO agent")
+            if any(s <= 0 for s in self.sigmas):
+                raise ValueError(f"sigmas must all be > 0, got {self.sigmas}")
+            if self.nu_from_lr:
+                raise ValueError(
+                    "sigmas conflicts with nu_from_lr=True (Theorem-1 derives "
+                    "the smoothing radius from the learning rate; use lrs for "
+                    "per-agent heterogeneity instead)"
+                )
+        if self.rvs is not None:
+            check_len("rvs", self.rvs, self.n_zeroth, "ZO agent")
+            if any(r < 1 for r in self.rvs):
+                raise ValueError(f"rvs must all be >= 1, got {self.rvs}")
+        if self.lrs is not None:
+            check_len("lrs", self.lrs, self.n_agents, "agent")
+            if any(lr <= 0 for lr in self.lrs):
+                raise ValueError(f"lrs must all be > 0, got {self.lrs}")
 
     @property
     def n_first(self) -> int:

@@ -16,6 +16,7 @@ from repro.core.hdo import (
     tree_stack_broadcast,
     zo_mask,
 )
+from repro.core.population import KindGroup, Population, resolve_population
 from repro.core.schedules import constant, warmup_cosine
 
 __all__ = [
@@ -34,6 +35,9 @@ __all__ = [
     "init_state",
     "tree_stack_broadcast",
     "zo_mask",
+    "KindGroup",
+    "Population",
+    "resolve_population",
     "constant",
     "warmup_cosine",
 ]

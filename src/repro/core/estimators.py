@@ -63,20 +63,29 @@ def zo_estimate(
     kind: str = "multi_rv",
     rv: int = 4,
     nu: float = 1e-4,
+    rv_actual=None,
 ) -> Tuple[jnp.ndarray, PyTree]:
-    """Zeroth-order estimate: (loss_at_x_or_primal, grad_estimate)."""
+    """Zeroth-order estimate: (loss_at_x_or_primal, grad_estimate).
+
+    ``rv_actual`` (optional, may be traced) enables ragged-``rv``
+    heterogeneous cohorts: the scan still runs the static ``rv`` draws
+    (a uniform program across a vmapped group), but draws ``r >=
+    rv_actual`` contribute zero and the average is over ``rv_actual``.
+    Ignored by the single-draw kinds (``biased_1pt`` / ``biased_2pt``).
+    """
     if kind == "fwd_grad":
-        return _fwd_grad(loss_fn, params, key, rv)
+        return _fwd_grad(loss_fn, params, key, rv, rv_actual=rv_actual)
     if kind == "biased_1pt":
         return _finite_diff(loss_fn, params, key, 1, nu, two_point=False)
     if kind == "biased_2pt":
         return _finite_diff(loss_fn, params, key, 1, nu, two_point=True)
     if kind == "multi_rv":
-        return _finite_diff(loss_fn, params, key, rv, nu, two_point=True)
+        return _finite_diff(loss_fn, params, key, rv, nu, two_point=True,
+                            rv_actual=rv_actual)
     raise ValueError(kind)
 
 
-def _finite_diff(loss_fn, params, key, rv, nu, *, two_point):
+def _finite_diff(loss_fn, params, key, rv, nu, *, two_point, rv_actual=None):
     loss0 = loss_fn(params)
 
     def body(acc, r):
@@ -87,20 +96,25 @@ def _finite_diff(loss_fn, params, key, rv, nu, *, two_point):
             coeff = (lp - lm) / (2.0 * nu)
         else:
             coeff = (lp - loss0) / nu
+        if rv_actual is not None:
+            coeff = jnp.where(r < rv_actual, coeff, 0.0)
         acc = jax.tree.map(
             lambda a, ui: a + coeff * ui.astype(jnp.float32), acc, u
         )
         return acc, None
 
     acc, _ = jax.lax.scan(body, tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32), params)), jnp.arange(rv))
-    g = jax.tree.map(lambda a, p: (a / rv).astype(p.dtype), acc, params)
+    denom = rv if rv_actual is None else jnp.asarray(rv_actual, jnp.float32)
+    g = jax.tree.map(lambda a, p: (a / denom).astype(p.dtype), acc, params)
     return loss0, g
 
 
-def _fwd_grad(loss_fn, params, key, rv):
+def _fwd_grad(loss_fn, params, key, rv, *, rv_actual=None):
     def body(acc, r):
         u = tree_normal(jax.random.fold_in(key, r), params)
         primal, jvp = jax.jvp(loss_fn, (params,), (u,))
+        if rv_actual is not None:
+            jvp = jnp.where(r < rv_actual, jvp, 0.0)
         acc = jax.tree.map(lambda a, ui: a + jvp * ui.astype(jnp.float32), acc, u)
         return acc, primal
 
@@ -109,5 +123,6 @@ def _fwd_grad(loss_fn, params, key, rv):
         tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32), params)),
         jnp.arange(rv),
     )
-    g = jax.tree.map(lambda a, p: (a / rv).astype(p.dtype), acc, params)
+    denom = rv if rv_actual is None else jnp.asarray(rv_actual, jnp.float32)
+    g = jax.tree.map(lambda a, p: (a / denom).astype(p.dtype), acc, params)
     return primals[0], g

@@ -56,6 +56,16 @@ def seed_from_key(key) -> jnp.ndarray:
     return (jax.random.bits(key, dtype=jnp.uint32) >> 1).astype(jnp.int32)
 
 
+def _mask_coeffs(coeffs, rv_actual):
+    """Zero the padded draws of a ragged-rv agent; returns (coeffs,
+    n_active) ready for ``zo_combine``'s denominator operand."""
+    if rv_actual is None:
+        return coeffs, None
+    n_draws = coeffs.shape[0]
+    live = jnp.arange(n_draws) < rv_actual
+    return jnp.where(live, coeffs, 0.0), jnp.asarray(rv_actual, jnp.float32)
+
+
 def flat_zo_estimate(
     loss_fn: LossFn,
     params: PyTree,
@@ -64,23 +74,34 @@ def flat_zo_estimate(
     kind: str = "multi_rv",
     rv: int = 4,
     nu: float = 1e-4,
+    rv_actual=None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """Fused zeroth-order estimate: (loss_at_x, grad_estimate).
 
     Drop-in for ``estimators.zo_estimate`` on the finite-difference
     kinds; ``key`` seeds the counter RNG instead of ``jax.random``.
+
+    ``rv_actual`` (optional, may be traced) is the ragged-rv support
+    for heterogeneous cohorts: the scan runs the static ``rv`` draws
+    (one uniform program per vmapped kind group, padded to the group's
+    ``rv_max``), excess coefficients are zeroed, and ``zo_combine``
+    averages over ``rv_actual`` via its denominator operand — the
+    kernels stay one O(d) pass.  Ignored by the single-draw kinds.
     """
     if kind not in FUSED_KINDS:
         raise ValueError(f"fused ZO engine supports {FUSED_KINDS}, got {kind!r}")
     if kind == "fwd_grad":
-        return flat_fwd_grad(loss_fn, params, key, rv=rv, interpret=interpret)
+        return flat_fwd_grad(loss_fn, params, key, rv=rv, rv_actual=rv_actual,
+                             interpret=interpret)
     flat, unravel = ravel_pytree(params)
     d = flat.shape[0]
     seed = seed_from_key(key)
     nu = jnp.asarray(nu, jnp.float32)
     two_point = kind in ("biased_2pt", "multi_rv")
     n_draws = rv if kind == "multi_rv" else 1
+    if kind != "multi_rv":
+        rv_actual = None  # single-draw kinds have nothing to mask
 
     loss0 = loss_fn(params)
     flat_loss = lambda v: loss_fn(unravel(v))
@@ -95,7 +116,9 @@ def flat_zo_estimate(
         return None, c.astype(jnp.float32)
 
     _, coeffs = jax.lax.scan(coeff, None, jnp.arange(n_draws))
-    g_flat = ops.zo_combine(coeffs, seed, d, out_dtype=flat.dtype, interpret=interpret)
+    coeffs, n_active = _mask_coeffs(coeffs, rv_actual)
+    g_flat = ops.zo_combine(coeffs, seed, d, n_active=n_active,
+                            out_dtype=flat.dtype, interpret=interpret)
     return loss0, unravel(g_flat)
 
 
@@ -105,6 +128,7 @@ def flat_fwd_grad(
     key,
     *,
     rv: int = 4,
+    rv_actual=None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """Fused unbiased forward-gradient estimate: (loss_at_x, grad_estimate).
@@ -128,5 +152,7 @@ def flat_fwd_grad(
         return None, (primal, jvp.astype(jnp.float32))
 
     _, (primals, coeffs) = jax.lax.scan(draw, None, jnp.arange(rv))
-    g_flat = ops.zo_combine(coeffs, seed, d, out_dtype=flat.dtype, interpret=interpret)
+    coeffs, n_active = _mask_coeffs(coeffs, rv_actual)
+    g_flat = ops.zo_combine(coeffs, seed, d, n_active=n_active,
+                            out_dtype=flat.dtype, interpret=interpret)
     return primals[0], unravel(g_flat)

@@ -21,9 +21,11 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro import compat
 from repro.configs.base import HDOConfig
-from repro.core import estimators, flatzo, schedules
+from repro.core import estimators, flatzo, population, schedules
 
 PyTree = Any
 
@@ -92,13 +94,36 @@ def build_hdo_step(
     (HLO conditionals are dynamic).  The shard_map gossip lowerings
     (``gossip="rr_ppermute"`` / ``"graph_ppermute"``) need the same two
     arguments plus one agent per population shard.
+
+    Heterogeneous populations (``cfg.sigmas`` / ``rvs`` / ``lrs`` /
+    ``estimators_zo``, see ``core/population.py``) run a grouped
+    variant of the select/split machinery: ZO agents are grouped by
+    estimator kind, each group padded to its ``rv_max`` draw count with
+    masked excess draws, and per-group gradient-estimate variance is
+    logged as ``grad_var_zo_<kind>`` / ``grad_var_fo`` metrics.
+    ``dispatch="shard_cond"`` requires a homogeneous cohort; an
+    all-equal per-agent override collapses onto the homogeneous path
+    bit-identically (tests/test_population.py).
     """
     # deferred: topology depends on core.gossip's primitives, so a
     # module-level import here would cycle through repro.core.__init__
     from repro.topology.mixer import make_mixer, shard_agent_index
 
     n = cfg.n_agents
-    sched = schedules.warmup_cosine(cfg.lr, cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine)
+    # per-agent sigma/rv/lr tables + estimator-kind groups; a fully
+    # uniform population collapses onto the scalar path below, which is
+    # what pins "all-equal per-agent values == homogeneous" bit-exactly
+    pop = population.resolve_population(cfg)
+    if not pop.homogeneous and cfg.dispatch == "shard_cond":
+        raise ValueError(
+            "dispatch='shard_cond' needs a homogeneous ZO cohort (one "
+            "estimator kind, uniform sigma/rv/lr); use 'select' or 'split' "
+            "for heterogeneous populations"
+        )
+    sched = schedules.warmup_cosine(
+        pop.lr0 if pop.homogeneous else cfg.lr,
+        cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine,
+    )
     is_zo = zo_mask(cfg)
     mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes)
     mixer_metrics = {
@@ -111,25 +136,109 @@ def build_hdo_step(
     # every estimator kind has a fused form (fwd_grad since the
     # zo_tangent kernel landed) — "fused" never falls back to the tree
     use_fused = cfg.zo_impl == "fused"
+    zo_engine = flatzo.flat_zo_estimate if use_fused else estimators.zo_estimate
 
     def per_agent_zo(params_i, batch_i, key_i, nu):
-        if use_fused:
-            return flatzo.flat_zo_estimate(
-                lambda p: loss_fn(p, batch_i),
-                params_i,
-                key_i,
-                kind=cfg.estimator_zo,
-                rv=cfg.rv,
-                nu=nu,
-            )
-        return estimators.zo_estimate(
+        return zo_engine(
             lambda p: loss_fn(p, batch_i),
             params_i,
             key_i,
-            kind=cfg.estimator_zo,
-            rv=cfg.rv,
+            kind=pop.kind0,
+            rv=pop.rv0,
             nu=nu,
         )
+
+    # -- heterogeneous cohort machinery (trace-time constants; only
+    #    built when the population is genuinely heterogeneous) ----------
+    if pop.homogeneous:
+        lr_rel = sigma_tab = rv_tab = None
+    else:
+        if cfg.lr <= 0:
+            raise ValueError(
+                "heterogeneous lrs scale the shared schedule, which is "
+                f"anchored at cfg.lr — cfg.lr must be > 0, got {cfg.lr}"
+            )
+        # per-agent lr enters as a scale on the shared schedule shape:
+        # lr_i(t) = sched(t) * lrs[i] / cfg.lr
+        lr_rel = jnp.asarray(pop.lr_array() / np.float32(cfg.lr))
+        sigma_tab = jnp.asarray(pop.sigma_array())
+        rv_tab = jnp.asarray(pop.rv_array())
+
+    def zo_for_kind(kind, rv_max):
+        """Uniform program for one kind group, padded to rv_max draws;
+        agents with rv_i < rv_max mask the excess (rv_actual)."""
+        def f(params_i, batch_i, key_i, nu_i, rv_i):
+            return zo_engine(
+                lambda p: loss_fn(p, batch_i), params_i, key_i,
+                kind=kind, rv=rv_max, nu=nu_i, rv_actual=rv_i,
+            )
+        return f
+
+    def het_split(params, batches, agent_keys, nu_vec):
+        """Grouped "split" dispatch: each kind group computes ONLY its
+        own estimator on a static gather of its agents, then the parts
+        are reassembled through the static inverse permutation."""
+        n0 = cfg.n_zeroth
+        order, loss_parts, g_parts = [], [], []
+        for grp in pop.groups:
+            idx = np.asarray(grp.indices)
+            take = lambda t, _i=idx: jax.tree.map(lambda x: x[_i], t)
+            l_k, g_k = jax.vmap(zo_for_kind(grp.kind, grp.rv_max))(
+                take(params), take(batches), agent_keys[idx],
+                nu_vec[idx], rv_tab[idx],
+            )
+            order += list(grp.indices)
+            loss_parts.append(l_k)
+            g_parts.append(g_k)
+        if cfg.n_first:
+            tail = lambda t: jax.tree.map(lambda x: x[n0:], t)
+            l_fo, g_fo = jax.vmap(per_agent_fo)(tail(params), tail(batches))
+            order += list(range(n0, n))
+            loss_parts.append(l_fo)
+            g_parts.append(g_fo)
+        inv = np.argsort(np.asarray(order))
+        g = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0)[inv], *g_parts)
+        losses = jnp.concatenate(loss_parts)[inv]
+        return losses, g
+
+    def het_select(params, batches, agent_keys, nu_vec):
+        """Grouped "select" dispatch (paper-faithful uniform program):
+        every kind group runs over the WHOLE anonymous population and
+        its agents are masked in via ``_select_tree`` — 1 + n_groups
+        full passes, the price of SPMD uniformity."""
+        n0 = cfg.n_zeroth
+        if cfg.n_first > 0:
+            losses, g = jax.vmap(per_agent_fo)(params, batches)
+        else:
+            losses = jnp.zeros((n,), jnp.float32)
+            g = jax.tree.map(jnp.zeros_like, params)
+        # pad the ZO tables over the FO rows (masked out; the pad values
+        # only need to keep the arithmetic finite)
+        pad = jnp.ones((n - n0,), jnp.float32)
+        nu_full = jnp.concatenate([nu_vec, pad])
+        rv_full = jnp.concatenate([rv_tab, pad])
+        for grp in pop.groups:
+            l_k, g_k = jax.vmap(zo_for_kind(grp.kind, grp.rv_max))(
+                params, batches, agent_keys, nu_full, rv_full
+            )
+            mask = np.zeros((n,), bool)
+            mask[list(grp.indices)] = True
+            mask = jnp.asarray(mask)
+            g = _select_tree(mask, g_k, g)
+            losses = jnp.where(mask, l_k, losses)
+        return losses, g
+
+    def subset_var(tree, idx):
+        """Per-group gradient-estimate variance: (1/|G|) sum_{i in G}
+        ||g_i - mean_G||^2 over the flattened estimates."""
+        idx = np.asarray(list(idx))
+
+        def v(x):
+            xs = x[idx].astype(jnp.float32)
+            mu = xs.mean(0, keepdims=True)
+            return jnp.sum((xs - mu) ** 2) / idx.size
+
+        return sum(jax.tree.leaves(jax.tree.map(v, tree)))
 
     def step(state: HDOState, batches) -> Tuple[HDOState, Dict[str, jnp.ndarray]]:
         t = state.step
@@ -138,14 +247,26 @@ def build_hdo_step(
         nu = (
             lr / jnp.sqrt(jnp.float32(param_dim))
             if (cfg.nu_from_lr and param_dim)
-            else jnp.float32(cfg.nu)
+            else jnp.float32(pop.sigma0)
         )
+        lr_vec = None if pop.homogeneous else lr * lr_rel  # (n,)
 
         agent_keys = jax.random.split(key, n)
 
         # ---- local estimates -------------------------------------------
         n0 = cfg.n_zeroth
-        if n == 1:
+        if not pop.homogeneous:
+            # heterogeneous cohort: per-agent (sigma, rv, lr), possibly
+            # mixed estimator kinds — grouped select/split dispatch
+            if cfg.nu_from_lr and param_dim:
+                nu_vec = lr_vec[:n0] / jnp.sqrt(jnp.float32(param_dim))
+            else:
+                nu_vec = sigma_tab
+            if cfg.dispatch == "split":
+                losses, g = het_split(state.params, batches, agent_keys, nu_vec)
+            else:
+                losses, g = het_select(state.params, batches, agent_keys, nu_vec)
+        elif n == 1:
             # single-agent population (e.g. llama4 pod-population on the
             # single-pod mesh): skip vmap so inner shard_map layers (the
             # expert-parallel MoE path) remain top-level collectives.
@@ -241,11 +362,18 @@ def build_hdo_step(
             new_mom = state.momentum
             upd = jax.tree.map(lambda gi: gi.astype(jnp.float32), g)
 
-        new_params = jax.tree.map(
-            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
-            state.params,
-            upd,
-        )
+        if pop.homogeneous:
+            new_params = jax.tree.map(
+                lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                state.params,
+                upd,
+            )
+        else:
+            def upd_leaf(p, u):
+                lrb = lr_vec.reshape((n,) + (1,) * (p.ndim - 1))
+                return (p.astype(jnp.float32) - lrb * u).astype(p.dtype)
+
+            new_params = jax.tree.map(upd_leaf, state.params, upd)
 
         # ---- gossip (the Mixer interaction step) ----------------------
         gkey = jax.random.fold_in(key, 7)
@@ -261,6 +389,14 @@ def build_hdo_step(
             metrics["loss_fo_mean"] = losses[cfg.n_zeroth :].mean()
         if cfg.n_zeroth:
             metrics["loss_zo_mean"] = losses[: cfg.n_zeroth].mean()
+        if not pop.homogeneous:
+            # per-group gradient-estimate variance — the heterogeneity
+            # diagnostics next to consensus_distance (high-sigma /
+            # low-rv groups show up as high-variance estimators)
+            for grp in pop.groups:
+                metrics[f"grad_var_zo_{grp.kind}"] = subset_var(g, grp.indices)
+            if cfg.n_first:
+                metrics["grad_var_fo"] = subset_var(g, range(n0, n))
         return HDOState(params=new_params, momentum=new_mom, step=t + 1), metrics
 
     if donate:

@@ -1,0 +1,139 @@
+"""Per-agent resolution of heterogeneous HDO populations.
+
+The paper's analysis is about *heterogeneous* cohorts — noisy,
+possibly-biased ZO agents with different oracles coexisting with FO
+agents — but the scalar ``HDOConfig`` knobs (``estimator_zo`` /
+``sigma``-as-``nu`` / ``rv`` / ``lr``) describe one uniform ZO cohort.
+This module turns the optional per-agent overrides (``cfg.sigmas``,
+``cfg.rvs``, ``cfg.lrs``, ``cfg.estimators_zo``) into the static
+per-agent tables ``build_hdo_step`` consumes:
+
+  * every per-agent knob is defaulted from its scalar counterpart when
+    the override is ``None``;
+  * ZO agents are grouped by estimator kind (``KindGroup``), each group
+    carrying the *static* padded draw count ``rv_max`` — agents with a
+    smaller ``rv`` run the same program and mask their excess draws
+    (``rv_actual`` threading through the estimators down to the
+    ``zo_combine`` kernel's denominator operand);
+  * a fully uniform population is collapsed back onto the homogeneous
+    scalar path (``homogeneous=True`` + the ``kind0``/``sigma0``/
+    ``rv0``/``lr0`` effective scalars), which pins the contract that
+    all-equal per-agent values are *bit-identical* to not setting them.
+
+Everything here is trace-time-static (plain Python / numpy): the
+resolved tables become constants of the jitted step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple, TypeVar
+
+import numpy as np
+
+from repro.configs.base import HDOConfig
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class KindGroup:
+    """One estimator-kind cohort inside the ZO population."""
+
+    kind: str
+    indices: Tuple[int, ...]  # global agent indices (subset of 0..n0-1)
+    rv_max: int  # static draw count the whole group is padded to
+
+
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """Static per-agent tables resolved from an ``HDOConfig``.
+
+    ``kinds`` / ``sigmas`` / ``rvs`` have length ``n_zeroth`` (the ZO
+    cohort, agents 0..n0-1); ``lrs`` has length ``n_agents``.
+    """
+
+    n_agents: int
+    n_zeroth: int
+    kinds: Tuple[str, ...]
+    sigmas: Tuple[float, ...]
+    rvs: Tuple[int, ...]
+    lrs: Tuple[float, ...]
+    homogeneous: bool
+    groups: Tuple[KindGroup, ...]
+    # effective scalars for the homogeneous (collapsed) path — fall back
+    # to the config scalars when the ZO cohort is empty
+    kind0: str
+    sigma0: float
+    rv0: int
+    lr0: float
+
+    # -- per-agent tables as arrays ------------------------------------
+    def sigma_array(self) -> np.ndarray:
+        return np.asarray(self.sigmas, np.float32)
+
+    def rv_array(self) -> np.ndarray:
+        return np.asarray(self.rvs, np.float32)
+
+    def lr_array(self) -> np.ndarray:
+        return np.asarray(self.lrs, np.float32)
+
+
+def resolve_population(cfg: HDOConfig) -> Population:
+    """Fill per-agent defaults from the scalar knobs and group by kind."""
+    n, n0 = cfg.n_agents, cfg.n_zeroth
+    kinds = cfg.estimators_zo if cfg.estimators_zo is not None else (cfg.estimator_zo,) * n0
+    sigmas = cfg.sigmas if cfg.sigmas is not None else (cfg.nu,) * n0
+    rvs = cfg.rvs if cfg.rvs is not None else (cfg.rv,) * n0
+    lrs = cfg.lrs if cfg.lrs is not None else (cfg.lr,) * n
+
+    homogeneous = (
+        len(set(kinds)) <= 1
+        and len(set(sigmas)) <= 1
+        and len(set(rvs)) <= 1
+        and len(set(lrs)) <= 1
+    )
+
+    groups = []
+    for kind in dict.fromkeys(kinds):  # first-seen order, unique
+        idx = tuple(i for i in range(n0) if kinds[i] == kind)
+        groups.append(KindGroup(kind=kind, indices=idx,
+                                rv_max=max(rvs[i] for i in idx)))
+
+    return Population(
+        n_agents=n, n_zeroth=n0, kinds=tuple(kinds), sigmas=tuple(sigmas),
+        rvs=tuple(rvs), lrs=tuple(lrs), homogeneous=homogeneous,
+        groups=tuple(groups),
+        kind0=kinds[0] if n0 else cfg.estimator_zo,
+        sigma0=sigmas[0] if n0 else cfg.nu,
+        rv0=rvs[0] if n0 else cfg.rv,
+        lr0=lrs[0],
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI helpers (shared by launch/train.py and launch/dryrun.py so the two
+# drivers parse the per-agent CSV flags identically)
+# ---------------------------------------------------------------------------
+
+
+def parse_csv(spec: Optional[str], cast: Callable[[str], T]) -> Optional[Tuple[T, ...]]:
+    """``"a,b,c"`` -> ``(cast(a), cast(b), cast(c))``; None passes through.
+
+    An empty segment (``"1e-3,,0.1"``) is an error, not silently
+    dropped — ``tile`` would otherwise cycle a shorter pattern than the
+    user wrote.
+    """
+    if spec is None:
+        return None
+    parts = [v.strip() for v in spec.split(",")]
+    if not parts or any(not v for v in parts):
+        raise ValueError(f"empty value in per-agent CSV spec {spec!r}")
+    return tuple(cast(v) for v in parts)
+
+
+def tile(vals: Optional[Sequence[T]], n: int) -> Optional[Tuple[T, ...]]:
+    """Cycle ``vals`` to length ``n`` (CLI ergonomics: ``--sigmas
+    1e-3,1e-1`` alternates over the cohort; a single value broadcasts)."""
+    if vals is None:
+        return None
+    return tuple(vals[i % len(vals)] for i in range(n))

@@ -33,10 +33,12 @@ def _pad_to_block(x):
 
 
 @partial(jax.jit, static_argnames=("d", "out_dtype", "interpret"))
-def zo_combine(coeffs, seed, d: int, out_dtype=jnp.float32, interpret: bool | None = None):
+def zo_combine(coeffs, seed, d: int, out_dtype=jnp.float32,
+               interpret: bool | None = None, n_active=None):
     interpret = _interpret_default() if interpret is None else interpret
     dp = d + ((-d) % BLOCK)
-    out = _zo.zo_combine(coeffs, seed, dp, out_dtype=out_dtype, interpret=interpret)
+    out = _zo.zo_combine(coeffs, seed, dp, n_active=n_active,
+                         out_dtype=out_dtype, interpret=interpret)
     return out[:d]
 
 

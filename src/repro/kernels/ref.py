@@ -8,10 +8,12 @@ from repro.kernels.rng import counter_normal
 from repro.models.mamba2 import ssd_reference
 
 
-def zo_combine_ref(coeffs, seed, d: int):
-    """g = (1/rv) sum_r coeffs[r] * u_r, u_r = counter_normal(seed, ., r).
+def zo_combine_ref(coeffs, seed, d: int, n_active=None):
+    """g = (1/n) sum_r coeffs[r] * u_r, u_r = counter_normal(seed, ., r).
 
-    coeffs: (rv,) f32; returns (d,) f32.
+    coeffs: (rv,) f32; returns (d,) f32.  ``n_active`` overrides the
+    averaging denominator (default: the static rv) — the ragged-rv
+    contract of the fused kernel.
     """
     rv = coeffs.shape[0]
     idx = jnp.arange(d, dtype=jnp.uint32)
@@ -21,7 +23,8 @@ def zo_combine_ref(coeffs, seed, d: int):
         return acc + coeffs[r] * u, None
 
     acc, _ = jax.lax.scan(body, jnp.zeros((d,), jnp.float32), jnp.arange(rv))
-    return acc / rv
+    denom = jnp.float32(rv) if n_active is None else jnp.asarray(n_active, jnp.float32)
+    return acc / denom
 
 
 def zo_tangent_ref(seed, r: int, d: int, dtype=jnp.float32):

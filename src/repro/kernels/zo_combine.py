@@ -27,7 +27,7 @@ from repro.kernels.rng import counter_normal
 BLOCK = 8192
 
 
-def _zo_combine_body(coeffs_ref, meta_ref, o_ref, *, rv: int, block: int):
+def _zo_combine_body(coeffs_ref, meta_ref, denom_ref, o_ref, *, rv: int, block: int):
     pid = pl.program_id(0)
     base = (pid * block + jax.lax.iota(jnp.int32, block)).astype(jnp.uint32)
     seed = meta_ref[0].astype(jnp.uint32)
@@ -35,29 +35,39 @@ def _zo_combine_body(coeffs_ref, meta_ref, o_ref, *, rv: int, block: int):
     for r in range(rv):
         u = counter_normal(seed, base, jnp.uint32(r))
         acc = acc + coeffs_ref[r] * u
-    o_ref[...] = (acc / rv).astype(o_ref.dtype)
+    o_ref[...] = (acc / denom_ref[0]).astype(o_ref.dtype)
 
 
-def zo_combine(coeffs, seed, d: int, *, out_dtype=jnp.float32, interpret: bool = False):
+def zo_combine(coeffs, seed, d: int, *, n_active=None, out_dtype=jnp.float32,
+               interpret: bool = False):
     """coeffs: (rv,) f32; seed: int32 scalar/array -> (d,) ``out_dtype``.
 
     Accumulation is always f32 in VMEM; ``out_dtype=bfloat16`` halves
     the single HBM write of the estimate (the only O(d) traffic here).
+
+    ``n_active`` (optional f32 scalar, may be traced) replaces the
+    static ``rv`` as the averaging denominator — the ragged-``rv``
+    support for heterogeneous populations: a group padded to ``rv_max``
+    draws zeroes the excess coefficients and passes its own draw count
+    here, so the kernel stays one O(d) pass regardless of the mix.
     """
     rv = int(coeffs.shape[0])
     assert d % BLOCK == 0, d
     meta = jnp.asarray(seed, jnp.int32).reshape(1)
+    denom = (jnp.float32(rv) if n_active is None
+             else jnp.asarray(n_active, jnp.float32)).reshape(1)
     return pl.pallas_call(
         functools.partial(_zo_combine_body, rv=rv, block=BLOCK),
         grid=(d // BLOCK,),
         in_specs=[
             pl.BlockSpec((rv,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((d,), out_dtype),
         interpret=interpret,
-    )(coeffs.astype(jnp.float32), meta)
+    )(coeffs.astype(jnp.float32), meta, denom)
 
 
 def _zo_perturb_body(x_ref, meta_ref, nu_ref, o_ref, *, block: int):

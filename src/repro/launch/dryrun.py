@@ -56,7 +56,8 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
                  rv: int, dispatch: str = "select", momentum_dtype: str = "float32",
                  attn_remat: bool = False, window_slice: bool = False,
                  moe_constraint: bool = False, donate: bool = False,
-                 fsdp: bool = False, topology: str = "ring"):
+                 fsdp: bool = False, topology: str = "ring",
+                 sigmas=None, rvs=None, lrs=None, estimators_zo=None):
     """Returns (lowered, mesh, meta) for one combination, or None if skipped."""
     shape = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
@@ -91,12 +92,21 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
             )
 
     if kind == "train":
+        from repro.core.population import tile
+
         n_agents = specs.population_size(mcfg, mesh)
+        n_zeroth = n_agents // 2
         hcfg = HDOConfig(
             n_agents=n_agents,
-            n_zeroth=n_agents // 2,
+            n_zeroth=n_zeroth,
             estimator_zo="multi_rv",
             rv=rv,
+            # per-agent CSVs are cycled to the mesh-derived cohort sizes
+            # (the caller cannot know n_agents before the mesh is built)
+            sigmas=tile(sigmas, n_zeroth),
+            rvs=tile(rvs, n_zeroth),
+            lrs=tile(lrs, n_agents),
+            estimators_zo=tile(estimators_zo, n_zeroth),
             gossip=gossip if n_agents > 1 else "none",
             topology=topology,
             momentum=0.9,
@@ -174,13 +184,15 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
             attn_remat: bool = False, window_slice: bool = False,
             moe_constraint: bool = False, donate: bool = False,
             fsdp: bool = False, label: str = "",
-            topology: str = "ring") -> Dict[str, Any]:
+            topology: str = "ring",
+            sigmas=None, rvs=None, lrs=None, estimators_zo=None) -> Dict[str, Any]:
     t0 = time.time()
     built = build_dryrun(arch, shape_name, multi_pod=multi_pod, gossip=gossip,
                          rv=rv, dispatch=dispatch, momentum_dtype=momentum_dtype,
                          attn_remat=attn_remat, window_slice=window_slice,
                          moe_constraint=moe_constraint, donate=donate, fsdp=fsdp,
-                         topology=topology)
+                         topology=topology, sigmas=sigmas, rvs=rvs, lrs=lrs,
+                         estimators_zo=estimators_zo)
     if built is None:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "skipped": "long_500k requires sub-quadratic attention (DESIGN.md §4)"}
@@ -238,6 +250,12 @@ def main() -> None:
     ap.add_argument("--topology", default="ring", choices=list(TOPOLOGIES),
                     help="neighbor graph for --gossip graph/graph_ppermute")
     ap.add_argument("--rv", type=int, default=2)
+    # heterogeneous-population CSVs (cycled to the mesh-derived cohort
+    # sizes — see launch/train.py for semantics)
+    ap.add_argument("--sigmas", default=None, metavar="CSV")
+    ap.add_argument("--rvs", default=None, metavar="CSV")
+    ap.add_argument("--lrs", default=None, metavar="CSV")
+    ap.add_argument("--estimators-zo", default=None, metavar="CSV")
     ap.add_argument("--dispatch", default="select", choices=list(DISPATCH_MODES))
     ap.add_argument("--momentum-dtype", default="float32",
                     choices=list(MOMENTUM_DTYPES))
@@ -251,12 +269,18 @@ def main() -> None:
     ap.add_argument("--out", default=None, help="append JSON line to this file")
     args = ap.parse_args()
 
+    from repro.core.population import parse_csv
+
     report = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
                      gossip=args.gossip, rv=args.rv, dispatch=args.dispatch,
                      momentum_dtype=args.momentum_dtype, attn_remat=args.attn_remat,
                      window_slice=args.window_slice, moe_constraint=args.moe_constraint,
                      donate=args.donate, fsdp=args.fsdp, label=args.label,
-                     topology=args.topology)
+                     topology=args.topology,
+                     sigmas=parse_csv(args.sigmas, float),
+                     rvs=parse_csv(args.rvs, int),
+                     lrs=parse_csv(args.lrs, float),
+                     estimators_zo=parse_csv(args.estimators_zo, str))
     line = json.dumps(report)
     print(line)
     if args.out:

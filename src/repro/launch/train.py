@@ -13,6 +13,13 @@ erdos_renyi,tv_round_robin,tv_erdos_renyi}`` mixes with
 Metropolis–Hastings doubly-stochastic weights over a static neighbor
 graph (see ``repro.topology``); the step then also logs the spectral
 diagnostics (lambda_2, spectral gap, predicted Gamma contraction).
+
+Heterogeneous populations: ``--sigmas/--rvs/--estimators-zo`` take CSV
+values cycled over the ZO cohort and ``--lrs`` over the whole
+population, e.g. ``--zo 4 --sigmas 1e-3,1e-1`` alternates a clean and
+a noisy ZO agent; ``--estimators-zo multi_rv,fwd_grad`` mixes kinds.
+The step then logs per-group gradient-estimate variance
+(``grad_var_zo_<kind>`` / ``grad_var_fo``).
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from repro.configs.base import (
     ZO_IMPLS,
 )
 from repro.core import build_hdo_step, consensus_distance, init_state
+from repro.core.population import parse_csv, tile
 from repro.data import AgentBatcher, brackets, synthetic
 from repro.models import build_model
 
@@ -53,6 +61,20 @@ def main() -> None:
                     help="ZO engine: pytree estimators vs the flat-parameter "
                          "fused Pallas path (O(d) HBM traffic per estimate)")
     ap.add_argument("--rv", type=int, default=4)
+    # per-agent heterogeneity: CSV values are cycled to the cohort
+    # length (one value broadcasts), validated by HDOConfig
+    ap.add_argument("--sigmas", default=None, metavar="CSV",
+                    help="per-ZO-agent smoothing radii, cycled over the "
+                         "ZO cohort (overrides --nu heterogeneously)")
+    ap.add_argument("--rvs", default=None, metavar="CSV",
+                    help="per-ZO-agent random-vector counts (ragged rv: "
+                         "groups pad to their max and mask excess draws)")
+    ap.add_argument("--lrs", default=None, metavar="CSV",
+                    help="per-agent base learning rates, cycled over ALL "
+                         "agents (schedule shape stays shared)")
+    ap.add_argument("--estimators-zo", default=None, metavar="CSV",
+                    help="per-ZO-agent estimator kinds (mixed populations), "
+                         f"each one of {ZO_ESTIMATORS}")
     # choices derive from configs.base so the CLI can never drift from
     # what HDOConfig.__post_init__ accepts (single-source rule); the
     # ppermute lowerings are excluded because this driver builds no
@@ -88,6 +110,10 @@ def main() -> None:
         estimator_zo=args.estimator,
         zo_impl=args.zo_impl,
         rv=args.rv,
+        sigmas=tile(parse_csv(args.sigmas, float), args.zo),
+        rvs=tile(parse_csv(args.rvs, int), args.zo),
+        lrs=tile(parse_csv(args.lrs, float), args.agents),
+        estimators_zo=tile(parse_csv(args.estimators_zo, str), args.zo),
         gossip=args.gossip,
         topology=args.topology,
         topology_p=args.topology_p,
@@ -131,8 +157,18 @@ def main() -> None:
     gossip_desc = args.gossip + (
         f"/{args.topology}" if args.gossip in ("graph", "graph_ppermute") else ""
     )
+    est_desc = (
+        ",".join(dict.fromkeys(hcfg.estimators_zo))
+        if hcfg.estimators_zo else args.estimator
+    )
+    # resolved homogeneity, not flag presence: a broadcast single value
+    # collapses onto the homogeneous path (no grad_var_* metrics)
+    from repro.core import resolve_population
+
+    het = not resolve_population(hcfg).homogeneous
     print(f"# arch={cfg.name} params={n_params/1e6:.2f}M agents={args.agents} "
-          f"(zo={args.zo}) estimator={args.estimator}/{args.zo_impl} gossip={gossip_desc}")
+          f"(zo={args.zo}{', heterogeneous' if het else ''}) "
+          f"estimator={est_desc}/{args.zo_impl} gossip={gossip_desc}")
 
     step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params))
     state = init_state(params, hcfg)

@@ -5,5 +5,17 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+def require_hypothesis():
+    """The single gate for hypothesis-based tests (README §Development).
+
+    ``hypothesis`` is a declared test extra (pyproject ``[test]``) but
+    is absent from the pinned CPU container — files that need it call
+    this at import time and skip cleanly there, while CI (which
+    installs ``.[test]``) runs them.  Returns the imported module.
+    """
+    return pytest.importorskip("hypothesis")

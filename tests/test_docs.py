@@ -1,0 +1,51 @@
+"""Docs-layer gates that run in tier-1 (cheap, no execution of the
+snippet itself — the CI docs lane executes it):
+
+  * the README knob table matches the canonical constants in
+    configs.base (regenerate with
+    ``PYTHONPATH=src python -m repro.configs.knobs --write README.md``)
+  * every relative markdown link resolves
+  * the README quickstart snippet parses as a program
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_readme_knob_table_is_current():
+    from repro.configs import knobs
+
+    with open(os.path.join(REPO, "README.md")) as f:
+        text = f.read()
+    assert knobs.inject(text) == text, (
+        "README knob table drifted from configs.base — run "
+        "`PYTHONPATH=src python -m repro.configs.knobs --write README.md`"
+    )
+
+
+def test_markdown_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "docs", "check_links.py"), REPO],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+
+
+def test_readme_quickstart_snippet_compiles():
+    sys.path.insert(0, os.path.join(REPO, "docs"))
+    try:
+        from run_readme_snippet import extract
+    finally:
+        sys.path.pop(0)
+    code = extract(os.path.join(REPO, "README.md"))
+    compile(code, "README.md:quickstart-snippet", "exec")
+    # the snippet must exercise the public API it documents
+    assert "HDOConfig" in code and "build_hdo_step" in code
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", os.path.join("docs", "paper_map.md"),
+                os.path.join("benchmarks", "README.md")):
+        assert os.path.exists(os.path.join(REPO, rel)), rel

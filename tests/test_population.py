@@ -1,0 +1,266 @@
+"""Heterogeneous-population subsystem: per-agent config validation,
+population resolution, ragged-rv masking, grouped dispatch, and the
+all-equal == homogeneous bit-identity collapse contract.
+
+Deterministic counterparts of the hypothesis property in
+test_properties.py, so the pinned container (no hypothesis) still
+exercises every contract.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HDOConfig
+from repro.core import (
+    build_hdo_step,
+    estimators,
+    flatzo,
+    init_state,
+    resolve_population,
+)
+from repro.core.population import parse_csv, tile
+
+D = 12
+W_TRUE = jax.random.normal(jax.random.PRNGKey(42), (D,))
+
+
+def loss_fn(params, batch):
+    return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+
+
+def make_batches(key, n_agents, bsz=6):
+    X = jax.random.normal(key, (n_agents, bsz, D))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+BASE = dict(lr=0.05, momentum=0.9, warmup_steps=0, use_cosine=False,
+            nu=1e-3, rv=4, gossip="dense")
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_per_agent_validation():
+    ok = dict(n_agents=4, n_zeroth=2)
+    # lengths: sigmas/rvs/estimators_zo match the ZO cohort, lrs all agents
+    with pytest.raises(ValueError, match="sigmas"):
+        HDOConfig(**ok, sigmas=(1e-3,))
+    with pytest.raises(ValueError, match="rvs"):
+        HDOConfig(**ok, rvs=(2, 2, 2))
+    with pytest.raises(ValueError, match="estimators_zo"):
+        HDOConfig(**ok, estimators_zo=("multi_rv",))
+    with pytest.raises(ValueError, match="lrs"):
+        HDOConfig(**ok, lrs=(0.1, 0.1))  # needs n_agents entries
+    # positivity
+    with pytest.raises(ValueError, match="sigmas"):
+        HDOConfig(**ok, sigmas=(1e-3, -1.0))
+    with pytest.raises(ValueError, match="rvs"):
+        HDOConfig(**ok, rvs=(0, 2))
+    with pytest.raises(ValueError, match="lrs"):
+        HDOConfig(**ok, lrs=(0.1, 0.1, 0.1, 0.0))
+    # kind membership comes from the canonical ZO_ESTIMATORS tuple
+    with pytest.raises(ValueError, match="estimators_zo"):
+        HDOConfig(**ok, estimators_zo=("multi_rv", "multirv"))
+    # nu_from_lr derives the radius from lr — per-agent sigmas conflict
+    with pytest.raises(ValueError, match="nu_from_lr"):
+        HDOConfig(**ok, nu_from_lr=True, sigmas=(1e-3, 1e-3))
+    # valid heterogeneous config constructs (lists normalized to tuples)
+    cfg = HDOConfig(**ok, sigmas=[1e-3, 1e-2], rvs=[1, 4],
+                    estimators_zo=["multi_rv", "fwd_grad"],
+                    lrs=[0.1, 0.1, 0.2, 0.2])
+    assert isinstance(cfg.sigmas, tuple) and hash(cfg) is not None
+
+
+def test_resolve_population_defaults_and_groups():
+    pop = resolve_population(HDOConfig(n_agents=4, n_zeroth=2, **BASE))
+    assert pop.homogeneous
+    assert pop.kinds == ("multi_rv",) * 2 and pop.sigmas == (1e-3,) * 2
+    assert pop.rvs == (4, 4) and pop.lrs == (0.05,) * 4
+    assert [g.kind for g in pop.groups] == ["multi_rv"]
+
+    het = resolve_population(HDOConfig(
+        n_agents=5, n_zeroth=4,
+        estimators_zo=("multi_rv", "fwd_grad", "multi_rv", "biased_2pt"),
+        rvs=(2, 8, 4, 1), **BASE))
+    assert not het.homogeneous
+    # groups in first-seen order, indices global, rv padded to group max
+    assert [(g.kind, g.indices, g.rv_max) for g in het.groups] == [
+        ("multi_rv", (0, 2), 4), ("fwd_grad", (1,), 8), ("biased_2pt", (3,), 1)]
+
+    # uniform per-agent values that differ from the scalar knobs still
+    # collapse, onto the overridden effective scalars
+    uni = resolve_population(dataclasses.replace(
+        HDOConfig(n_agents=3, n_zeroth=2, **BASE), sigmas=(1e-2, 1e-2)))
+    assert uni.homogeneous and uni.sigma0 == 1e-2
+
+
+def test_csv_helpers():
+    assert parse_csv(None, float) is None
+    assert parse_csv("1e-3, 0.1", float) == (1e-3, 0.1)
+    assert parse_csv("multi_rv,fwd_grad", str) == ("multi_rv", "fwd_grad")
+    assert tile((1, 2), 5) == (1, 2, 1, 2, 1)  # cycled
+    assert tile((7,), 3) == (7, 7, 7)  # broadcast
+    assert tile(None, 3) is None
+    with pytest.raises(ValueError):
+        parse_csv(" ,", float)
+
+
+# ---------------------------------------------------------------------------
+# ragged-rv masking: padded draws are inert, average is over rv_actual
+# ---------------------------------------------------------------------------
+
+
+def test_masked_rv_equals_smaller_rv():
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    p = {"w": jax.random.normal(jax.random.PRNGKey(0), (300,))}
+    key = jax.random.PRNGKey(5)
+    for kind in ("multi_rv", "fwd_grad"):
+        # fused path: bit-exact (zero coefficients are exact no-ops in
+        # the combine kernel; denominator comes in as an operand)
+        _, gm = flatzo.flat_zo_estimate(loss, p, key, kind=kind, rv=4,
+                                        nu=1e-3, rv_actual=jnp.int32(2))
+        _, gs = flatzo.flat_zo_estimate(loss, p, key, kind=kind, rv=2, nu=1e-3)
+        np.testing.assert_array_equal(np.asarray(gm["w"]), np.asarray(gs["w"]))
+        # tree path: same estimator, but the masked graph fuses
+        # differently under XLA:CPU (FMA contraction) -> allclose
+        _, gm = estimators.zo_estimate(loss, p, key, kind=kind, rv=4,
+                                       nu=1e-3, rv_actual=jnp.int32(2))
+        _, gs = estimators.zo_estimate(loss, p, key, kind=kind, rv=2, nu=1e-3)
+        np.testing.assert_allclose(np.asarray(gm["w"]), np.asarray(gs["w"]),
+                                   rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the collapse contract: all-equal per-agent values == homogeneous, bit
+# for bit (params, momentum, and the metrics dict)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("zo_impl", ["tree", "fused"])
+@pytest.mark.parametrize("dispatch", ["select", "split"])
+def test_all_equal_per_agent_bit_identical_to_homogeneous(zo_impl, dispatch):
+    hom = HDOConfig(n_agents=6, n_zeroth=4, zo_impl=zo_impl,
+                    dispatch=dispatch, **BASE)
+    het = dataclasses.replace(hom, sigmas=(1e-3,) * 4, rvs=(4,) * 4,
+                              lrs=(0.05,) * 6, estimators_zo=("multi_rv",) * 4)
+    assert resolve_population(het).homogeneous
+    s1 = s2 = init_state({"w": jnp.zeros((D,))}, hom)
+    step_hom = jax.jit(build_hdo_step(loss_fn, hom, param_dim=D))
+    step_het = jax.jit(build_hdo_step(loss_fn, het, param_dim=D))
+    for t in range(3):
+        b = make_batches(jax.random.fold_in(jax.random.PRNGKey(9), t), 6)
+        s1, m1 = step_hom(s1, b)
+        s2, m2 = step_het(s2, b)
+    assert set(m1) == set(m2)  # incl. NO grad_var_* keys when collapsed
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(s2.params["w"]))
+    np.testing.assert_array_equal(np.asarray(s1.momentum["w"]),
+                                  np.asarray(s2.momentum["w"]))
+    for k in m1:
+        np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]),
+                                      err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# genuinely heterogeneous cohorts train end-to-end through the jitted
+# step — per-agent (sigma, rv, lr) + >= 2 estimator kinds, both engines
+# ---------------------------------------------------------------------------
+
+
+HET = dict(
+    n_agents=6, n_zeroth=4,
+    sigmas=(1e-3, 1e-2, 1e-3, 0.1),  # one "byzantine-ish" high-sigma agent
+    rvs=(8, 4, 2, 1),  # ragged draw counts
+    lrs=(0.05, 0.05, 0.05, 0.01, 0.05, 0.05),  # noisy agent down-weighted
+    estimators_zo=("multi_rv", "fwd_grad", "multi_rv", "biased_2pt"),
+)
+
+
+@pytest.mark.parametrize("zo_impl", ["tree", "fused"])
+@pytest.mark.parametrize("dispatch", ["select", "split"])
+def test_heterogeneous_trains_end_to_end(zo_impl, dispatch):
+    cfg = HDOConfig(zo_impl=zo_impl, dispatch=dispatch, **HET, **BASE)
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    first = None
+    for t in range(60):
+        state, m = step(state, make_batches(
+            jax.random.fold_in(jax.random.PRNGKey(9), t), cfg.n_agents))
+        first = float(m["loss_mean"]) if first is None else first
+    # converged well below the start, and the per-group diagnostics ride
+    # along in the metrics
+    assert float(m["loss_mean"]) < 0.2 * first
+    for key in ("grad_var_zo_multi_rv", "grad_var_zo_fwd_grad",
+                "grad_var_zo_biased_2pt", "grad_var_fo"):
+        assert key in m and np.isfinite(float(m[key]))
+    # the mean model fits the target
+    mu = jax.tree.map(lambda x: x.mean(0), state.params)
+    Xe = jax.random.normal(jax.random.PRNGKey(5), (256, D))
+    assert float(jnp.mean((Xe @ mu["w"] - Xe @ W_TRUE) ** 2)) < 0.1
+
+
+def test_heterogeneous_split_matches_select():
+    """The grouped split dispatch is the same estimator on the same
+    agent keys as the grouped select — one step must agree to float
+    tolerance (graph shapes differ, so not pinned bit-exact)."""
+    cfg_sel = HDOConfig(zo_impl="fused", dispatch="select", **HET, **BASE)
+    cfg_spl = dataclasses.replace(cfg_sel, dispatch="split")
+    s0 = init_state({"w": jnp.zeros((D,))}, cfg_sel)
+    b = make_batches(jax.random.PRNGKey(3), cfg_sel.n_agents)
+    s1, m1 = jax.jit(build_hdo_step(loss_fn, cfg_sel, param_dim=D))(s0, b)
+    s2, m2 = jax.jit(build_hdo_step(loss_fn, cfg_spl, param_dim=D))(s0, b)
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]),
+                               rtol=1e-5, atol=1e-7)
+    assert set(m1) == set(m2)
+
+
+def test_heterogeneous_lr_only():
+    """Per-agent lrs alone (no ZO heterogeneity) goes down the
+    heterogeneous path and still converges; the schedule shape is
+    shared, scaled per agent."""
+    cfg = HDOConfig(n_agents=4, n_zeroth=2,
+                    lrs=(0.05, 0.05, 0.1, 0.1), **BASE)
+    assert not resolve_population(cfg).homogeneous
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    for t in range(50):
+        state, m = step(state, make_batches(
+            jax.random.fold_in(jax.random.PRNGKey(1), t), 4))
+    assert float(m["loss_mean"]) < 5e-2
+
+
+def test_shard_cond_rejects_heterogeneous():
+    cfg = HDOConfig(dispatch="shard_cond", **HET, **BASE)
+    with pytest.raises(ValueError, match="shard_cond"):
+        build_hdo_step(loss_fn, cfg, param_dim=D)
+
+
+def test_high_sigma_agent_dominates_group_variance():
+    """The heterogeneity diagnostic does its job: a group containing a
+    high-sigma agent logs a far larger gradient-estimate variance than
+    the same group with all-clean sigmas.  Uses ``biased_1pt`` — the
+    sigma-*sensitive* kind (its O(sigma) curvature bias spreads the
+    group); the 2-point kinds are exact on this quadratic loss
+    regardless of sigma."""
+    kinds = ("biased_1pt", "biased_1pt", "fwd_grad", "fwd_grad")
+
+    def group_var(sigmas):
+        cfg = HDOConfig(n_agents=6, n_zeroth=4, sigmas=sigmas,
+                        estimators_zo=kinds, **BASE)
+        step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+        # start AT the optimum: grad F ~ 0, so the group spread is the
+        # estimators' own noise — for biased_1pt that is the O(sigma)
+        # curvature bias, isolated from the descent signal
+        state = init_state({"w": W_TRUE}, cfg)
+        _, m = step(state, make_batches(jax.random.PRNGKey(0), 6))
+        return float(m["grad_var_zo_biased_1pt"])
+
+    noisy = group_var((0.5, 1e-3, 1e-3, 1e-3))
+    clean = group_var((1e-3, 1e-3, 1e-3, 1e-3))
+    assert noisy > 10 * clean, (noisy, clean)

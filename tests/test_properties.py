@@ -1,18 +1,22 @@
 """Hypothesis property-based tests on system invariants."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# hypothesis is a declared test extra (pyproject [test]); environments
-# without it (e.g. the pinned CPU container) skip rather than breaking
-# collection of the whole suite
-hypothesis = pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+# single importorskip gate (tests/conftest.py): environments without
+# the hypothesis test extra (e.g. the pinned CPU container) skip this
+# file rather than breaking collection of the whole suite; CI runs it
+hypothesis = require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro import topology as topolib
 from repro.configs.base import HDOConfig
-from repro.core import estimators, flatzo, gossip
+from repro.core import build_hdo_step, estimators, flatzo, gossip, init_state
 from repro.core.schedules import warmup_cosine
 from repro.kernels.rng import counter_normal
 from repro.launch.hlo_analysis import HloCostModel, _shape_elems_bytes
@@ -115,6 +119,61 @@ def test_round_robin_is_tournament(n):
         assert (p != np.arange(n)).all()
         met |= {(min(i, int(p[i])), max(i, int(p[i]))) for i in range(n)}
     assert len(met) == n * (n - 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-population contract: a per-agent override with all-equal
+# values is BIT-IDENTICAL to the homogeneous scalar path — the collapse
+# contract of core/population.py (deterministic grid variant lives in
+# tests/test_population.py so the pinned container exercises it too)
+# ---------------------------------------------------------------------------
+
+_POP_D = 6
+
+
+def _pop_loss(params, batch):
+    return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+
+
+def _pop_batches(key, n):
+    X = jax.random.normal(key, (n, 4, _POP_D))
+    return {"X": X, "y": X @ jnp.arange(1.0, _POP_D + 1.0)}
+
+
+@given(
+    n0=st.integers(1, 3),
+    n1=st.integers(0, 2),
+    kind=st.sampled_from(["multi_rv", "fwd_grad", "biased_2pt"]),
+    impl=st.sampled_from(["tree", "fused"]),
+    dispatch=st.sampled_from(["select", "split"]),
+    sigma=st.sampled_from([1e-4, 1e-3, 1e-2]),
+    rv=st.integers(1, 3),
+    lr=st.sampled_from([0.01, 0.05]),
+)
+@settings(max_examples=8, deadline=None)
+def test_all_equal_heterogeneous_bit_identical_to_homogeneous(
+        n0, n1, kind, impl, dispatch, sigma, rv, lr):
+    n = n0 + n1
+    hom = HDOConfig(n_agents=n, n_zeroth=n0, estimator_zo=kind, zo_impl=impl,
+                    dispatch=dispatch, rv=rv, nu=sigma, lr=lr, gossip="dense",
+                    momentum=0.9, warmup_steps=0, use_cosine=False)
+    het = dataclasses.replace(hom, sigmas=(sigma,) * n0, rvs=(rv,) * n0,
+                              lrs=(lr,) * n, estimators_zo=(kind,) * n0)
+    state1 = state2 = init_state({"w": jnp.zeros((_POP_D,))}, hom)
+    step_hom = jax.jit(build_hdo_step(_pop_loss, hom, param_dim=_POP_D))
+    step_het = jax.jit(build_hdo_step(_pop_loss, het, param_dim=_POP_D))
+    for t in range(2):
+        b = _pop_batches(jax.random.fold_in(jax.random.PRNGKey(0), t), n)
+        state1, m1 = step_hom(state1, b)
+        state2, m2 = step_het(state2, b)
+    assert set(m1) == set(m2)
+    np.testing.assert_array_equal(np.asarray(state1.params["w"]),
+                                  np.asarray(state2.params["w"]))
+    np.testing.assert_array_equal(np.asarray(state1.momentum["w"]),
+                                  np.asarray(state2.momentum["w"]))
+    for k in m1:
+        np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]),
+                                      err_msg=k)
 
 
 # ---------------------------------------------------------------------------
