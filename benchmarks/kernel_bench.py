@@ -15,6 +15,12 @@ The ``gossip_*`` section compares the fused k-neighbor ``gossip_mix``
 kernel against chained ``gossip_avg`` calls and the jnp oracle at
 d >= 1e6; ``--json`` writes it to ``BENCH_gossip.json`` (uploaded from
 the same CI lane).
+
+The ``optim_*`` section compares the fused momentum-SGD apply
+(``opt_apply``: momentum update + parameter update in one O(d) pass)
+against the tree-path two-op apply (momentum written to HBM, then read
+back by the parameter update) per ``momentum_dtype``; ``--json``
+writes ``BENCH_optim.json`` alongside the other two artifacts.
 """
 from __future__ import annotations
 
@@ -74,12 +80,13 @@ def main(json_path: str | None = None) -> None:
     print(csv_line("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.1f}"))
 
     estimator_bench(json_path=json_path)
-    # the gossip artifact lands next to the estimator one
-    gossip_json = (
-        os.path.join(os.path.dirname(json_path) or ".", "BENCH_gossip.json")
+    # the gossip + optim artifacts land next to the estimator one
+    side = lambda name: (
+        os.path.join(os.path.dirname(json_path) or ".", name)
         if json_path else None
     )
-    gossip_bench(json_path=gossip_json)
+    gossip_bench(json_path=side("BENCH_gossip.json"))
+    optim_bench(json_path=side("BENCH_optim.json"))
 
 
 def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
@@ -124,6 +131,71 @@ def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
                 "us_per_call": round(us, 1), "hbm_bytes": hbm,
             })
             print(csv_line(f"gossip_{impl}_k{k}_d{d}", us,
+                           f"hbm_mb={hbm / 1e6:.1f}"))
+    if json_path:
+        payload = {"d": d, "backend": jax.default_backend(),
+                   "interpret_mode": jax.default_backend() != "tpu",
+                   "entries": entries}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return entries
+
+
+def optim_bench(d: int = 1 << 20, json_path: str | None = None):
+    """The local-update apply at d >= 1e6: the fused ``opt_apply``
+    kernel vs the tree-path two-op apply vs the jnp oracle, per
+    ``momentum_dtype``.
+
+    Analytic HBM traffic per agent apply (``msz`` = momentum element
+    width, 4 or 2 bytes; params/grads f32 — the update phase is pure
+    memory traffic, like gossip):
+      * ``opt_apply``   — one streamed pass: read p, g, m; write p, m:
+        ``(12 + 2*msz) * d`` bytes.  The momentum intermediate never
+        round-trips.
+      * ``tree_apply``  — the momentum pass (read m, g; write m) then
+        the parameter pass (read p, m; write p): ``(12 + 3*msz) * d``
+        bytes — the stored momentum is re-read by the param update.
+        Benched as two SEPARATE jitted calls so the intermediate really
+        materializes (under one jit XLA would fuse it into the oracle).
+      * ``jnp_ref``     — same analytic traffic as ``opt_apply`` (XLA
+        may or may not fuse the two lines; the kernel guarantees it).
+    """
+    lr, beta = 0.05, 0.9
+    p = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    entries = []
+    for mdt_name, mdt, msz in (("float32", jnp.float32, 4),
+                               ("bfloat16", jnp.bfloat16, 2)):
+        m = (jax.random.normal(jax.random.PRNGKey(2), (d,)) * 0.1).astype(mdt)
+
+        # two separately-compiled passes == the momentum round-trip the
+        # tree path pays when the two updates don't fuse
+        mom_pass = jax.jit(lambda g, m: (
+            beta * m.astype(jnp.float32)
+            + (1.0 - beta) * g.astype(jnp.float32)).astype(m.dtype))
+        param_pass = jax.jit(lambda p, nm: (
+            p.astype(jnp.float32) - lr * nm.astype(jnp.float32)
+        ).astype(p.dtype))
+
+        def tree_apply(p, g, m):
+            nm = mom_pass(g, m)
+            return param_pass(p, nm), nm
+
+        us_k = _time(lambda: ops.opt_apply(p, g, m, lr, beta), n=3)
+        us_t = _time(lambda: tree_apply(p, g, m), n=3)
+        us_r = _time(lambda: jax.jit(ref.opt_apply_ref)(p, g, m, lr, beta), n=3)
+        rows = [
+            ("opt_apply", us_k, (12 + 2 * msz) * d),
+            ("tree_apply", us_t, (12 + 3 * msz) * d),
+            ("jnp_ref", us_r, (12 + 2 * msz) * d),
+        ]
+        for impl, us, hbm in rows:
+            entries.append({
+                "impl": impl, "momentum_dtype": mdt_name, "d": d,
+                "us_per_call": round(us, 1), "hbm_bytes": hbm,
+            })
+            print(csv_line(f"optim_{impl}_{mdt_name}_d{d}", us,
                            f"hbm_mb={hbm / 1e6:.1f}"))
     if json_path:
         payload = {"d": d, "backend": jax.default_backend(),
@@ -196,7 +268,8 @@ if __name__ == "__main__":
     ap.add_argument("--json", nargs="?", const="BENCH_estimators.json", default=None,
                     metavar="PATH",
                     help="write the estimator entries to PATH (default "
-                         "BENCH_estimators.json); the gossip entries go to "
-                         "BENCH_gossip.json alongside it")
+                         "BENCH_estimators.json); the gossip and optim "
+                         "entries go to BENCH_gossip.json / BENCH_optim.json "
+                         "alongside it")
     args = ap.parse_args()
     main(json_path=args.json)

@@ -1,5 +1,11 @@
 """Checkpointing: pytree <-> .npz with a msgpack sidecar for structure
 and metadata (step, config fingerprint).  No orbax in the container.
+
+``save_state`` / ``restore_state`` round-trip a full ``HDOState``
+(params + the generalized optimizer state + step counter), so a
+restored run continues bit-identically to an uninterrupted one
+(tests/test_localupdate.py); ``save`` / ``restore`` remain the raw
+pytree primitives.
 """
 from __future__ import annotations
 
@@ -9,6 +15,7 @@ import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import msgpack
 import numpy as np
 
@@ -44,16 +51,28 @@ def _to_native(arr: np.ndarray) -> np.ndarray:
 def save(path: str, tree: PyTree, *, step: int = 0, meta: Optional[Dict] = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     names, leaves, _ = _flatten_with_names(tree)
-    np.savez(path + ".npz", **{f"leaf_{i}": _to_native(l) for i, l in enumerate(leaves)})
+    # write-then-rename so a crash mid-save (OOM, preemption) can never
+    # truncate the previous checkpoint in place, plus a shared random
+    # token in both files so a crash BETWEEN the two renames (new npz,
+    # stale sidecar) is detected at restore instead of silently pairing
+    # round-N params with a round-M step counter
+    token = os.urandom(8).hex()
+    tmp = path + ".tmp.npz"  # np.savez appends .npz unless already there
+    np.savez(tmp, __token__=np.frombuffer(bytes.fromhex(token), np.uint8),
+             **{f"leaf_{i}": _to_native(l) for i, l in enumerate(leaves)})
+    os.replace(tmp, path + ".npz")
     sidecar = {
         "names": names,
         "step": int(step),
         "meta": meta or {},
         "dtypes": [str(l.dtype) for l in leaves],
         "shapes": [list(l.shape) for l in leaves],
+        "token": token,
     }
-    with open(path + ".msgpack", "wb") as f:
+    tmp = path + ".msgpack.tmp"
+    with open(tmp, "wb") as f:
         f.write(msgpack.packb(sidecar))
+    os.replace(tmp, path + ".msgpack")
 
 
 def restore(path: str, like: PyTree) -> Tuple[PyTree, int, Dict]:
@@ -61,14 +80,55 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, int, Dict]:
     with open(path + ".msgpack", "rb") as f:
         sidecar = msgpack.unpackb(f.read())
     data = np.load(path + ".npz")
+    if "token" in sidecar and "__token__" in data:
+        disk_token = bytes(np.asarray(data["__token__"])).hex()
+        if disk_token != sidecar["token"]:
+            raise ValueError(
+                f"torn checkpoint at {path!r}: the .npz and .msgpack sidecar "
+                "come from different saves (crash between the two renames?) "
+                "— params and step counter would silently disagree"
+            )
     names_disk = sidecar["names"]
     names_like, leaves_like, treedef = _flatten_with_names(like)
     if names_disk != names_like:
         missing = set(names_disk) ^ set(names_like)
         raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]} ...")
+    want_dtypes = [str(l.dtype) for l in leaves_like]
+    if sidecar.get("dtypes") and sidecar["dtypes"] != want_dtypes:
+        bad = [f"{n}: {d} -> {w}" for n, d, w in
+               zip(names_like, sidecar["dtypes"], want_dtypes) if d != w]
+        raise ValueError(
+            f"checkpoint dtype mismatch (silent cast would break the "
+            f"resume-bit-identity contract): {bad[:5]}"
+        )
     leaves = [
         np.asarray(data[f"leaf_{i}"], dtype=leaves_like[i].dtype)
         for i in range(len(names_like))
     ]
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, sidecar["step"], sidecar["meta"]
+
+
+def save_state(path: str, state, *, meta: Optional[Dict] = None) -> None:
+    """Persist a full ``core.hdo.HDOState`` (params, opt_state, step)."""
+    tree = {"params": state.params, "opt_state": state.opt_state}
+    save(path, jax.device_get(tree), step=int(state.step), meta=meta)
+
+
+def restore_state(path: str, like) -> Tuple[Any, Dict]:
+    """Restore an ``HDOState`` saved by ``save_state``.
+
+    ``like`` is a template state with the target structure/dtypes —
+    build it with ``core.init_state`` under the SAME ``HDOConfig``
+    (optimizer / momentum / momentum_dtype decide the opt_state
+    structure).  Returns ``(state, meta)``.
+    """
+    from repro.core.hdo import HDOState
+
+    tree, step, meta = restore(
+        path, {"params": like.params, "opt_state": like.opt_state}
+    )
+    state = HDOState(
+        params=tree["params"], opt_state=tree["opt_state"], step=jnp.int32(step)
+    )
+    return state, meta

@@ -181,6 +181,7 @@ class ModelConfig:
 # These tuples are the single source for every CLI ``choices=`` list.
 ZO_ESTIMATORS = ("biased_1pt", "biased_2pt", "multi_rv", "fwd_grad")
 ZO_IMPLS = ("tree", "fused")
+OPTIMIZERS = ("sgd", "adamw")
 DISPATCH_MODES = ("select", "split", "shard_cond")
 GOSSIP_MODES = (
     "dense", "rr_static", "rr_ppermute", "all_reduce", "none",
@@ -248,7 +249,23 @@ class HDOConfig:
     topology_seed: int = 0
     topology_rounds: int = 8
     lr: float = 0.01
+    # first-moment decay of the local update: sgd momentum / adamw b1
     momentum: float = 0.9
+    # local-update rule applied between the estimate and the gossip
+    # phases ("sgd" is the paper's momentum-SGD; "adamw" plugs the
+    # repro.optim AdamW transform into the same slot — beyond-paper)
+    optimizer: str = "sgd"
+    # communication-reducing local steps: H estimate+update iterations
+    # per gossip round (H=1 is the paper's Algorithm 1; H>1 is periodic
+    # averaging a la Omidvar et al. / Sahu et al. — the Mixer runs once
+    # per round, so communication drops by 1/H per estimator pass)
+    local_steps: int = 1
+    # per-agent global-norm gradient clip applied before the optimizer
+    # update (0 disables; uses optim.clip_by_global_norm per agent)
+    clip_norm: float = 0.0
+    # decoupled weight decay for optimizer="adamw" (0 = plain Adam;
+    # ignored by sgd, which matches the paper's rule)
+    weight_decay: float = 0.0
     warmup_steps: int = 50
     cosine_steps: int = 1000
     use_cosine: bool = True
@@ -261,8 +278,10 @@ class HDOConfig:
     #              population sharded over a mesh axis every device runs
     #              one kind (beyond-paper optimization, see §Perf).
     dispatch: str = "select"
-    # momentum accumulator dtype ("float32" paper-faithful; "bfloat16"
-    # halves optimizer-state HBM — beyond-paper memory optimization)
+    # sgd momentum accumulator dtype ("float32" paper-faithful;
+    # "bfloat16" halves optimizer-state HBM — beyond-paper memory
+    # optimization).  adamw state stays float32 (the variance term
+    # needs the range; see core/localupdate.py)
     momentum_dtype: str = "float32"
 
     def __post_init__(self):
@@ -287,6 +306,20 @@ class HDOConfig:
         if self.topology_rounds < 1:
             raise ValueError(
                 f"topology_rounds must be >= 1, got {self.topology_rounds}"
+            )
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(
+                f"optimizer must be one of {OPTIMIZERS}, got {self.optimizer!r}"
+            )
+        if self.local_steps < 1:
+            raise ValueError(f"local_steps must be >= 1, got {self.local_steps}")
+        if self.clip_norm < 0.0:
+            raise ValueError(
+                f"clip_norm must be >= 0 (0 disables), got {self.clip_norm}"
+            )
+        if self.weight_decay < 0.0:
+            raise ValueError(
+                f"weight_decay must be >= 0, got {self.weight_decay}"
             )
         if self.momentum_dtype not in MOMENTUM_DTYPES:
             raise ValueError(

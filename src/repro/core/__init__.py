@@ -10,12 +10,14 @@ from repro.core.gossip import (
 )
 from repro.core.hdo import (
     HDOState,
+    build_estimate_phase,
     build_hdo_step,
     consensus_distance,
     init_state,
     tree_stack_broadcast,
     zo_mask,
 )
+from repro.core.localupdate import LocalUpdate, make_local_update
 from repro.core.population import KindGroup, Population, resolve_population
 from repro.core.schedules import constant, warmup_cosine
 
@@ -30,7 +32,10 @@ __all__ = [
     "round_robin_schedule",
     "sample_matching",
     "HDOState",
+    "build_estimate_phase",
     "build_hdo_step",
+    "LocalUpdate",
+    "make_local_update",
     "consensus_distance",
     "init_state",
     "tree_stack_broadcast",

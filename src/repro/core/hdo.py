@@ -1,13 +1,24 @@
 """The HDO training step (paper Algorithm 1, parallel simulation form).
 
-One parallel step =
-  1. every agent computes its local gradient estimate (FO agents:
-     backprop; ZO agents: function-evaluation estimators),
-  2. every agent takes a local (momentum-)SGD step,
-  3. the population communicates through a ``Mixer`` (paper: O(n)
-     random disjoint pairs average; beyond-paper: any doubly-stochastic
-     scheme from ``repro.topology`` — round-robin tournaments,
-     weighted graph topologies, all-reduce).
+One parallel round is an **estimate -> update -> mix** pipeline:
+
+  1. estimate — every agent computes its local gradient estimate (FO
+     agents: backprop; ZO agents: function-evaluation estimators),
+     through the select / split / shard_cond dispatch machinery
+     (``build_estimate_phase``),
+  2. local update — every agent takes a local optimizer step through a
+     ``LocalUpdate`` (``core.localupdate``, backed by ``repro.optim``:
+     the paper's momentum-SGD, or AdamW),
+  3. mix — the population communicates through a ``Mixer`` (paper:
+     O(n) random disjoint pairs average; beyond-paper: any
+     doubly-stochastic scheme from ``repro.topology``).
+
+``HDOConfig.local_steps = H > 1`` runs H estimate+update iterations
+per round (``lax.scan`` over per-substep folded keys) before the single
+mix — the periodic-averaging communication/computation trade-off of
+Omidvar et al. / Sahu et al.; the Mixer still runs exactly once per
+round, so ``consensus_distance`` / spectral diagnostics keep lining up
+per *round*.
 
 The population is carried as a stacked pytree with a leading
 ``n_agents`` axis (shardable over a mesh axis -> each agent's replica
@@ -25,7 +36,7 @@ import numpy as np
 
 from repro import compat
 from repro.configs.base import HDOConfig
-from repro.core import estimators, flatzo, population, schedules
+from repro.core import estimators, flatzo, localupdate, population, schedules
 
 PyTree = Any
 
@@ -34,7 +45,10 @@ PyTree = Any
 @dataclasses.dataclass
 class HDOState:
     params: PyTree  # leading axis n_agents
-    momentum: PyTree
+    # optimizer state of the LocalUpdate: the stacked momentum pytree
+    # for "sgd" (momentum > 0; () otherwise), {"mu","nu","count"} for
+    # "adamw" — generalizes the old ``momentum`` field
+    opt_state: PyTree
     step: jnp.ndarray  # scalar int32
 
 
@@ -46,9 +60,8 @@ def tree_stack_broadcast(params: PyTree, n: int) -> PyTree:
 
 def init_state(params: PyTree, cfg: HDOConfig) -> HDOState:
     stacked = tree_stack_broadcast(params, cfg.n_agents)
-    mdt = jnp.dtype(cfg.momentum_dtype)
-    mom = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=mdt), stacked)
-    return HDOState(params=stacked, momentum=mom, step=jnp.int32(0))
+    lu = localupdate.make_local_update(cfg)
+    return HDOState(params=stacked, opt_state=lu.init(stacked), step=jnp.int32(0))
 
 
 def zo_mask(cfg: HDOConfig) -> jnp.ndarray:
@@ -65,70 +78,36 @@ def _select_tree(mask_agents, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree.map(sel, a, b)
 
 
-def build_hdo_step(
+def build_estimate_phase(
     loss_fn: Callable[[PyTree, Any], jnp.ndarray],
     cfg: HDOConfig,
     *,
-    param_dim: Optional[int] = None,
-    donate: bool = False,
     mesh=None,
     population_axes: Tuple[str, ...] = (),
-) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
-    """Returns step(state, batches) -> (state, metrics).
+) -> Callable[..., Tuple[jnp.ndarray, PyTree]]:
+    """Phase 1 of the step: the per-agent gradient-estimate dispatch.
 
-    ``loss_fn(params, batch)`` is a single-agent loss; ``batches`` is a
-    pytree whose leaves have leading axis ``n_agents`` (each agent's
-    local shard of the data — the paper's split-data setup).
-
-    ``donate=True`` returns the step already jitted with the incoming
-    state's buffers donated (in-place update of params/momentum — the
-    caller must rebind ``state = step(state, ...)`` and never reuse the
-    old state).  The default returns the raw traceable function so
-    callers can apply their own ``jax.jit`` (e.g. with shardings, as
-    ``launch/dryrun.py`` does).
-
-    ``dispatch="shard_cond"`` additionally needs ``mesh`` +
-    ``population_axes``: the estimation phase runs under a partial
-    ``shard_map`` over the population axes with a *runtime* branch on
-    the shard's agent type, so ZO devices never build the backward pass
-    (HLO conditionals are dynamic).  The shard_map gossip lowerings
-    (``gossip="rr_ppermute"`` / ``"graph_ppermute"``) need the same two
-    arguments plus one agent per population shard.
-
-    Heterogeneous populations (``cfg.sigmas`` / ``rvs`` / ``lrs`` /
-    ``estimators_zo``, see ``core/population.py``) run a grouped
-    variant of the select/split machinery: ZO agents are grouped by
-    estimator kind, each group padded to its ``rv_max`` draw count with
-    masked excess draws, and per-group gradient-estimate variance is
-    logged as ``grad_var_zo_<kind>`` / ``grad_var_fo`` metrics.
-    ``dispatch="shard_cond"`` requires a homogeneous cohort; an
-    all-equal per-agent override collapses onto the homogeneous path
-    bit-identically (tests/test_population.py).
+    Returns ``estimate(params, batches, agent_keys, nu, nu_vec)`` ->
+    ``(losses, g)``, both with leading axis ``n_agents``.  ``nu`` is the
+    homogeneous smoothing radius (scalar); ``nu_vec`` the per-ZO-agent
+    radii of a heterogeneous cohort (ignored when homogeneous).  All
+    dispatch variants (select / split / shard_cond, grouped
+    heterogeneous select / split, the single-agent fast path) live
+    here; the estimator contracts are untouched.
     """
-    # deferred: topology depends on core.gossip's primitives, so a
-    # module-level import here would cycle through repro.core.__init__
-    from repro.topology.mixer import make_mixer, shard_agent_index
+    from repro.topology.mixer import shard_agent_index
 
     n = cfg.n_agents
-    # per-agent sigma/rv/lr tables + estimator-kind groups; a fully
-    # uniform population collapses onto the scalar path below, which is
-    # what pins "all-equal per-agent values == homogeneous" bit-exactly
     pop = population.resolve_population(cfg)
     if not pop.homogeneous and cfg.dispatch == "shard_cond":
+        # same guard as build_hdo_step — this builder is public API and
+        # must not silently fall through to the grouped-select path
         raise ValueError(
             "dispatch='shard_cond' needs a homogeneous ZO cohort (one "
             "estimator kind, uniform sigma/rv/lr); use 'select' or 'split' "
             "for heterogeneous populations"
         )
-    sched = schedules.warmup_cosine(
-        pop.lr0 if pop.homogeneous else cfg.lr,
-        cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine,
-    )
-    is_zo = zo_mask(cfg)
-    mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes)
-    mixer_metrics = {
-        k: jnp.float32(v) for k, v in mixer.diagnostics().items()
-    }
+    rv_tab = None if pop.homogeneous else jnp.asarray(pop.rv_array())
 
     def per_agent_fo(params_i, batch_i):
         return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
@@ -147,22 +126,6 @@ def build_hdo_step(
             rv=pop.rv0,
             nu=nu,
         )
-
-    # -- heterogeneous cohort machinery (trace-time constants; only
-    #    built when the population is genuinely heterogeneous) ----------
-    if pop.homogeneous:
-        lr_rel = sigma_tab = rv_tab = None
-    else:
-        if cfg.lr <= 0:
-            raise ValueError(
-                "heterogeneous lrs scale the shared schedule, which is "
-                f"anchored at cfg.lr — cfg.lr must be > 0, got {cfg.lr}"
-            )
-        # per-agent lr enters as a scale on the shared schedule shape:
-        # lr_i(t) = sched(t) * lrs[i] / cfg.lr
-        lr_rel = jnp.asarray(pop.lr_array() / np.float32(cfg.lr))
-        sigma_tab = jnp.asarray(pop.sigma_array())
-        rv_tab = jnp.asarray(pop.rv_array())
 
     def zo_for_kind(kind, rv_max):
         """Uniform program for one kind group, padded to rv_max draws;
@@ -228,56 +191,34 @@ def build_hdo_step(
             losses = jnp.where(mask, l_k, losses)
         return losses, g
 
-    def subset_var(tree, idx):
-        """Per-group gradient-estimate variance: (1/|G|) sum_{i in G}
-        ||g_i - mean_G||^2 over the flattened estimates."""
-        idx = np.asarray(list(idx))
+    is_zo = zo_mask(cfg)
 
-        def v(x):
-            xs = x[idx].astype(jnp.float32)
-            mu = xs.mean(0, keepdims=True)
-            return jnp.sum((xs - mu) ** 2) / idx.size
-
-        return sum(jax.tree.leaves(jax.tree.map(v, tree)))
-
-    def step(state: HDOState, batches) -> Tuple[HDOState, Dict[str, jnp.ndarray]]:
-        t = state.step
-        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
-        lr = sched(t)
-        nu = (
-            lr / jnp.sqrt(jnp.float32(param_dim))
-            if (cfg.nu_from_lr and param_dim)
-            else jnp.float32(pop.sigma0)
-        )
-        lr_vec = None if pop.homogeneous else lr * lr_rel  # (n,)
-
-        agent_keys = jax.random.split(key, n)
-
-        # ---- local estimates -------------------------------------------
+    def estimate(params, batches, agent_keys, nu, nu_vec=None):
         n0 = cfg.n_zeroth
         if not pop.homogeneous:
             # heterogeneous cohort: per-agent (sigma, rv, lr), possibly
             # mixed estimator kinds — grouped select/split dispatch
-            if cfg.nu_from_lr and param_dim:
-                nu_vec = lr_vec[:n0] / jnp.sqrt(jnp.float32(param_dim))
-            else:
-                nu_vec = sigma_tab
+            if nu_vec is None:
+                raise ValueError(
+                    "heterogeneous cohort: estimate() needs the per-ZO-agent "
+                    "nu_vec (length n_zeroth), e.g. the resolved sigma table"
+                )
             if cfg.dispatch == "split":
-                losses, g = het_split(state.params, batches, agent_keys, nu_vec)
-            else:
-                losses, g = het_select(state.params, batches, agent_keys, nu_vec)
-        elif n == 1:
+                return het_split(params, batches, agent_keys, nu_vec)
+            return het_select(params, batches, agent_keys, nu_vec)
+        if n == 1:
             # single-agent population (e.g. llama4 pod-population on the
             # single-pod mesh): skip vmap so inner shard_map layers (the
             # expert-parallel MoE path) remain top-level collectives.
             sq = lambda t: jax.tree.map(lambda x: x[0], t)
             if n0 == 1:
-                l1, g1 = per_agent_zo(sq(state.params), sq(batches), agent_keys[0], nu)
+                l1, g1 = per_agent_zo(sq(params), sq(batches), agent_keys[0], nu)
             else:
-                l1, g1 = per_agent_fo(sq(state.params), sq(batches))
+                l1, g1 = per_agent_fo(sq(params), sq(batches))
             losses = l1[None]
             g = jax.tree.map(lambda x: x[None], g1)
-        elif cfg.dispatch == "shard_cond" and 0 < n0 < n and mesh is not None:
+            return losses, g
+        if cfg.dispatch == "shard_cond" and 0 < n0 < n and mesh is not None:
             from jax.sharding import PartitionSpec as P
 
             pop_axes = tuple(a for a in population_axes if a in mesh.shape)
@@ -306,98 +247,226 @@ def build_hdo_step(
             # without this pin XLA partitions the key computation and
             # the 0.4.x lowering produces wrong bits (see compat)
             agent_keys = compat.replicate_operand(agent_keys, mesh)
-            losses, g = compat.shard_map(
+            return compat.shard_map(
                 shard_fn,
                 mesh=mesh,
                 in_specs=(pspec, pspec, pspec, P()),
                 out_specs=(pspec, pspec),
                 axis_names=set(pop_axes),
                 check_vma=False,
-            )(state.params, batches, agent_keys, nu)
-        elif cfg.dispatch == "split" and 0 < n0 < n:
+            )(params, batches, agent_keys, nu)
+        if cfg.dispatch == "split" and 0 < n0 < n:
             # beyond-paper: agents are sorted (ZO first), so slicing the
             # stacked population lets every device compute ONLY its own
             # estimator kind (no masked double work).
             take = lambda t, sl: jax.tree.map(lambda x: x[sl], t)
             loss_zo, g_zo = jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
-                take(state.params, slice(0, n0)), take(batches, slice(0, n0)),
+                take(params, slice(0, n0)), take(batches, slice(0, n0)),
                 agent_keys[:n0],
             )
             loss_fo, g_fo = jax.vmap(per_agent_fo)(
-                take(state.params, slice(n0, n)), take(batches, slice(n0, n))
+                take(params, slice(n0, n)), take(batches, slice(n0, n))
             )
             g = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), g_zo, g_fo)
             losses = jnp.concatenate([loss_zo, loss_fo])
+            return losses, g
+        # paper-faithful SPMD-uniform baseline: both estimators are
+        # computed for every (anonymous) agent, then masked.
+        if cfg.n_first > 0:
+            loss_fo, g_fo = jax.vmap(per_agent_fo)(params, batches)
         else:
-            # paper-faithful SPMD-uniform baseline: both estimators are
-            # computed for every (anonymous) agent, then masked.
-            if cfg.n_first > 0:
-                loss_fo, g_fo = jax.vmap(per_agent_fo)(state.params, batches)
-            else:
-                loss_fo = jnp.zeros((n,), jnp.float32)
-                g_fo = jax.tree.map(jnp.zeros_like, state.params)
-            if cfg.n_zeroth > 0:
-                loss_zo, g_zo = jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
-                    state.params, batches, agent_keys
-                )
-            else:
-                loss_zo = jnp.zeros((n,), jnp.float32)
-                g_zo = jax.tree.map(jnp.zeros_like, state.params)
-
-            g = _select_tree(is_zo, g_zo, g_fo)
-            losses = jnp.where(is_zo, loss_zo, loss_fo)
-
-        # ---- local momentum-SGD step (paper: g <- m g + (1-m) grad) ---
-        if cfg.momentum > 0.0:
-            new_mom = jax.tree.map(
-                lambda m, gi: (
-                    cfg.momentum * m.astype(jnp.float32)
-                    + (1.0 - cfg.momentum) * gi.astype(jnp.float32)
-                ).astype(m.dtype),
-                state.momentum,
-                g,
+            loss_fo = jnp.zeros((n,), jnp.float32)
+            g_fo = jax.tree.map(jnp.zeros_like, params)
+        if cfg.n_zeroth > 0:
+            loss_zo, g_zo = jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
+                params, batches, agent_keys
             )
-            upd = new_mom
         else:
-            new_mom = state.momentum
-            upd = jax.tree.map(lambda gi: gi.astype(jnp.float32), g)
+            loss_zo = jnp.zeros((n,), jnp.float32)
+            g_zo = jax.tree.map(jnp.zeros_like, params)
 
+        g = _select_tree(is_zo, g_zo, g_fo)
+        losses = jnp.where(is_zo, loss_zo, loss_fo)
+        return losses, g
+
+    return estimate
+
+
+def build_hdo_step(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    cfg: HDOConfig,
+    *,
+    param_dim: Optional[int] = None,
+    donate: bool = False,
+    mesh=None,
+    population_axes: Tuple[str, ...] = (),
+) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
+    """Returns step(state, batches) -> (state, metrics).
+
+    ``loss_fn(params, batch)`` is a single-agent loss; ``batches`` is a
+    pytree whose leaves have leading axis ``n_agents`` (each agent's
+    local shard of the data — the paper's split-data setup).
+
+    The step composes three phases built at trace-build time:
+    ``build_estimate_phase`` (gradient-estimate dispatch),
+    ``localupdate.make_local_update`` (the ``cfg.optimizer`` rule,
+    with ``cfg.clip_norm`` per-agent gradient clipping), and
+    ``topology.mixer.make_mixer`` (the interaction step).  With
+    ``cfg.local_steps = H > 1`` the estimate+update pair runs H times
+    per round under ``lax.scan`` — each substep folds its own PRNG key
+    from the global substep counter ``t*H + h`` (H=1 reduces to the
+    pre-refactor key stream exactly) and reuses the round's batches —
+    and the Mixer still runs exactly once, after the scan.  Scalar
+    metrics are averaged over the H substeps.
+
+    ``donate=True`` returns the step already jitted with the incoming
+    state's buffers donated (in-place update of params/opt_state — the
+    caller must rebind ``state = step(state, ...)`` and never reuse the
+    old state).  The default returns the raw traceable function so
+    callers can apply their own ``jax.jit`` (e.g. with shardings, as
+    ``launch/dryrun.py`` does).
+
+    ``dispatch="shard_cond"`` additionally needs ``mesh`` +
+    ``population_axes``: the estimation phase runs under a partial
+    ``shard_map`` over the population axes with a *runtime* branch on
+    the shard's agent type, so ZO devices never build the backward pass
+    (HLO conditionals are dynamic).  The shard_map gossip lowerings
+    (``gossip="rr_ppermute"`` / ``"graph_ppermute"``) need the same two
+    arguments plus one agent per population shard.
+
+    Heterogeneous populations (``cfg.sigmas`` / ``rvs`` / ``lrs`` /
+    ``estimators_zo``, see ``core/population.py``) run a grouped
+    variant of the select/split machinery, with per-group
+    gradient-estimate variance (``grad_var_zo_<kind>`` /
+    ``grad_var_fo``) and per-group loss trajectories
+    (``loss_zo_<kind>_mean``) logged as metrics.
+    ``dispatch="shard_cond"`` requires a homogeneous cohort; an
+    all-equal per-agent override collapses onto the homogeneous path
+    bit-identically (tests/test_population.py).
+    """
+    # deferred: topology depends on core.gossip's primitives, so a
+    # module-level import here would cycle through repro.core.__init__
+    from repro.topology.mixer import make_mixer
+
+    n = cfg.n_agents
+    H = cfg.local_steps
+    # per-agent sigma/rv/lr tables + estimator-kind groups; a fully
+    # uniform population collapses onto the scalar path below, which is
+    # what pins "all-equal per-agent values == homogeneous" bit-exactly
+    pop = population.resolve_population(cfg)
+    if not pop.homogeneous and cfg.dispatch == "shard_cond":
+        raise ValueError(
+            "dispatch='shard_cond' needs a homogeneous ZO cohort (one "
+            "estimator kind, uniform sigma/rv/lr); use 'select' or 'split' "
+            "for heterogeneous populations"
+        )
+    sched = schedules.warmup_cosine(
+        pop.lr0 if pop.homogeneous else cfg.lr,
+        cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine,
+    )
+    mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes)
+    mixer_metrics = {
+        k: jnp.float32(v) for k, v in mixer.diagnostics().items()
+    }
+    estimate = build_estimate_phase(
+        loss_fn, cfg, mesh=mesh, population_axes=population_axes
+    )
+    local_update = localupdate.make_local_update(cfg)
+
+    # -- heterogeneous cohort tables (trace-time constants) ------------
+    if pop.homogeneous:
+        lr_rel = sigma_tab = None
+    else:
+        if cfg.lr <= 0:
+            raise ValueError(
+                "heterogeneous lrs scale the shared schedule, which is "
+                f"anchored at cfg.lr — cfg.lr must be > 0, got {cfg.lr}"
+            )
+        # per-agent lr enters as a scale on the shared schedule shape:
+        # lr_i(t) = sched(t) * lrs[i] / cfg.lr
+        lr_rel = jnp.asarray(pop.lr_array() / np.float32(cfg.lr))
+        sigma_tab = jnp.asarray(pop.sigma_array())
+
+    def subset_var(tree, idx):
+        """Per-group gradient-estimate variance: (1/|G|) sum_{i in G}
+        ||g_i - mean_G||^2 over the flattened estimates."""
+        idx = np.asarray(list(idx))
+
+        def v(x):
+            xs = x[idx].astype(jnp.float32)
+            mu = xs.mean(0, keepdims=True)
+            return jnp.sum((xs - mu) ** 2) / idx.size
+
+        return sum(jax.tree.leaves(jax.tree.map(v, tree)))
+
+    def step(state: HDOState, batches) -> Tuple[HDOState, Dict[str, jnp.ndarray]]:
+        t = state.step
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
+        lr = sched(t)
+        nu = (
+            lr / jnp.sqrt(jnp.float32(param_dim))
+            if (cfg.nu_from_lr and param_dim)
+            else jnp.float32(pop.sigma0)
+        )
+        lr_vec = None if pop.homogeneous else lr * lr_rel  # (n,)
+        n0 = cfg.n_zeroth
         if pop.homogeneous:
-            new_params = jax.tree.map(
-                lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
-                state.params,
-                upd,
-            )
+            nu_vec = None
+        elif cfg.nu_from_lr and param_dim:
+            nu_vec = lr_vec[:n0] / jnp.sqrt(jnp.float32(param_dim))
         else:
-            def upd_leaf(p, u):
-                lrb = lr_vec.reshape((n,) + (1,) * (p.ndim - 1))
-                return (p.astype(jnp.float32) - lrb * u).astype(p.dtype)
+            nu_vec = sigma_tab
 
-            new_params = jax.tree.map(upd_leaf, state.params, upd)
+        def substep(params, opt_state, ctr):
+            """One estimate+update iteration at substep counter ``ctr``
+            (H=1: ctr == t, the pre-refactor key stream)."""
+            skey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), ctr)
+            agent_keys = jax.random.split(skey, n)
+            losses, g = estimate(params, batches, agent_keys, nu, nu_vec)
+            new_params, new_opt = local_update.apply(
+                params, g, opt_state, lr, lr_vec
+            )
+            mets = {
+                "loss_mean": losses.mean(),
+                "loss_std": losses.std(),
+            }
+            if cfg.n_first:
+                mets["loss_fo_mean"] = losses[n0:].mean()
+            if cfg.n_zeroth:
+                mets["loss_zo_mean"] = losses[:n0].mean()
+            if not pop.homogeneous:
+                # per-group diagnostics — the heterogeneity view next to
+                # consensus_distance (high-sigma / low-rv groups show up
+                # as high-variance estimators; per-group loss
+                # trajectories expose who is actually descending)
+                for grp in pop.groups:
+                    idx = np.asarray(grp.indices)
+                    mets[f"grad_var_zo_{grp.kind}"] = subset_var(g, grp.indices)
+                    mets[f"loss_zo_{grp.kind}_mean"] = losses[idx].mean()
+                if cfg.n_first:
+                    mets["grad_var_fo"] = subset_var(g, range(n0, n))
+            return new_params, new_opt, mets
 
-        # ---- gossip (the Mixer interaction step) ----------------------
+        # ---- local update phase: H estimate+update substeps ----------
+        if H == 1:
+            new_params, new_opt, mets = substep(state.params, state.opt_state, t)
+        else:
+            def body(carry, h):
+                p, o = carry
+                np_, no_, m_ = substep(p, o, t * H + h)
+                return (np_, no_), m_
+
+            (new_params, new_opt), mets = jax.lax.scan(
+                body, (state.params, state.opt_state), jnp.arange(H)
+            )
+            mets = {k: v.mean(axis=0) for k, v in mets.items()}
+
+        # ---- mix (the Mixer interaction step — once per round) -------
         gkey = jax.random.fold_in(key, 7)
         new_params = mixer(new_params, key=gkey, step=t)
 
-        metrics = {
-            "loss_mean": losses.mean(),
-            "loss_std": losses.std(),
-            "lr": lr,
-            **mixer_metrics,
-        }
-        if cfg.n_first:
-            metrics["loss_fo_mean"] = losses[cfg.n_zeroth :].mean()
-        if cfg.n_zeroth:
-            metrics["loss_zo_mean"] = losses[: cfg.n_zeroth].mean()
-        if not pop.homogeneous:
-            # per-group gradient-estimate variance — the heterogeneity
-            # diagnostics next to consensus_distance (high-sigma /
-            # low-rv groups show up as high-variance estimators)
-            for grp in pop.groups:
-                metrics[f"grad_var_zo_{grp.kind}"] = subset_var(g, grp.indices)
-            if cfg.n_first:
-                metrics["grad_var_fo"] = subset_var(g, range(n0, n))
-        return HDOState(params=new_params, momentum=new_mom, step=t + 1), metrics
+        metrics = {**mets, "lr": lr, **mixer_metrics}
+        return HDOState(params=new_params, opt_state=new_opt, step=t + 1), metrics
 
     if donate:
         return jax.jit(step, donate_argnums=(0,))

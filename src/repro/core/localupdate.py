@@ -1,0 +1,183 @@
+"""The local-update phase of the HDO step (``HDOConfig.optimizer``).
+
+``build_hdo_step`` used to hand-roll the paper's momentum-SGD rule
+inline while the ``repro.optim`` ``(init, update)`` substrate sat
+unused.  This module is the update-side sibling of the PR-3 ``Mixer``
+refactor: one ``LocalUpdate`` object per optimizer, built at
+trace-build time and called once per local substep between the
+estimate and mix phases,
+
+    new_params, new_opt_state = lu.apply(params, grads, opt_state,
+                                         lr, lr_vec)
+
+where every tree has the stacked leading ``n_agents`` axis.  The
+``"sgd"`` instance reproduces the pre-refactor inline math *bit for
+bit* (f32 accumulate, ``momentum_dtype`` write-back consumed by the
+parameter update, per-agent ``lr_vec`` as a broadcast scale) — pinned
+by tests/test_localupdate.py — and ``"adamw"`` plugs the
+``optim.adamw`` transform into the same slot.  ``cfg.clip_norm > 0``
+clips each agent's gradient by its own global norm
+(``optim.clip_by_global_norm`` vmapped over the population) before the
+optimizer update.
+
+The perf half: ``use_kernel=True`` (default: on TPU only, like the
+graph mixers) routes the momentum-SGD apply through the fused
+``opt_apply`` Pallas kernel — each large leaf is raveled per agent and
+the momentum update + parameter update stream in a single O(d) pass
+instead of writing the momentum and reading it back; leaves smaller
+than a kernel BLOCK (biases, norms — negligible traffic) keep the jnp
+math rather than paying a tail-padded launch each (see
+``kernels/opt_apply.py``; benched in ``BENCH_optim.json``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import OPTIMIZERS as OPTIMIZERS  # canonical tuple
+from repro.configs.base import HDOConfig
+from repro.kernels import ops
+
+PyTree = Any
+
+# per-agent flat size below which the kernel route is not worth a
+# (tail-padded) pallas launch — small leaves use the jnp math instead.
+# One kernel BLOCK: below this the pad would dominate the stream.
+_KERNEL_MIN_SIZE = 8192
+
+
+class LocalUpdate(NamedTuple):
+    """One local optimizer: ``init`` builds the (stacked) opt state,
+    ``apply`` runs clip -> optimizer update -> parameter update."""
+
+    name: str
+    init: Callable[[PyTree], PyTree]
+    # (params, grads, opt_state, lr, lr_vec) -> (new_params, new_opt_state)
+    apply: Callable[..., Tuple[PyTree, PyTree]]
+
+
+def _apply_lr(params: PyTree, upd: PyTree, lr, lr_vec, n: int) -> PyTree:
+    """x <- x - lr * u with f32 accumulate and params-dtype write-back;
+    ``lr_vec`` (per-agent heterogeneity) broadcasts over the leading
+    agent axis.  Bit-identical to the pre-refactor inline expressions
+    (the homogeneous branch IS ``optim.apply_updates``)."""
+    if lr_vec is None:
+        return optim.apply_updates(params, upd, lr)
+
+    def leaf(p, u):
+        lrb = lr_vec.reshape((n,) + (1,) * (p.ndim - 1))
+        return (p.astype(jnp.float32) - lrb * u).astype(p.dtype)
+
+    return jax.tree.map(leaf, params, upd)
+
+
+def make_local_update(cfg: HDOConfig, *,
+                      use_kernel: Optional[bool] = None) -> LocalUpdate:
+    """Builds the LocalUpdate for ``cfg.optimizer``.
+
+    ``use_kernel`` routes the momentum-SGD apply through the fused
+    ``opt_apply`` Pallas kernel; default off-TPU is the jnp/optim tree
+    path (the interpret-friendly oracle, and the bit-identity surface
+    the default config pins).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    n = cfg.n_agents
+    clip = float(cfg.clip_norm)
+
+    def maybe_clip(grads):
+        if clip <= 0.0:
+            return grads
+        # each agent clips by its OWN global norm — the population is n
+        # independent local optimizers, not one big tree
+        return jax.vmap(lambda t: optim.clip_by_global_norm(t, clip))(grads)
+
+    if cfg.optimizer == "adamw":
+        # cfg.momentum is the first-moment decay (b1) — the same knob it
+        # is for sgd, so CLI sweeps over --momentum act on both rules —
+        # and cfg.weight_decay is the decoupled decay (0 = plain Adam).
+        # State stays f32 regardless of momentum_dtype: the variance
+        # accumulator needs f32 range, and a bf16 mu would break the
+        # resume-bit-identity contract unless the rounded value also
+        # drove the update — momentum_dtype is an sgd-momentum knob.
+        opt = optim.adamw(b1=cfg.momentum, weight_decay=cfg.weight_decay)
+
+        def apply(params, grads, opt_state, lr, lr_vec):
+            upd, new_state = opt.update(maybe_clip(grads), opt_state, params)
+            return _apply_lr(params, upd, lr, lr_vec, n), new_state
+
+        return LocalUpdate("adamw", opt.init, apply)
+
+    # ---- "sgd": the paper's momentum-SGD rule ------------------------
+    opt = optim.sgd(cfg.momentum)
+    mdt = jnp.dtype(cfg.momentum_dtype)
+
+    def init(stacked):
+        if cfg.momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), stacked)
+
+    def tree_sgd_leaf(p, g, m, lrb):
+        """The exact tree-path math for one stacked leaf: momentum in
+        f32, stored in m.dtype, the stored value consumed by the
+        parameter update."""
+        nm = (cfg.momentum * m.astype(jnp.float32)
+              + (1.0 - cfg.momentum) * g.astype(jnp.float32)).astype(m.dtype)
+        return (p.astype(jnp.float32) - lrb * nm).astype(p.dtype), nm
+
+    def fused_apply(params, grads, opt_state, lr, lr_vec):
+        """Per-leaf routing: leaves whose per-agent flat size reaches
+        the kernel BLOCK stream through ``opt_apply`` (one fused O(d)
+        pass per agent — the momentum never re-reads from HBM; on real
+        models these leaves carry essentially all the traffic); small
+        leaves (biases, norms) use the jnp math directly rather than
+        each paying a tail-padded kernel launch.  Both routes compute
+        the identical rounding chain."""
+        lrs = (jnp.broadcast_to(jnp.asarray(lr, jnp.float32), (n,))
+               if lr_vec is None else lr_vec)
+        beta = jnp.float32(cfg.momentum)
+
+        def leaf(p, g, m):
+            if p.size // n >= _KERNEL_MIN_SIZE:
+                po, mo = jax.vmap(
+                    lambda pf, gf, mf, lrf: ops.opt_apply(pf, gf, mf, lrf, beta)
+                )(p.reshape(n, -1), g.reshape(n, -1), m.reshape(n, -1), lrs)
+                return po.reshape(p.shape), mo.reshape(m.shape)
+            lrb = lrs.reshape((n,) + (1,) * (p.ndim - 1))
+            return tree_sgd_leaf(p, g, m, lrb)
+
+        pairs = jax.tree.map(leaf, params, grads, opt_state)
+        return jax.tree_util.tree_transpose(
+            jax.tree.structure(params), jax.tree.structure((0, 0)), pairs
+        )
+
+    def apply(params, grads, opt_state, lr, lr_vec):
+        g = maybe_clip(grads)
+        if cfg.momentum == 0.0:
+            upd, _ = opt.update(g, opt_state, params)  # = f32(g)
+            return _apply_lr(params, upd, lr, lr_vec, n), opt_state
+        if use_kernel:
+            return fused_apply(params, g, opt_state, lr, lr_vec)
+        # pre-refactor bit-parity path: momentum accumulated in f32,
+        # stored in momentum_dtype, and the *stored* (rounded) momentum
+        # is what the parameter update consumes
+        st = jax.tree.map(lambda m: m.astype(jnp.float32), opt_state)
+        upd_f32, _ = opt.update(g, st, params)
+        new_m = jax.tree.map(lambda u, m: u.astype(m.dtype), upd_f32, opt_state)
+        return _apply_lr(params, new_m, lr, lr_vec, n), new_m
+
+    return LocalUpdate("sgd", init, apply)
+
+
+def opt_state_pspecs(cfg: HDOConfig, params_pspecs: PyTree) -> PyTree:
+    """PartitionSpec tree for ``HDOState.opt_state`` given the params'
+    spec tree (the opt state shards exactly like the params it tracks;
+    scalar counters replicate).  Used by launch/dryrun.py."""
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.optimizer == "sgd":
+        return params_pspecs if cfg.momentum > 0.0 else ()
+    return {"mu": params_pspecs, "nu": params_pspecs, "count": P()}

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import gossip_avg as _gossip
 from repro.kernels import gossip_mix as _gmix
+from repro.kernels import opt_apply as _opt
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import zo_combine as _zo
 from repro.kernels import zo_tangent as _zt
@@ -76,6 +77,15 @@ def gossip_mix(x, nbrs, w_self, w, interpret: bool | None = None):
     with its k neighbors (one fused O(d) pass)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _gmix.gossip_mix(x, nbrs, w_self, w, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def opt_apply(p, g, m, lr, beta, interpret: bool | None = None):
+    """p, g, m: (d,) -> (new_p, new_m): the fused momentum-SGD apply
+    ``m' = beta*m + (1-beta)*g; p' = p - lr*m'`` in one O(d) pass
+    (f32 accumulate; m' stored in m.dtype before p' consumes it)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _opt.opt_apply(p, g, m, lr, beta, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -53,6 +53,19 @@ def zo_perturb_batch_ref(x, seed, rv: int, nu: float):
     return jax.vmap(row)(jnp.arange(rv))
 
 
+def opt_apply_ref(p, g, m, lr, beta):
+    """Fused momentum-SGD apply oracle (the kernel's exact association):
+    the new momentum is rounded to ``m.dtype`` *before* the parameter
+    update consumes it — the tree path's ``momentum_dtype`` write-back."""
+    beta = jnp.asarray(beta, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+    new_m = (beta * m.astype(jnp.float32)
+             + (1.0 - beta) * g.astype(jnp.float32)).astype(m.dtype)
+    new_p = (p.astype(jnp.float32)
+             - lr * new_m.astype(jnp.float32)).astype(p.dtype)
+    return new_p, new_m
+
+
 def gossip_avg_ref(x, y):
     return ((x.astype(jnp.float32) + y.astype(jnp.float32)) * 0.5).astype(x.dtype)
 

@@ -28,10 +28,12 @@ from repro.configs.base import (
     DISPATCH_MODES,
     GOSSIP_MODES,
     MOMENTUM_DTYPES,
+    OPTIMIZERS,
     TOPOLOGIES,
     HDOConfig,
 )
 from repro.core import hdo as hdolib
+from repro.core import localupdate
 from repro.launch import hlo_analysis, specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
@@ -57,6 +59,8 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
                  attn_remat: bool = False, window_slice: bool = False,
                  moe_constraint: bool = False, donate: bool = False,
                  fsdp: bool = False, topology: str = "ring",
+                 optimizer: str = "sgd", local_steps: int = 1,
+                 clip_norm: float = 0.0,
                  sigmas=None, rvs=None, lrs=None, estimators_zo=None):
     """Returns (lowered, mesh, meta) for one combination, or None if skipped."""
     shape = INPUT_SHAPES[shape_name]
@@ -110,6 +114,9 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
             gossip=gossip if n_agents > 1 else "none",
             topology=topology,
             momentum=0.9,
+            optimizer=optimizer,
+            local_steps=local_steps,
+            clip_norm=clip_norm,
             dispatch=dispatch,
             momentum_dtype=momentum_dtype,
         )
@@ -125,7 +132,13 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
         batch_sds = specs.train_batch_specs(cfg, shape, n_agents)
 
         pspec_params = shardlib.params_pspecs(state_sds.params, mcfg, mesh, population=True)
-        state_psp = hdolib.HDOState(params=pspec_params, momentum=pspec_params, step=P())
+        # the opt state shards exactly like the params it tracks
+        # (momentum tree for sgd, mu/nu/count for adamw)
+        state_psp = hdolib.HDOState(
+            params=pspec_params,
+            opt_state=localupdate.opt_state_pspecs(hcfg, pspec_params),
+            step=P(),
+        )
         batch_psp = shardlib.batch_pspecs(batch_sds, mcfg, mesh, population=True)
 
         jitted = jax.jit(
@@ -185,13 +198,17 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
             moe_constraint: bool = False, donate: bool = False,
             fsdp: bool = False, label: str = "",
             topology: str = "ring",
+            optimizer: str = "sgd", local_steps: int = 1,
+            clip_norm: float = 0.0,
             sigmas=None, rvs=None, lrs=None, estimators_zo=None) -> Dict[str, Any]:
     t0 = time.time()
     built = build_dryrun(arch, shape_name, multi_pod=multi_pod, gossip=gossip,
                          rv=rv, dispatch=dispatch, momentum_dtype=momentum_dtype,
                          attn_remat=attn_remat, window_slice=window_slice,
                          moe_constraint=moe_constraint, donate=donate, fsdp=fsdp,
-                         topology=topology, sigmas=sigmas, rvs=rvs, lrs=lrs,
+                         topology=topology, optimizer=optimizer,
+                         local_steps=local_steps, clip_norm=clip_norm,
+                         sigmas=sigmas, rvs=rvs, lrs=lrs,
                          estimators_zo=estimators_zo)
     if built is None:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
@@ -227,6 +244,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
         "label": label or "baseline",
         "variant": {
             "dispatch": dispatch, "momentum_dtype": momentum_dtype,
+            "optimizer": optimizer, "local_steps": local_steps,
             "attn_remat": attn_remat, "window_slice": window_slice,
             "moe_constraint": moe_constraint, "donate": donate, "fsdp": fsdp,
         },
@@ -259,6 +277,12 @@ def main() -> None:
     ap.add_argument("--dispatch", default="select", choices=list(DISPATCH_MODES))
     ap.add_argument("--momentum-dtype", default="float32",
                     choices=list(MOMENTUM_DTYPES))
+    ap.add_argument("--optimizer", default="sgd", choices=list(OPTIMIZERS),
+                    help="LocalUpdate rule for the train-shape step")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="estimate+update iterations per gossip round")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="per-agent gradient clip (0 disables)")
     ap.add_argument("--attn-remat", action="store_true")
     ap.add_argument("--window-slice", action="store_true")
     ap.add_argument("--moe-constraint", nargs="?", const=True, default=False,
@@ -276,7 +300,8 @@ def main() -> None:
                      momentum_dtype=args.momentum_dtype, attn_remat=args.attn_remat,
                      window_slice=args.window_slice, moe_constraint=args.moe_constraint,
                      donate=args.donate, fsdp=args.fsdp, label=args.label,
-                     topology=args.topology,
+                     topology=args.topology, optimizer=args.optimizer,
+                     local_steps=args.local_steps, clip_norm=args.clip_norm,
                      sigmas=parse_csv(args.sigmas, float),
                      rvs=parse_csv(args.rvs, int),
                      lrs=parse_csv(args.lrs, float),

@@ -19,7 +19,15 @@ values cycled over the ZO cohort and ``--lrs`` over the whole
 population, e.g. ``--zo 4 --sigmas 1e-3,1e-1`` alternates a clean and
 a noisy ZO agent; ``--estimators-zo multi_rv,fwd_grad`` mixes kinds.
 The step then logs per-group gradient-estimate variance
-(``grad_var_zo_<kind>`` / ``grad_var_fo``).
+(``grad_var_zo_<kind>`` / ``grad_var_fo``) and per-group loss
+trajectories (``loss_zo_<kind>_mean``).
+
+Local update: ``--optimizer {sgd,adamw}`` picks the LocalUpdate rule,
+``--local-steps H`` runs H estimate+update iterations per gossip round
+(periodic averaging — communication drops to 1/H per estimator pass),
+``--clip-norm`` clips each agent's gradient by its global norm.
+``--ckpt`` + ``--save-every`` checkpoint the full HDOState (params +
+opt_state + step); ``--resume`` continues a run bit-identically.
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import (
     GOSSIP_MODES,
     HDOConfig,
+    OPTIMIZERS,
     TOPOLOGIES,
     ZO_ESTIMATORS,
     ZO_IMPLS,
@@ -96,13 +105,37 @@ def main() -> None:
                          "always cycles its n-1 tournament rounds)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--optimizer", default="sgd", choices=list(OPTIMIZERS),
+                    help="local-update rule between estimate and gossip "
+                         "(the LocalUpdate phase; sgd is the paper's "
+                         "momentum-SGD, adamw the repro.optim transform)")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="estimate+update iterations per gossip round "
+                         "(H>1 = periodic averaging: communication drops "
+                         "to 1/H per estimator pass)")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="per-agent global-norm gradient clip before the "
+                         "optimizer update (0 disables)")
+    ap.add_argument("--weight-decay", type=float, default=0.0,
+                    help="decoupled weight decay for --optimizer adamw "
+                         "(0 = plain Adam; ignored by sgd)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint path — the full HDOState (params + "
+                         "opt_state + step) is written at the end of the run")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="also checkpoint to --ckpt every N rounds (0: only "
+                         "at the end)")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="resume from a checkpoint written by --ckpt (the "
+                         "HDOConfig must match; continues bit-identically)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if args.save_every and not args.ckpt:
+        ap.error("--save-every needs --ckpt (there is no path to save to)")
 
     hcfg = HDOConfig(
         n_agents=args.agents,
@@ -121,6 +154,10 @@ def main() -> None:
         topology_rounds=args.topology_rounds,
         lr=args.lr,
         momentum=args.momentum,
+        optimizer=args.optimizer,
+        local_steps=args.local_steps,
+        clip_norm=args.clip_norm,
+        weight_decay=args.weight_decay,
         warmup_steps=min(50, args.steps // 5),
         cosine_steps=args.steps,
         seed=args.seed,
@@ -168,24 +205,52 @@ def main() -> None:
     het = not resolve_population(hcfg).homogeneous
     print(f"# arch={cfg.name} params={n_params/1e6:.2f}M agents={args.agents} "
           f"(zo={args.zo}{', heterogeneous' if het else ''}) "
-          f"estimator={est_desc}/{args.zo_impl} gossip={gossip_desc}")
+          f"estimator={est_desc}/{args.zo_impl} "
+          f"optimizer={args.optimizer}/H={args.local_steps} gossip={gossip_desc}")
 
     step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params))
     state = init_state(params, hcfg)
+    ckpt_meta = {"arch": cfg.name, "hdo": dataclasses.asdict(hcfg)}
+    start = 0
+    if args.resume:
+        state, meta = checkpoint.restore_state(args.resume, state)
+        saved_hdo = meta.get("hdo")
+        if saved_hdo is not None:
+            # msgpack round-trips tuples as lists — compare via json
+            norm = lambda d: json.loads(json.dumps(d, sort_keys=True))
+            cur = norm(dataclasses.asdict(hcfg))
+            old = norm(saved_hdo)
+            drift = sorted(k for k in cur.keys() | old.keys()
+                           if cur.get(k) != old.get(k))
+            if drift:
+                raise SystemExit(
+                    f"--resume config mismatch on {drift}: the checkpoint "
+                    f"was written under a different HDOConfig (key stream / "
+                    f"schedule / opt state would silently diverge)"
+                )
+        start = int(state.step)
+        # fast-forward the (stateful) batch stream past the rounds the
+        # checkpointed run already consumed, so the resumed run sees the
+        # same batches an uninterrupted run would at each round
+        for _ in range(start):
+            next_batches()
+        print(f"# resumed from {args.resume} at round {start}")
 
     t0 = time.time()
-    for t in range(args.steps):
+    for t in range(start, args.steps):
         state, metrics = step_fn(state, next_batches())
         if t % args.log_every == 0 or t == args.steps - 1:
             gamma = consensus_distance(state.params)
             m = {k: float(v) for k, v in metrics.items()}
             print(json.dumps({"step": t, **{k: round(v, 5) for k, v in m.items()},
                               "gamma": float(gamma), "wall_s": round(time.time() - t0, 1)}))
+        if args.ckpt and args.save_every and (t + 1) % args.save_every == 0:
+            checkpoint.save_state(args.ckpt, state, meta=ckpt_meta)
 
     if args.ckpt:
-        checkpoint.save(args.ckpt, jax.device_get(state.params), step=args.steps,
-                        meta={"arch": cfg.name, "hdo": dataclasses.asdict(hcfg)})
-        print(f"# checkpoint written to {args.ckpt}.npz")
+        checkpoint.save_state(args.ckpt, state, meta=ckpt_meta)
+        print(f"# checkpoint written to {args.ckpt}.npz "
+              f"(full HDOState at round {int(state.step)})")
 
 
 if __name__ == "__main__":

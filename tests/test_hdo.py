@@ -81,8 +81,8 @@ def test_split_dispatch_step_identical_to_select(zo_impl, estimator_zo):
     s_spl, m_spl = jax.jit(build_hdo_step(loss_fn, cfg_spl, param_dim=D))(state0, batches)
     np.testing.assert_array_equal(np.asarray(s_sel.params["w"]),
                                   np.asarray(s_spl.params["w"]))
-    np.testing.assert_array_equal(np.asarray(s_sel.momentum["w"]),
-                                  np.asarray(s_spl.momentum["w"]))
+    np.testing.assert_array_equal(np.asarray(s_sel.opt_state["w"]),
+                                  np.asarray(s_spl.opt_state["w"]))
     for k in m_sel:
         np.testing.assert_array_equal(np.asarray(m_sel[k]), np.asarray(m_spl[k]),
                                       err_msg=k)

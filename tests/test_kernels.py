@@ -185,6 +185,59 @@ def test_gossip_mix_generic_weights_close(d, k):
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
 
 
+@pytest.mark.parametrize("d", [8192, 12345, 24576, 1000])
+@pytest.mark.parametrize("mdt", [jnp.float32, jnp.bfloat16])
+def test_opt_apply_bit_exact_vs_ref(d, mdt):
+    """ops.opt_apply == ref.opt_apply_ref bit-for-bit across block
+    boundaries, non-aligned tails, and momentum dtypes.
+
+    beta and lr are dyadic (1/2, 1/4), so every product is exactly
+    representable and LLVM FMA contraction — which varies with fusion
+    clustering between the two compiled graphs — cannot change the
+    rounding.
+    """
+    p = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    g = jax.random.normal(jax.random.PRNGKey(d + 1), (d,))
+    m = (jax.random.normal(jax.random.PRNGKey(d + 2), (d,)) * 0.1).astype(mdt)
+    po, mo = ops.opt_apply(p, g, m, 0.25, 0.5)
+    pe, me = jax.jit(ref.opt_apply_ref)(p, g, m, 0.25, 0.5)
+    assert po.shape == (d,) and po.dtype == p.dtype and mo.dtype == mdt
+    np.testing.assert_array_equal(np.asarray(po), np.asarray(pe))
+    np.testing.assert_array_equal(np.asarray(mo, np.float32),
+                                  np.asarray(me, np.float32))
+
+
+def test_opt_apply_generic_weights_close():
+    """Generic (non-dyadic) beta/lr: parity to 1 ulp (FMA contraction
+    may differ between the separately-compiled graphs on CPU)."""
+    d = 20000
+    p = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    m = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 0.1
+    po, mo = ops.opt_apply(p, g, m, 0.0123, 0.9)
+    pe, me = jax.jit(ref.opt_apply_ref)(p, g, m, 0.0123, 0.9)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pe), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(me), atol=1e-6)
+
+
+def test_opt_apply_bf16_momentum_rounds_before_param_update():
+    """The contract that makes the kernel == the tree path for
+    momentum_dtype="bfloat16": the momentum is rounded to bf16 and the
+    *rounded* value drives the parameter update."""
+    d = 8192
+    p = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    g = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    m = (jax.random.normal(jax.random.PRNGKey(5), (d,)) * 0.1).astype(jnp.bfloat16)
+    po, mo = ops.opt_apply(p, g, m, 0.25, 0.5)
+    nm = (0.5 * m.astype(jnp.float32) + 0.5 * g.astype(jnp.float32)
+          ).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(mo, np.float32),
+                                  np.asarray(nm, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(po),
+        np.asarray((p - 0.25 * nm.astype(jnp.float32)).astype(p.dtype)))
+
+
 def test_gossip_mix_generalizes_gossip_avg():
     """k=1 with (1/2, 1/2) weights is exactly the pairwise average."""
     x = jax.random.normal(jax.random.PRNGKey(5), (20000,))

@@ -137,7 +137,7 @@ def test_masked_rv_equals_smaller_rv():
 
 # ---------------------------------------------------------------------------
 # the collapse contract: all-equal per-agent values == homogeneous, bit
-# for bit (params, momentum, and the metrics dict)
+# for bit (params, opt_state, and the metrics dict)
 # ---------------------------------------------------------------------------
 
 
@@ -159,8 +159,8 @@ def test_all_equal_per_agent_bit_identical_to_homogeneous(zo_impl, dispatch):
     assert set(m1) == set(m2)  # incl. NO grad_var_* keys when collapsed
     np.testing.assert_array_equal(np.asarray(s1.params["w"]),
                                   np.asarray(s2.params["w"]))
-    np.testing.assert_array_equal(np.asarray(s1.momentum["w"]),
-                                  np.asarray(s2.momentum["w"]))
+    np.testing.assert_array_equal(np.asarray(s1.opt_state["w"]),
+                                  np.asarray(s2.opt_state["w"]))
     for k in m1:
         np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]),
                                       err_msg=k)
@@ -198,6 +198,16 @@ def test_heterogeneous_trains_end_to_end(zo_impl, dispatch):
     for key in ("grad_var_zo_multi_rv", "grad_var_zo_fwd_grad",
                 "grad_var_zo_biased_2pt", "grad_var_fo"):
         assert key in m and np.isfinite(float(m[key]))
+    # per-group *loss* trajectories ride along with the variance
+    # diagnostics; the kind-group means must average back to the ZO
+    # cohort mean (groups partition the cohort; sizes 2/1/1 here)
+    for key in ("loss_zo_multi_rv_mean", "loss_zo_fwd_grad_mean",
+                "loss_zo_biased_2pt_mean"):
+        assert key in m and np.isfinite(float(m[key]))
+    cohort = (2 * float(m["loss_zo_multi_rv_mean"])
+              + float(m["loss_zo_fwd_grad_mean"])
+              + float(m["loss_zo_biased_2pt_mean"])) / 4
+    np.testing.assert_allclose(cohort, float(m["loss_zo_mean"]), rtol=1e-5)
     # the mean model fits the target
     mu = jax.tree.map(lambda x: x.mean(0), state.params)
     Xe = jax.random.normal(jax.random.PRNGKey(5), (256, D))

@@ -169,8 +169,8 @@ def test_all_equal_heterogeneous_bit_identical_to_homogeneous(
     assert set(m1) == set(m2)
     np.testing.assert_array_equal(np.asarray(state1.params["w"]),
                                   np.asarray(state2.params["w"]))
-    np.testing.assert_array_equal(np.asarray(state1.momentum["w"]),
-                                  np.asarray(state2.momentum["w"]))
+    np.testing.assert_array_equal(np.asarray(state1.opt_state["w"]),
+                                  np.asarray(state2.opt_state["w"]))
     for k in m1:
         np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]),
                                       err_msg=k)

@@ -307,7 +307,7 @@ def test_measured_gamma_contraction_matches_spectral_prediction(topo_name, n, kw
     st = init_state({"w": jnp.zeros((D,))}, cfg)
     # diverse start so Gamma_0 > 0 (init_state replicates one point)
     st = HDOState(params={"w": jax.random.normal(jax.random.PRNGKey(7), (n, D))},
-                  momentum=st.momentum, step=st.step)
+                  opt_state=st.opt_state, step=st.step)
     gammas = []
     for t in range(17):
         st, _ = step(st, _batches(jax.random.fold_in(jax.random.PRNGKey(1), t), n, 4))
