@@ -21,6 +21,14 @@ The ``optim_*`` section compares the fused momentum-SGD apply
 against the tree-path two-op apply (momentum written to HBM, then read
 back by the parameter update) per ``momentum_dtype``; ``--json``
 writes ``BENCH_optim.json`` alongside the other two artifacts.
+
+The ``plane_*`` section times a FULL jitted HDO round (estimate ->
+update -> mix) under ``param_layout="tree"`` vs ``"plane"`` on a
+many-small-leaf transformer-like pytree at d ~ 2^20 — the regime the
+plane layout targets (per-(agent, leaf) dispatch and the sub-BLOCK jnp
+fallback vs O(#agents) dispatches over one contiguous buffer);
+``--json`` writes ``BENCH_plane.json`` with the analytic per-phase
+dispatch counts (``core.plane.dispatch_counts``) and HBM bytes.
 """
 from __future__ import annotations
 
@@ -87,6 +95,7 @@ def main(json_path: str | None = None) -> None:
     )
     gossip_bench(json_path=side("BENCH_gossip.json"))
     optim_bench(json_path=side("BENCH_optim.json"))
+    plane_bench(json_path=side("BENCH_plane.json"))
 
 
 def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
@@ -201,6 +210,96 @@ def optim_bench(d: int = 1 << 20, json_path: str | None = None):
         payload = {"d": d, "backend": jax.default_backend(),
                    "interpret_mode": jax.default_backend() != "tpu",
                    "entries": entries}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return entries
+
+
+def plane_bench(n_agents: int = 4, n_layers: int = 12,
+                json_path: str | None = None):
+    """One full HDO round (estimate -> update -> mix), tree vs plane
+    layout, on a transformer-like pytree with many sub-BLOCK leaves
+    (biases, norms) at d ~ 2^20.
+
+    Analytic terms per round (``msz`` = 4, f32 momentum):
+      * dispatches — ``core.plane.dispatch_counts``: the tree layout
+        pays one mix launch per (agent, leaf) and drops sub-BLOCK
+        leaves to the update-phase jnp fallback; the plane is one
+        BLOCK-aligned ``(n_agents, dim)`` leaf, so every phase is
+        O(#agents) with an empty fallback set.
+      * update ``hbm_bytes`` — the fused apply streams
+        ``(12 + 2*msz) * d`` per agent (see ``optim_bench``); the tree
+        layout pays that only on kernel-routed leaves and the
+        unfused two-pass ``(12 + 3*msz)`` on the fallback set.
+      * mix ``hbm_bytes`` — ring (k=2) ``gossip_mix``:
+        ``(k + 2) * d * 4`` per agent (see ``gossip_bench``).
+    """
+    from repro.configs.base import HDOConfig
+    from repro.core import hdo as hdolib
+    from repro.core import plane as planelib
+
+    key = jax.random.PRNGKey(0)
+    blocks = []
+    for i in range(n_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        blocks.append({
+            "w": jax.random.normal(k1, (256, 256)) * 0.02,
+            "b": jnp.zeros((256,)),
+            "ln": jnp.ones((256,)),
+        })
+    k1, key = jax.random.split(key)
+    params = {
+        "emb": jax.random.normal(k1, (1024, 256)) * 0.02,
+        "blocks": blocks,
+        "head": jnp.zeros((256,)),
+    }
+    man = planelib.build_manifest(params)
+
+    def loss_fn(p, batch):
+        acc = jnp.float32(0.0)
+        for leaf in jax.tree_util.tree_leaves(p):
+            acc = acc + jnp.sum(leaf.astype(jnp.float32) ** 2)
+        return acc / man.size + 0.0 * jnp.sum(batch["x"])
+
+    batches = {"x": jnp.zeros((n_agents, 1))}
+    entries = []
+    for layout in ("tree", "plane"):
+        cfg = HDOConfig(
+            n_agents=n_agents, n_zeroth=n_agents // 2,
+            estimator_zo="multi_rv", rv=2, zo_impl="fused",
+            gossip="graph", topology="ring", lr=0.01, momentum=0.9,
+            nu=1e-3, warmup_steps=0, use_cosine=False,
+            param_layout=layout,
+        )
+        step = jax.jit(hdolib.build_hdo_step(
+            loss_fn, cfg, param_dim=man.size, params_template=params))
+        state = hdolib.init_state(params, cfg)
+        us = _time(lambda: step(state, batches)[0].params, n=2)
+        counts = planelib.dispatch_counts(man, n_agents)[layout]
+        d_eff = man.dim if layout == "plane" else man.size
+        large = sum(s.size for s in man.leaves if s.size >= 8192)
+        small = man.size - large
+        if layout == "plane":
+            update_hbm = (12 + 2 * 4) * n_agents * man.dim
+        else:
+            update_hbm = n_agents * ((12 + 2 * 4) * large + (12 + 3 * 4) * small)
+        mix_hbm = (2 + 2) * n_agents * d_eff * 4
+        entries.append({
+            "layout": layout, "dim": d_eff, "n_agents": n_agents,
+            "us_per_step": round(us, 1), "dispatch": counts,
+            "update_hbm_bytes": update_hbm, "mix_hbm_bytes": mix_hbm,
+        })
+        print(csv_line(f"plane_round_{layout}_d{d_eff}", us,
+                       f"mix_calls={counts['mix_kernel_calls']}"))
+    if json_path:
+        payload = {
+            "n_agents": n_agents, "n_leaves": len(man.leaves),
+            "compact_size": man.size, "plane_dim": man.dim,
+            "backend": jax.default_backend(),
+            "interpret_mode": jax.default_backend() != "tpu",
+            "entries": entries,
+        }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")

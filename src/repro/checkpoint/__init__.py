@@ -109,6 +109,49 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, int, Dict]:
     return tree, sidecar["step"], sidecar["meta"]
 
 
+def read_meta(path: str) -> Dict:
+    """Read ONLY the sidecar metadata of a checkpoint (no array load).
+
+    The pre-restore guard: ``train.py --resume`` checks the stored
+    ``param_layout`` / ``manifest_hash`` against the current run BEFORE
+    building templates and loading arrays, so a layout or model-shape
+    drift fails with a clear message instead of a structure/shape
+    mismatch deep inside ``restore``.
+    """
+    with open(path + ".msgpack", "rb") as f:
+        sidecar = msgpack.unpackb(f.read())
+    return sidecar.get("meta", {}) or {}
+
+
+def check_meta_compat(meta: Dict, *, param_layout: Optional[str] = None,
+                      manifest_hash: Optional[str] = None) -> None:
+    """Raise ValueError when checkpoint meta disagrees with the run.
+
+    Only keys present on BOTH sides are compared, so checkpoints written
+    before these fields existed restore as before (the structure/dtype
+    validation in ``restore`` still backstops them).
+    """
+    saved_layout = meta.get("param_layout")
+    if param_layout is not None and saved_layout is not None \
+            and saved_layout != param_layout:
+        raise ValueError(
+            f"checkpoint was written with param_layout={saved_layout!r} but "
+            f"this run uses param_layout={param_layout!r} — the state "
+            "layouts are incompatible (plane buffers vs stacked pytree); "
+            "rerun with the matching --param-layout or start fresh"
+        )
+    saved_hash = meta.get("manifest_hash")
+    if manifest_hash is not None and saved_hash is not None \
+            and saved_hash != manifest_hash:
+        raise ValueError(
+            f"checkpoint leaf-manifest hash {saved_hash} does not match this "
+            f"run's {manifest_hash} — the model's leaf set, shapes, or "
+            "dtypes changed since the checkpoint was written (see "
+            "core.plane.manifest_hash); restore would produce garbage "
+            "offsets, so start fresh or restore under the original model"
+        )
+
+
 def save_state(path: str, state, *, meta: Optional[Dict] = None) -> None:
     """Persist a full ``core.hdo.HDOState`` (params, opt_state, step)."""
     tree = {"params": state.params, "opt_state": state.opt_state}

@@ -192,6 +192,7 @@ TOPOLOGIES = (
     "tv_round_robin", "tv_erdos_renyi",
 )
 MOMENTUM_DTYPES = ("float32", "bfloat16")
+PARAM_LAYOUTS = ("tree", "plane")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,11 +279,23 @@ class HDOConfig:
     #              population sharded over a mesh axis every device runs
     #              one kind (beyond-paper optimization, see §Perf).
     dispatch: str = "select"
-    # sgd momentum accumulator dtype ("float32" paper-faithful;
-    # "bfloat16" halves optimizer-state HBM — beyond-paper memory
-    # optimization).  adamw state stays float32 (the variance term
-    # needs the range; see core/localupdate.py)
+    # first-moment accumulator dtype ("float32" paper-faithful;
+    # "bfloat16" halves that state's HBM — beyond-paper memory
+    # optimization).  Covers sgd momentum in both layouts and adamw
+    # ``mu`` under param_layout="plane"; the adamw variance term ``nu``
+    # always stays float32 (it needs the range; see core/localupdate.py)
     momentum_dtype: str = "float32"
+    # persistent parameter layout of the stacked population:
+    #   "tree"  — stacked model pytree (one leading-agent-axis array per
+    #             leaf; the original layout, per-leaf kernel dispatch);
+    #   "plane" — one contiguous BLOCK-aligned flat buffer per agent
+    #             (core/plane.py): estimate/update/mix all run O(d)
+    #             whole-vector passes with O(#agents) kernel dispatches,
+    #             the pytree is only rebuilt at the loss/jvp boundary,
+    #             and adamw rides the fused kernel.  Single-step output
+    #             is pinned bit-identical to "tree" for sgd and allclose
+    #             for adamw (tests/test_plane.py).
+    param_layout: str = "tree"
 
     def __post_init__(self):
         if self.estimator_zo not in ZO_ESTIMATORS:
@@ -325,6 +338,11 @@ class HDOConfig:
             raise ValueError(
                 f"momentum_dtype must be one of {MOMENTUM_DTYPES}, "
                 f"got {self.momentum_dtype!r}"
+            )
+        if self.param_layout not in PARAM_LAYOUTS:
+            raise ValueError(
+                f"param_layout must be one of {PARAM_LAYOUTS}, "
+                f"got {self.param_layout!r}"
             )
         if not 0 <= self.n_zeroth <= self.n_agents:
             raise ValueError(

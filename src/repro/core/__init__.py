@@ -18,6 +18,15 @@ from repro.core.hdo import (
     zo_mask,
 )
 from repro.core.localupdate import LocalUpdate, make_local_update
+from repro.core.plane import (
+    LeafSpec,
+    PlaneManifest,
+    build_manifest,
+    manifest_hash,
+    pack,
+    unpack,
+    unpack_stacked,
+)
 from repro.core.population import KindGroup, Population, resolve_population
 from repro.core.schedules import constant, warmup_cosine
 
@@ -40,6 +49,13 @@ __all__ = [
     "init_state",
     "tree_stack_broadcast",
     "zo_mask",
+    "LeafSpec",
+    "PlaneManifest",
+    "build_manifest",
+    "manifest_hash",
+    "pack",
+    "unpack",
+    "unpack_stacked",
     "KindGroup",
     "Population",
     "resolve_population",

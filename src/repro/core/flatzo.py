@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.core import plane as planelib
 from repro.core.estimators import ZO_KINDS
 from repro.kernels import ops
 
@@ -156,3 +157,93 @@ def flat_fwd_grad(
     g_flat = ops.zo_combine(coeffs, seed, d, n_active=n_active,
                             out_dtype=flat.dtype, interpret=interpret)
     return primals[0], unravel(g_flat)
+
+
+def plane_zo_estimate(
+    loss_fn: LossFn,
+    x: jnp.ndarray,
+    key,
+    *,
+    manifest: planelib.PlaneManifest,
+    kind: str = "multi_rv",
+    rv: int = 4,
+    nu: float = 1e-4,
+    rv_actual=None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``flat_zo_estimate`` over the persistent plane: (loss_at_x, g).
+
+    ``x`` is the agent's ``(manifest.dim,)`` plane row and the returned
+    gradient estimate is a plane row too — no ``ravel_pytree`` and no
+    pad/slice HBM round-trip per kernel call; the pytree is rebuilt
+    (``plane.unpack``) only at the loss boundary.  The plane kernels
+    draw on the *compact* counter stream (``plane.rng_tables``), so
+    every u_r is bit-identical to the tree-layout fused engine's over
+    ``ravel_pytree`` of the same model; pad lanes stay zero.
+    """
+    if kind not in FUSED_KINDS:
+        raise ValueError(f"fused ZO engine supports {FUSED_KINDS}, got {kind!r}")
+    if kind == "fwd_grad":
+        return plane_fwd_grad(loss_fn, x, key, manifest=manifest, rv=rv,
+                              rv_actual=rv_actual, interpret=interpret)
+    delta, nvalid = planelib.rng_tables(manifest)
+    seed = seed_from_key(key)
+    nu = jnp.asarray(nu, jnp.float32)
+    two_point = kind in ("biased_2pt", "multi_rv")
+    n_draws = rv if kind == "multi_rv" else 1
+    if kind != "multi_rv":
+        rv_actual = None  # single-draw kinds have nothing to mask
+
+    loss0 = loss_fn(planelib.unpack(manifest, x))
+    plane_loss = lambda v: loss_fn(planelib.unpack(manifest, v))
+
+    def coeff(_, r):
+        lp = plane_loss(ops.zo_perturb_plane(x, seed, r, nu, delta, nvalid,
+                                             interpret=interpret))
+        if two_point:
+            lm = plane_loss(ops.zo_perturb_plane(x, seed, r, -nu, delta, nvalid,
+                                                 interpret=interpret))
+            c = (lp - lm) / (2.0 * nu)
+        else:
+            c = (lp - loss0) / nu
+        return None, c.astype(jnp.float32)
+
+    _, coeffs = jax.lax.scan(coeff, None, jnp.arange(n_draws))
+    coeffs, n_active = _mask_coeffs(coeffs, rv_actual)
+    g = ops.zo_combine_plane(coeffs, seed, delta, nvalid, manifest.dim,
+                             n_active=n_active, out_dtype=x.dtype,
+                             interpret=interpret)
+    return loss0, g
+
+
+def plane_fwd_grad(
+    loss_fn: LossFn,
+    x: jnp.ndarray,
+    key,
+    *,
+    manifest: planelib.PlaneManifest,
+    rv: int = 4,
+    rv_actual=None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``flat_fwd_grad`` over the persistent plane (see
+    ``plane_zo_estimate`` for the layout/stream contract).  The f32
+    tangent is unpacked at the jvp boundary — the same per-leaf
+    rounding the tree-layout path applies via ``unravel``."""
+    delta, nvalid = planelib.rng_tables(manifest)
+    seed = seed_from_key(key)
+    unpacked = planelib.unpack(manifest, x)
+
+    def draw(_, r):
+        u = ops.zo_tangent_plane(seed, r, delta, nvalid, manifest.dim,
+                                 interpret=interpret)
+        primal, jvp = jax.jvp(loss_fn, (unpacked,),
+                              (planelib.unpack(manifest, u),))
+        return None, (primal, jvp.astype(jnp.float32))
+
+    _, (primals, coeffs) = jax.lax.scan(draw, None, jnp.arange(rv))
+    coeffs, n_active = _mask_coeffs(coeffs, rv_actual)
+    g = ops.zo_combine_plane(coeffs, seed, delta, nvalid, manifest.dim,
+                             n_active=n_active, out_dtype=x.dtype,
+                             interpret=interpret)
+    return primals[0], g

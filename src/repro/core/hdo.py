@@ -37,6 +37,7 @@ import numpy as np
 from repro import compat
 from repro.configs.base import HDOConfig
 from repro.core import estimators, flatzo, localupdate, population, schedules
+from repro.core import plane as planelib
 
 PyTree = Any
 
@@ -59,7 +60,19 @@ def tree_stack_broadcast(params: PyTree, n: int) -> PyTree:
 
 
 def init_state(params: PyTree, cfg: HDOConfig) -> HDOState:
-    stacked = tree_stack_broadcast(params, cfg.n_agents)
+    """Stacked population state from one model pytree.
+
+    ``cfg.param_layout="plane"`` packs the pytree into the persistent
+    BLOCK-aligned flat buffer (``core/plane.py``): ``state.params`` is
+    a single ``(n_agents, dim)`` array and the opt state holds matching
+    plane streams; ``"tree"`` keeps the stacked-pytree layout.
+    """
+    if cfg.param_layout == "plane":
+        man = planelib.build_manifest(params)
+        flat = planelib.pack(man, params)
+        stacked = jnp.broadcast_to(flat[None], (cfg.n_agents,) + flat.shape)
+    else:
+        stacked = tree_stack_broadcast(params, cfg.n_agents)
     lu = localupdate.make_local_update(cfg)
     return HDOState(params=stacked, opt_state=lu.init(stacked), step=jnp.int32(0))
 
@@ -84,6 +97,7 @@ def build_estimate_phase(
     *,
     mesh=None,
     population_axes: Tuple[str, ...] = (),
+    manifest: Optional[planelib.PlaneManifest] = None,
 ) -> Callable[..., Tuple[jnp.ndarray, PyTree]]:
     """Phase 1 of the step: the per-agent gradient-estimate dispatch.
 
@@ -92,30 +106,62 @@ def build_estimate_phase(
     homogeneous smoothing radius (scalar); ``nu_vec`` the per-ZO-agent
     radii of a heterogeneous cohort (ignored when homogeneous).  All
     dispatch variants (select / split / shard_cond, grouped
-    heterogeneous select / split, the single-agent fast path) live
-    here; the estimator contracts are untouched.
+    heterogeneous select / split / shard_cond, the single-agent fast
+    path) live here; the estimator contracts are untouched.
+
+    ``cfg.param_layout="plane"`` needs ``manifest`` (from
+    ``plane.build_manifest`` of the single-agent model): per-agent
+    params arrive as plane rows, the fused engine runs the plane
+    kernels directly, and the tree estimators / FO backprop see the
+    pytree only at the loss boundary (``plane.unpack``).
+
+    A heterogeneous ``dispatch="shard_cond"`` cohort runs a runtime
+    ``lax.switch`` per population shard over the kind groups' uniform
+    programs — every shard must hold agents of a single kind group
+    (ValueError at build time otherwise); without a mesh it falls back
+    to the grouped select path, like the homogeneous fallthrough.
     """
     from repro.topology.mixer import shard_agent_index
 
     n = cfg.n_agents
     pop = population.resolve_population(cfg)
-    if not pop.homogeneous and cfg.dispatch == "shard_cond":
-        # same guard as build_hdo_step — this builder is public API and
-        # must not silently fall through to the grouped-select path
-        raise ValueError(
-            "dispatch='shard_cond' needs a homogeneous ZO cohort (one "
-            "estimator kind, uniform sigma/rv/lr); use 'select' or 'split' "
-            "for heterogeneous populations"
-        )
     rv_tab = None if pop.homogeneous else jnp.asarray(pop.rv_array())
 
-    def per_agent_fo(params_i, batch_i):
-        return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
+    use_plane = cfg.param_layout == "plane"
+    if use_plane and manifest is None:
+        raise ValueError(
+            "param_layout='plane' needs the leaf manifest — pass "
+            "manifest=plane.build_manifest(params) (build_hdo_step does "
+            "this from its params_template argument)"
+        )
+    unpack = (lambda v: planelib.unpack(manifest, v)) if use_plane else None
+
+    if use_plane:
+        def per_agent_fo(x_i, batch_i):
+            # backprop at the model-apply boundary: grads are taken on
+            # the unpacked pytree (the exact tree-layout graph at the
+            # same bits) and packed back into a plane row
+            l_i, g_tree = estimators.fo_estimate(
+                lambda p: loss_fn(p, batch_i), unpack(x_i)
+            )
+            return l_i, planelib.pack(manifest, g_tree)
+    else:
+        def per_agent_fo(params_i, batch_i):
+            return estimators.fo_estimate(lambda p: loss_fn(p, batch_i), params_i)
 
     # every estimator kind has a fused form (fwd_grad since the
     # zo_tangent kernel landed) — "fused" never falls back to the tree
     use_fused = cfg.zo_impl == "fused"
-    zo_engine = flatzo.flat_zo_estimate if use_fused else estimators.zo_estimate
+    if use_plane and use_fused:
+        def zo_engine(loss, x_i, key_i, **kw):
+            return flatzo.plane_zo_estimate(loss, x_i, key_i,
+                                            manifest=manifest, **kw)
+    elif use_plane:
+        def zo_engine(loss, x_i, key_i, **kw):
+            l_i, g_tree = estimators.zo_estimate(loss, unpack(x_i), key_i, **kw)
+            return l_i, planelib.pack(manifest, g_tree)
+    else:
+        zo_engine = flatzo.flat_zo_estimate if use_fused else estimators.zo_estimate
 
     def per_agent_zo(params_i, batch_i, key_i, nu):
         return zo_engine(
@@ -191,13 +237,80 @@ def build_estimate_phase(
             losses = jnp.where(mask, l_k, losses)
         return losses, g
 
+    # -- heterogeneous shard_cond: runtime branch per kind group -------
+    # Build-time: a static shard -> branch table over the kind groups'
+    # uniform programs (groups first, FO last).  Runtime: one
+    # ``lax.switch`` per population shard — each shard runs ONLY its
+    # own group's program, like homogeneous shard_cond's ZO/FO cond,
+    # with the per-agent nu/rv sliced from replicated full tables.
+    het_shard_cond = None
+    if not pop.homogeneous and cfg.dispatch == "shard_cond" and mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        sc_axes = tuple(a for a in population_axes if a in mesh.shape)
+        sc_size = 1
+        for a in sc_axes:
+            sc_size *= mesh.shape[a]
+        sc_local = n // sc_size
+        branch_of = {}
+        for gi, grp in enumerate(pop.groups):
+            for a_idx in grp.indices:
+                branch_of[a_idx] = gi
+        for a_idx in range(cfg.n_zeroth, n):
+            branch_of[a_idx] = len(pop.groups)
+        shard_branch = []
+        for s in range(sc_size):
+            members = range(s * sc_local, (s + 1) * sc_local)
+            kinds_s = {branch_of[a_idx] for a_idx in members}
+            if len(kinds_s) != 1:
+                raise ValueError(
+                    "dispatch='shard_cond' over a heterogeneous cohort needs "
+                    "every population shard to hold agents of a single "
+                    f"estimator kind group (shard {s} holds agents "
+                    f"{list(members)} spanning {len(kinds_s)} groups); "
+                    "reorder/resize the cohort so group boundaries align "
+                    "with shards, or use dispatch='select'/'split'"
+                )
+            shard_branch.append(kinds_s.pop())
+        branch_tab = jnp.asarray(np.asarray(shard_branch, np.int32))
+
+        def het_shard_cond(params, batches, agent_keys, nu_vec):
+            n0 = cfg.n_zeroth
+            pad = jnp.ones((n - n0,), jnp.float32)
+            nu_full = jnp.concatenate([nu_vec, pad])
+            rv_full = jnp.concatenate([rv_tab.astype(jnp.float32), pad])
+
+            def shard_fn(p_l, b_l, k_l, nu_f, rv_f, btab):
+                idx = shard_agent_index(mesh, sc_axes, sc_local)
+                nu_loc = jax.lax.dynamic_slice(nu_f, (idx,), (sc_local,))
+                rv_loc = jax.lax.dynamic_slice(rv_f, (idx,), (sc_local,))
+
+                def group_branch(grp):
+                    f = zo_for_kind(grp.kind, grp.rv_max)
+                    return lambda _: jax.vmap(f)(p_l, b_l, k_l, nu_loc, rv_loc)
+
+                branches = [group_branch(grp) for grp in pop.groups]
+                branches.append(lambda _: jax.vmap(per_agent_fo)(p_l, b_l))
+                return jax.lax.switch(btab[idx // sc_local], branches, None)
+
+            pspec = P(sc_axes if len(sc_axes) > 1 else sc_axes[0])
+            keys = compat.replicate_operand(agent_keys, mesh)
+            return compat.shard_map(
+                shard_fn,
+                mesh=mesh,
+                in_specs=(pspec, pspec, pspec, P(), P(), P()),
+                out_specs=(pspec, pspec),
+                axis_names=set(sc_axes),
+                check_vma=False,
+            )(params, batches, keys, nu_full, rv_full, branch_tab)
+
     is_zo = zo_mask(cfg)
 
     def estimate(params, batches, agent_keys, nu, nu_vec=None):
         n0 = cfg.n_zeroth
         if not pop.homogeneous:
             # heterogeneous cohort: per-agent (sigma, rv, lr), possibly
-            # mixed estimator kinds — grouped select/split dispatch
+            # mixed estimator kinds — grouped select/split/shard_cond
             if nu_vec is None:
                 raise ValueError(
                     "heterogeneous cohort: estimate() needs the per-ZO-agent "
@@ -205,6 +318,8 @@ def build_estimate_phase(
                 )
             if cfg.dispatch == "split":
                 return het_split(params, batches, agent_keys, nu_vec)
+            if het_shard_cond is not None:
+                return het_shard_cond(params, batches, agent_keys, nu_vec)
             return het_select(params, batches, agent_keys, nu_vec)
         if n == 1:
             # single-agent population (e.g. llama4 pod-population on the
@@ -300,6 +415,7 @@ def build_hdo_step(
     donate: bool = False,
     mesh=None,
     population_axes: Tuple[str, ...] = (),
+    params_template: Optional[PyTree] = None,
 ) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
     """Returns step(state, batches) -> (state, metrics).
 
@@ -340,9 +456,23 @@ def build_hdo_step(
     gradient-estimate variance (``grad_var_zo_<kind>`` /
     ``grad_var_fo``) and per-group loss trajectories
     (``loss_zo_<kind>_mean``) logged as metrics.
-    ``dispatch="shard_cond"`` requires a homogeneous cohort; an
-    all-equal per-agent override collapses onto the homogeneous path
-    bit-identically (tests/test_population.py).
+    ``dispatch="shard_cond"`` over a heterogeneous cohort runs a
+    runtime ``lax.switch`` per population shard over the kind groups'
+    uniform programs — each shard must hold agents of a single kind
+    group (build-time ValueError otherwise; without a mesh it falls
+    back to the grouped select path).  An all-equal per-agent override
+    collapses onto the homogeneous path bit-identically
+    (tests/test_population.py).
+
+    ``cfg.param_layout="plane"`` additionally needs
+    ``params_template`` — the single-agent model pytree (real arrays or
+    ``jax.eval_shape`` structs) from which the static leaf manifest is
+    derived (``core/plane.py``).  The state then carries one
+    BLOCK-aligned flat buffer per agent; estimate/update/mix all
+    consume it whole (O(#agents) kernel dispatches per phase) and the
+    pytree is rebuilt only at the loss/jvp boundary.  Single-step
+    output is pinned bit-identical to the tree layout for sgd and
+    allclose for adamw (tests/test_plane.py).
     """
     # deferred: topology depends on core.gossip's primitives, so a
     # module-level import here would cycle through repro.core.__init__
@@ -354,12 +484,15 @@ def build_hdo_step(
     # uniform population collapses onto the scalar path below, which is
     # what pins "all-equal per-agent values == homogeneous" bit-exactly
     pop = population.resolve_population(cfg)
-    if not pop.homogeneous and cfg.dispatch == "shard_cond":
-        raise ValueError(
-            "dispatch='shard_cond' needs a homogeneous ZO cohort (one "
-            "estimator kind, uniform sigma/rv/lr); use 'select' or 'split' "
-            "for heterogeneous populations"
-        )
+    manifest = None
+    if cfg.param_layout == "plane":
+        if params_template is None:
+            raise ValueError(
+                "param_layout='plane' needs params_template (the "
+                "single-agent model pytree, or its jax.eval_shape structs) "
+                "to derive the static leaf manifest — see core/plane.py"
+            )
+        manifest = planelib.build_manifest(params_template)
     sched = schedules.warmup_cosine(
         pop.lr0 if pop.homogeneous else cfg.lr,
         cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine,
@@ -369,7 +502,8 @@ def build_hdo_step(
         k: jnp.float32(v) for k, v in mixer.diagnostics().items()
     }
     estimate = build_estimate_phase(
-        loss_fn, cfg, mesh=mesh, population_axes=population_axes
+        loss_fn, cfg, mesh=mesh, population_axes=population_axes,
+        manifest=manifest,
     )
     local_update = localupdate.make_local_update(cfg)
 

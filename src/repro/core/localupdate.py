@@ -28,6 +28,14 @@ instead of writing the momentum and reading it back; leaves smaller
 than a kernel BLOCK (biases, norms — negligible traffic) keep the jnp
 math rather than paying a tail-padded launch each (see
 ``kernels/opt_apply.py``; benched in ``BENCH_optim.json``).
+
+Under ``HDOConfig.param_layout="plane"`` the stacked params are a
+single BLOCK-aligned ``(n_agents, dim)`` leaf (``core/plane.py``): the
+sgd machinery consumes it unchanged — one fused ``opt_apply`` launch
+per agent, zero sub-BLOCK fallback leaves — and adamw switches to a
+plane-shaped state with the fused ``adamw_apply`` kernel
+(``_make_plane_adamw``), which is also where ``momentum_dtype``
+extends from sgd momentum to the adamw first moment.
 """
 from __future__ import annotations
 
@@ -99,10 +107,15 @@ def make_local_update(cfg: HDOConfig, *,
         # cfg.momentum is the first-moment decay (b1) — the same knob it
         # is for sgd, so CLI sweeps over --momentum act on both rules —
         # and cfg.weight_decay is the decoupled decay (0 = plain Adam).
-        # State stays f32 regardless of momentum_dtype: the variance
-        # accumulator needs f32 range, and a bf16 mu would break the
-        # resume-bit-identity contract unless the rounded value also
-        # drove the update — momentum_dtype is an sgd-momentum knob.
+        if cfg.param_layout == "plane":
+            return _make_plane_adamw(cfg, n, use_kernel, maybe_clip)
+        # Tree-layout state stays f32 regardless of momentum_dtype: the
+        # variance accumulator needs f32 range, and a bf16 mu would
+        # break the resume-bit-identity contract unless the rounded
+        # value also drove the update.  The plane layout ships exactly
+        # that write-back discipline through the fused adamw kernel
+        # (``_make_plane_adamw``), which is where momentum_dtype covers
+        # the adamw first moment too.
         opt = optim.adamw(b1=cfg.momentum, weight_decay=cfg.weight_decay)
 
         def apply(params, grads, opt_state, lr, lr_vec):
@@ -170,6 +183,58 @@ def make_local_update(cfg: HDOConfig, *,
         return _apply_lr(params, new_m, lr, lr_vec, n), new_m
 
     return LocalUpdate("sgd", init, apply)
+
+
+def _make_plane_adamw(cfg: HDOConfig, n: int, use_kernel: bool,
+                      maybe_clip) -> LocalUpdate:
+    """AdamW over the plane layout: params are one (n, dim) buffer, so
+    the moments are matching plane streams — ``mu`` in
+    ``cfg.momentum_dtype`` (the *stored*, possibly-bf16 value drives
+    the update, the sgd kernel's write-back discipline, so resume
+    replays the identical trajectory), ``nu`` f32 (range), ``count``
+    a shared scalar.  ``use_kernel=True`` streams the whole update
+    through the fused ``adamw_apply`` kernel — one O(d) pass per agent,
+    no per-leaf dispatch and no sub-BLOCK fallback (the plane is
+    BLOCK-aligned by construction); the jnp route computes the
+    identical chain (the interpret-friendly oracle)."""
+    b1 = float(cfg.momentum)
+    b2 = 0.999
+    eps = 1e-8
+    wd = float(cfg.weight_decay)
+    mdt = jnp.dtype(cfg.momentum_dtype)
+
+    def init(stacked):
+        return {
+            "mu": jnp.zeros(stacked.shape, mdt),
+            "nu": jnp.zeros(stacked.shape, jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(params, grads, opt_state, lr, lr_vec):
+        g = maybe_clip(grads)
+        c = opt_state["count"] + 1
+        lrs = (jnp.broadcast_to(jnp.asarray(lr, jnp.float32), (n,))
+               if lr_vec is None else lr_vec)
+        if use_kernel:
+            po, mu, nuv = jax.vmap(
+                lambda pf, gf, mf, vf, lrf: ops.adamw_apply(
+                    pf, gf, mf, vf, lrf, b1, b2, eps, wd, c)
+            )(params, g, opt_state["mu"], opt_state["nu"], lrs)
+        else:
+            gf = g.astype(jnp.float32)
+            pf = params.astype(jnp.float32)
+            mu = (b1 * opt_state["mu"].astype(jnp.float32)
+                  + (1.0 - b1) * gf).astype(mdt)
+            nuv = b2 * opt_state["nu"] + (1.0 - b2) * gf * gf
+            cf = c.astype(jnp.float32)
+            bc1 = 1.0 - jnp.float32(b1) ** cf
+            bc2 = 1.0 - jnp.float32(b2) ** cf
+            upd = (mu.astype(jnp.float32) / bc1
+                   / (jnp.sqrt(nuv / bc2) + eps) + wd * pf)
+            po = (pf - lrs[:, None] * upd).astype(params.dtype)
+        return po, {"mu": mu, "nu": nuv, "count": c}
+
+    return LocalUpdate("adamw", init, apply)
 
 
 def opt_state_pspecs(cfg: HDOConfig, params_pspecs: PyTree) -> PyTree:

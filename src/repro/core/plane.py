@@ -1,0 +1,242 @@
+"""ParamPlane: the persistent block-aligned flat parameter layout.
+
+The paper's Algorithm 1 is a sequence of whole-vector O(d) operations
+on x_i in R^d — perturb, combine, clip, update, mix.  The pytree layout
+re-derives that flat view per call (``ravel_pytree`` in ``flatzo``,
+per-leaf dispatch in ``LocalUpdate`` and the Mixers) and pays per-leaf
+kernel launches plus a small-leaf jnp fallback.  This module makes the
+flat view *persistent*:
+
+  * ``build_manifest(params)`` derives a static **leaf manifest** from
+    the model pytree — per leaf: name, plane offset, element count,
+    BLOCK-aligned padded extent, shape, dtype.  It only needs shapes
+    and dtypes, so it works on ``jax.eval_shape`` structs too.
+  * ``pack`` / ``unpack`` convert between the pytree and one contiguous
+    padded ``(dim,)`` buffer (the *plane*).  With
+    ``HDOConfig.param_layout="plane"``, ``HDOState.params`` holds one
+    plane row per agent — a single ``(n_agents, dim)`` leaf — so every
+    tree-generic phase (mixers, select masks, checkpointing, pspecs)
+    automatically issues O(#agents) kernel dispatches instead of
+    O(#agents * #leaves), and every element rides the kernels because
+    the plane is BLOCK-aligned by construction.
+  * ``rng_tables`` gives the per-block (delta, nvalid) tables that keep
+    the plane ZO kernels on the *compact* counter stream: position j of
+    leaf L draws ``counter_normal(seed, leaf_compact_offset + j, r)``
+    exactly like the tree-layout fused engine's ravel of the same
+    pytree, so plane-vs-tree stays bit-identical; pad lanes are masked.
+  * ``manifest_hash`` is the versioned fingerprint checkpoints carry so
+    a ``--resume`` across a layout or model-shape change fails loudly
+    instead of as a shape mismatch deep in restore.
+
+Pads are invariant-zero: ``pack`` writes zeros, the masked kernels
+write zeros (combine/tangent) or pass x through (perturb), the
+elementwise update maps zero grads + zero momentum to zero, and mixing
+is convex — so pads never leak into the compact lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.zo_combine import BLOCK
+
+PyTree = Any
+
+# bump when the manifest layout/semantics change: hashes from older
+# versions never collide with newer ones, so stale checkpoints are
+# rejected by the hash check rather than misread
+MANIFEST_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """One pytree leaf's slot in the plane (all static metadata)."""
+    name: str                  # jax.tree_util.keystr path
+    offset: int                # start in the plane (multiple of BLOCK)
+    size: int                  # element count of the leaf
+    extent: int                # BLOCK-aligned padded length (>= size)
+    shape: Tuple[int, ...]
+    dtype: str                 # canonical dtype name, e.g. "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneManifest:
+    """Static layout of a model pytree inside one contiguous plane."""
+    leaves: Tuple[LeafSpec, ...]
+    dim: int                   # padded plane length (multiple of BLOCK)
+    size: int                  # total compact element count (sum of sizes)
+    dtype: str                 # plane buffer dtype
+    treedef: Any               # jax.tree_util.PyTreeDef of the model
+
+    @property
+    def n_blocks(self) -> int:
+        return self.dim // BLOCK
+
+
+def build_manifest(params: PyTree) -> PlaneManifest:
+    """Derive the static leaf manifest from a model pytree.
+
+    Only shapes/dtypes are read, so ``params`` may be real arrays or
+    ``jax.eval_shape`` / ``jax.ShapeDtypeStruct`` leaves.  The plane
+    dtype is the common leaf dtype when uniform, else ``float32``
+    (mixed-dtype models promote; the bit-identity guarantees of the
+    plane layout hold for uniform-dtype models).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    if not flat:
+        raise ValueError("cannot build a plane manifest from an empty pytree")
+    specs = []
+    offset = 0
+    dtypes = set()
+    for path, leaf in flat:
+        shape = tuple(int(s) for s in leaf.shape)
+        dt = jnp.dtype(leaf.dtype)
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise ValueError(
+                f"plane layout needs floating-point leaves, got {dt} at "
+                f"{jax.tree_util.keystr(path)}"
+            )
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        extent = size + ((-size) % BLOCK)
+        specs.append(LeafSpec(
+            name=jax.tree_util.keystr(path), offset=offset, size=size,
+            extent=extent, shape=shape, dtype=dt.name,
+        ))
+        dtypes.add(dt.name)
+        offset += extent
+    plane_dtype = dtypes.pop() if len(dtypes) == 1 else "float32"
+    return PlaneManifest(
+        leaves=tuple(specs),
+        dim=offset,
+        size=sum(s.size for s in specs),
+        dtype=plane_dtype,
+        treedef=jax.tree_util.tree_structure(params),
+    )
+
+
+def pack(manifest: PlaneManifest, tree: PyTree) -> jnp.ndarray:
+    """Pytree -> (dim,) plane buffer (pads written as zeros)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != len(manifest.leaves):
+        raise ValueError(
+            f"pytree has {len(leaves)} leaves, manifest has "
+            f"{len(manifest.leaves)} — was the manifest built from a "
+            "different model?"
+        )
+    dtype = jnp.dtype(manifest.dtype)
+    parts = []
+    for spec, leaf in zip(manifest.leaves, leaves):
+        if tuple(leaf.shape) != spec.shape:
+            raise ValueError(
+                f"leaf {spec.name} has shape {tuple(leaf.shape)}, manifest "
+                f"says {spec.shape} — was the manifest built from a "
+                "different model?"
+            )
+        v = jnp.asarray(leaf).reshape(-1).astype(dtype)
+        if spec.extent > spec.size:
+            v = jnp.concatenate([v, jnp.zeros((spec.extent - spec.size,), dtype)])
+        parts.append(v)
+    return jnp.concatenate(parts)
+
+
+def unpack(manifest: PlaneManifest, plane: jnp.ndarray) -> PyTree:
+    """(dim,) plane buffer -> pytree (per-leaf dtype restored).
+
+    This is the *only* place the plane layout unravels — the
+    model-apply boundary (loss / jvp evaluation).  Slices are static,
+    so XLA fuses them into the consumer.
+    """
+    leaves = [
+        plane[spec.offset:spec.offset + spec.size]
+        .reshape(spec.shape).astype(jnp.dtype(spec.dtype))
+        for spec in manifest.leaves
+    ]
+    return jax.tree_util.tree_unflatten(manifest.treedef, leaves)
+
+
+def unpack_stacked(manifest: PlaneManifest, planes: jnp.ndarray) -> PyTree:
+    """(n, dim) stacked planes -> pytree with leading agent axis."""
+    n = planes.shape[0]
+    leaves = [
+        planes[:, spec.offset:spec.offset + spec.size]
+        .reshape((n,) + spec.shape).astype(jnp.dtype(spec.dtype))
+        for spec in manifest.leaves
+    ]
+    return jax.tree_util.tree_unflatten(manifest.treedef, leaves)
+
+
+def manifest_hash(manifest: PlaneManifest) -> str:
+    """Versioned 16-hex fingerprint of the layout (checkpoint guard)."""
+    payload = {
+        "version": MANIFEST_VERSION,
+        "block": BLOCK,
+        "dtype": manifest.dtype,
+        "leaves": [
+            [s.name, s.offset, s.size, s.extent, list(s.shape), s.dtype]
+            for s in manifest.leaves
+        ],
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@functools.lru_cache(maxsize=None)
+def _rng_tables_cached(leaf_geom: Tuple[Tuple[int, int, int], ...]):
+    delta, nvalid = [], []
+    compact = 0
+    for offset, size, extent in leaf_geom:
+        for b in range(extent // BLOCK):
+            # plane position offset+b*BLOCK+lane draws the counter at
+            # compact+b*BLOCK+lane: delta is constant per block because
+            # extents are BLOCK multiples
+            delta.append(offset - compact)
+            nvalid.append(int(np.clip(size - b * BLOCK, 0, BLOCK)))
+        compact += size
+    return (np.asarray(delta, np.int32), np.asarray(nvalid, np.int32))
+
+
+def rng_tables(manifest: PlaneManifest):
+    """Per-block (delta, nvalid) int32 tables for the plane ZO kernels.
+
+    ``counter_index(plane_idx) = plane_idx - delta[block]`` maps every
+    valid lane onto the *compact* counter stream — the exact indices the
+    tree-layout fused engine uses on ``ravel_pytree`` of the same model
+    — and ``nvalid[block]`` masks the pad lanes (combine/tangent write
+    zeros there; perturb passes x through).
+    """
+    return _rng_tables_cached(
+        tuple((s.offset, s.size, s.extent) for s in manifest.leaves)
+    )
+
+
+def dispatch_counts(manifest: PlaneManifest, n_agents: int) -> dict:
+    """Analytic per-phase kernel dispatch counts, plane vs tree layout.
+
+    The tree layout launches one kernel per (agent, leaf) in the mix
+    phase and routes sub-BLOCK leaves to the jnp fallback in the update
+    phase; the plane is one leaf, so every phase is O(#agents) and the
+    fallback set is empty by construction (used by both the small-leaf
+    regime test and ``benchmarks/kernel_bench.py``'s BENCH_plane).
+    """
+    large = [s for s in manifest.leaves if s.size >= BLOCK]
+    small = [s for s in manifest.leaves if s.size < BLOCK]
+    return {
+        "n_leaves": len(manifest.leaves),
+        "plane": {
+            "update_kernel_calls": n_agents,
+            "mix_kernel_calls": n_agents,
+            "update_fallback_leaves": 0,
+        },
+        "tree": {
+            "update_kernel_calls": n_agents * len(large),
+            "mix_kernel_calls": n_agents * len(manifest.leaves),
+            "update_fallback_leaves": len(small),
+        },
+    }

@@ -65,6 +65,37 @@ def zo_perturb_batch(x, seed, rv: int, nu, out_dtype=None, interpret: bool | Non
                                 interpret=interpret)[:, :d]
 
 
+@partial(jax.jit, static_argnames=("d", "out_dtype", "interpret"))
+def zo_combine_plane(coeffs, seed, delta, nvalid, d: int, out_dtype=jnp.float32,
+                     interpret: bool | None = None, n_active=None):
+    """Plane-layout combine: ``d`` is the BLOCK-aligned plane dim and
+    ``delta``/``nvalid`` the ``core.plane.rng_tables`` — the buffer is
+    consumed whole (no pad/slice round-trip), draws ride the compact
+    counter stream, pads are written as zeros."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _zo.zo_combine_plane(coeffs, seed, delta, nvalid, d,
+                                n_active=n_active, out_dtype=out_dtype,
+                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def zo_perturb_plane(x, seed, r, nu, delta, nvalid, interpret: bool | None = None):
+    """Plane-layout perturb: x + nu * u_r on the compact counter stream;
+    pad lanes pass x through (no pad/slice round-trip)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _zo.zo_perturb_plane(x, seed, r, nu, delta, nvalid,
+                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("d", "dtype", "interpret"))
+def zo_tangent_plane(seed, r, delta, nvalid, d: int, dtype=jnp.float32,
+                     interpret: bool | None = None):
+    """Plane-layout tangent u_r (compact counter stream, zeroed pads)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _zt.zo_tangent_plane(seed, r, delta, nvalid, d, dtype=dtype,
+                                interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def gossip_avg(x, y, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
@@ -86,6 +117,30 @@ def opt_apply(p, g, m, lr, beta, interpret: bool | None = None):
     (f32 accumulate; m' stored in m.dtype before p' consumes it)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _opt.opt_apply(p, g, m, lr, beta, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def adamw_apply(p, g, mu, nu, lr, b1, b2, eps, wd, count,
+                interpret: bool | None = None):
+    """p, g, mu, nu: (d,) -> (new_p, new_mu, new_nu): the fused AdamW
+    apply in one O(d) pass (f32 accumulate; the rounded ``mu`` — e.g.
+    bfloat16 under ``momentum_dtype`` — drives the update).  ``count``
+    is the step count AFTER this update (1-based, may be traced): the
+    bias corrections 1 - b^count are computed here, outside the kernel.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    c = jnp.asarray(count, jnp.float32)
+    b1 = jnp.asarray(b1, jnp.float32)
+    b2 = jnp.asarray(b2, jnp.float32)
+    sc = jnp.stack([
+        b1, b2,
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(eps, jnp.float32),
+        jnp.asarray(wd, jnp.float32),
+        1.0 - b1 ** c,
+        1.0 - b2 ** c,
+    ])
+    return _opt.adamw_apply(p, g, mu, nu, sc, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,4 +1,5 @@
-"""Fused momentum-SGD apply kernel: the local-update phase in one pass.
+"""Fused optimizer-apply kernels: the local-update phase in one pass
+(momentum-SGD ``opt_apply`` and AdamW ``adamw_apply``).
 
 The tree-path update walks the optimizer state twice per agent step —
 the momentum accumulator is written by the momentum update and then
@@ -79,3 +80,77 @@ def opt_apply(p, g, m, lr, beta, *, interpret: bool = False):
         interpret=interpret,
     )(p, g, m, sc)
     return new_p[:d], new_m[:d]
+
+
+def _adamw_body(p_ref, g_ref, mu_ref, nu_ref, sc_ref, op_ref, omu_ref, onu_ref):
+    b1 = sc_ref[0]
+    b2 = sc_ref[1]
+    lr = sc_ref[2]
+    eps = sc_ref[3]
+    wd = sc_ref[4]
+    bc1 = sc_ref[5]
+    bc2 = sc_ref[6]
+    g = g_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    nu = nu_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    # the stored (possibly bf16) first moment drives the update, like
+    # the sgd kernel's momentum write-back — resume from a checkpoint
+    # replays the identical trajectory
+    new_mu = (b1 * mu + (1.0 - b1) * g).astype(omu_ref.dtype)
+    new_nu = b2 * nu + (1.0 - b2) * g * g
+    upd = (new_mu.astype(jnp.float32) / bc1
+           / (jnp.sqrt(new_nu / bc2) + eps) + wd * p)
+    omu_ref[...] = new_mu
+    onu_ref[...] = new_nu.astype(onu_ref.dtype)
+    op_ref[...] = (p - lr * upd).astype(op_ref.dtype)
+
+
+def adamw_apply(p, g, mu, nu, sc, *, interpret: bool = False):
+    """p, g, mu, nu: (d,) -> (new_p, new_mu, new_nu), any d.
+
+    The fused AdamW apply: both moment updates and the parameter update
+    stream through one VMEM tile per block — read p, g, mu, nu; write
+    p, mu, nu — instead of the tree path's separate moment-update and
+    apply passes.  ``sc`` is the (7,) f32 operand
+    ``[b1, b2, lr, eps, weight_decay, bias_corr1, bias_corr2]`` (the
+    bias corrections depend on the traced step count, so the wrapper in
+    ``kernels.ops`` computes them outside; tiny array operand — no
+    recompiles across steps).  f32 accumulation; ``mu`` may be stored
+    bfloat16 (``momentum_dtype``) and the *rounded* value drives the
+    update; ``nu`` (second moment) should stay f32 for range.
+    """
+    assert p.shape == g.shape == mu.shape == nu.shape and p.ndim == 1, (
+        p.shape, g.shape, mu.shape, nu.shape)
+    assert sc.shape == (7,), sc.shape
+    d = p.shape[0]
+    pad = (-d) % BLOCK
+    if pad:
+        p = jnp.concatenate([p, jnp.zeros((pad,), p.dtype)])
+        g = jnp.concatenate([g, jnp.zeros((pad,), g.dtype)])
+        mu = jnp.concatenate([mu, jnp.zeros((pad,), mu.dtype)])
+        nu = jnp.concatenate([nu, jnp.zeros((pad,), nu.dtype)])
+    dp = d + pad
+    new_p, new_mu, new_nu = pl.pallas_call(
+        _adamw_body,
+        grid=(dp // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((7,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((dp,), p.dtype),
+            jax.ShapeDtypeStruct((dp,), mu.dtype),
+            jax.ShapeDtypeStruct((dp,), nu.dtype),
+        ),
+        interpret=interpret,
+    )(p, g, mu, nu, sc)
+    return new_p[:d], new_mu[:d], new_nu[:d]

@@ -53,6 +53,49 @@ def zo_perturb_batch_ref(x, seed, rv: int, nu: float):
     return jax.vmap(row)(jnp.arange(rv))
 
 
+def _plane_compact_idx(delta, nvalid, d: int, block: int):
+    """(counter index, valid mask) per plane position — the plane
+    kernels' compact-stream contract (see core.plane.rng_tables)."""
+    idx = jnp.arange(d)
+    blk = idx // block
+    base = (idx - delta[blk]).astype(jnp.uint32)
+    valid = (idx % block) < nvalid[blk]
+    return base, valid
+
+
+def zo_combine_plane_ref(coeffs, seed, delta, nvalid, d: int, block: int,
+                         n_active=None):
+    """Plane-layout combine oracle: compact counter stream, zeroed pads."""
+    rv = coeffs.shape[0]
+    base, valid = _plane_compact_idx(delta, nvalid, d, block)
+
+    def body(acc, r):
+        u = counter_normal(jnp.uint32(seed), base, r.astype(jnp.uint32))
+        return acc + coeffs[r] * u, None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((d,), jnp.float32), jnp.arange(rv))
+    denom = jnp.float32(rv) if n_active is None else jnp.asarray(n_active, jnp.float32)
+    return jnp.where(valid, acc / denom, 0.0)
+
+
+def zo_tangent_plane_ref(seed, r: int, delta, nvalid, d: int, block: int,
+                         dtype=jnp.float32):
+    """Plane-layout tangent oracle: u_r at compact indices, zeroed pads."""
+    base, valid = _plane_compact_idx(delta, nvalid, d, block)
+    u = counter_normal(jnp.uint32(seed), base, jnp.uint32(r))
+    return jnp.where(valid, u, 0.0).astype(dtype)
+
+
+def zo_perturb_plane_ref(x, seed, r: int, nu: float, delta, nvalid, block: int):
+    """Plane-layout perturb oracle: x + nu*u_r on the compact stream,
+    pads pass x through."""
+    d = x.shape[0]
+    base, valid = _plane_compact_idx(delta, nvalid, d, block)
+    u = counter_normal(jnp.uint32(seed), base, jnp.uint32(r))
+    cand = (x.astype(jnp.float32) + nu * u).astype(x.dtype)
+    return jnp.where(valid, cand, x)
+
+
 def opt_apply_ref(p, g, m, lr, beta):
     """Fused momentum-SGD apply oracle (the kernel's exact association):
     the new momentum is rounded to ``m.dtype`` *before* the parameter
@@ -64,6 +107,26 @@ def opt_apply_ref(p, g, m, lr, beta):
     new_p = (p.astype(jnp.float32)
              - lr * new_m.astype(jnp.float32)).astype(p.dtype)
     return new_p, new_m
+
+
+def adamw_apply_ref(p, g, mu, nu, lr, b1, b2, eps, wd, count):
+    """Fused AdamW apply oracle (the kernel's exact association): the
+    first moment is rounded to ``mu.dtype`` *before* driving the update
+    (the sgd kernel's write-back discipline); ``count`` is 1-based."""
+    c = jnp.asarray(count, jnp.float32)
+    b1 = jnp.asarray(b1, jnp.float32)
+    b2 = jnp.asarray(b2, jnp.float32)
+    gf = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    new_mu = (b1 * mu.astype(jnp.float32) + (1.0 - b1) * gf).astype(mu.dtype)
+    new_nu32 = b2 * nu.astype(jnp.float32) + (1.0 - b2) * gf * gf
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    upd = (new_mu.astype(jnp.float32) / bc1
+           / (jnp.sqrt(new_nu32 / bc2) + jnp.float32(eps))
+           + jnp.float32(wd) * pf)
+    new_p = (pf - jnp.asarray(lr, jnp.float32) * upd).astype(p.dtype)
+    return new_p, new_mu, new_nu32.astype(nu.dtype)
 
 
 def gossip_avg_ref(x, y):

@@ -70,6 +70,58 @@ def zo_combine(coeffs, seed, d: int, *, n_active=None, out_dtype=jnp.float32,
     )(coeffs.astype(jnp.float32), meta, denom)
 
 
+def _zo_combine_plane_body(coeffs_ref, meta_ref, denom_ref, delta_ref,
+                           nvalid_ref, o_ref, *, rv: int, block: int):
+    pid = pl.program_id(0)
+    lane = jax.lax.iota(jnp.int32, block)
+    # compact counter stream: plane index minus the block's pad offset
+    # reproduces the tree-layout ravel's counter indices bit-exactly
+    base = (pid * block + lane - delta_ref[0]).astype(jnp.uint32)
+    seed = meta_ref[0].astype(jnp.uint32)
+    acc = jnp.zeros((block,), jnp.float32)
+    for r in range(rv):
+        u = counter_normal(seed, base, jnp.uint32(r))
+        acc = acc + coeffs_ref[r] * u
+    valid = lane < nvalid_ref[0]
+    o_ref[...] = jnp.where(valid, acc / denom_ref[0], 0.0).astype(o_ref.dtype)
+
+
+def zo_combine_plane(coeffs, seed, delta, nvalid, d: int, *, n_active=None,
+                     out_dtype=jnp.float32, interpret: bool = False):
+    """Plane-layout ``zo_combine``: compact counter stream + masked pads.
+
+    ``delta`` / ``nvalid`` are the per-block int32 tables from
+    ``core.plane.rng_tables`` — lane j of block b draws
+    ``counter_normal(seed, b*BLOCK + j - delta[b], r)`` (the *compact*
+    index of the underlying leaf element), and lanes >= ``nvalid[b]``
+    (the block-alignment pads) are written as zeros, preserving the
+    plane's zero-pad invariant.  The buffer is consumed directly — no
+    concatenate-pad/slice round-trip through HBM like the generic
+    ``ops`` wrappers pay on unaligned vectors.
+    """
+    rv = int(coeffs.shape[0])
+    assert d % BLOCK == 0, d
+    assert delta.shape == nvalid.shape == (d // BLOCK,), (delta.shape, d)
+    meta = jnp.asarray(seed, jnp.int32).reshape(1)
+    denom = (jnp.float32(rv) if n_active is None
+             else jnp.asarray(n_active, jnp.float32)).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_zo_combine_plane_body, rv=rv, block=BLOCK),
+        grid=(d // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((rv,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), out_dtype),
+        interpret=interpret,
+    )(coeffs.astype(jnp.float32), meta, denom,
+      jnp.asarray(delta, jnp.int32), jnp.asarray(nvalid, jnp.int32))
+
+
 def _zo_perturb_body(x_ref, meta_ref, nu_ref, o_ref, *, block: int):
     pid = pl.program_id(0)
     base = (pid * block + jax.lax.iota(jnp.int32, block)).astype(jnp.uint32)
@@ -97,6 +149,46 @@ def zo_perturb(x, seed, r, nu, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
         interpret=interpret,
     )(x, meta, nu_arr)
+
+
+def _zo_perturb_plane_body(x_ref, meta_ref, nu_ref, delta_ref, nvalid_ref,
+                           o_ref, *, block: int):
+    pid = pl.program_id(0)
+    lane = jax.lax.iota(jnp.int32, block)
+    base = (pid * block + lane - delta_ref[0]).astype(jnp.uint32)
+    seed = meta_ref[0].astype(jnp.uint32)
+    r = meta_ref[1].astype(jnp.uint32)
+    u = counter_normal(seed, base, r)
+    xv = x_ref[...]
+    valid = lane < nvalid_ref[0]
+    cand = (xv.astype(jnp.float32) + nu_ref[0] * u).astype(o_ref.dtype)
+    # pad lanes pass x through untouched (zero stays zero)
+    o_ref[...] = jnp.where(valid, cand, xv.astype(o_ref.dtype))
+
+
+def zo_perturb_plane(x, seed, r, nu, delta, nvalid, *, interpret: bool = False):
+    """Plane-layout ``zo_perturb``: x + nu * u_r on the compact counter
+    stream (see ``zo_combine_plane``); pad lanes are passed through."""
+    d = x.shape[0]
+    assert d % BLOCK == 0, d
+    assert delta.shape == nvalid.shape == (d // BLOCK,), (delta.shape, d)
+    meta = jnp.stack([jnp.asarray(seed, jnp.int32), jnp.asarray(r, jnp.int32)])
+    nu_arr = jnp.asarray(nu, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_zo_perturb_plane_body, block=BLOCK),
+        grid=(d // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=interpret,
+    )(x, meta, nu_arr, jnp.asarray(delta, jnp.int32),
+      jnp.asarray(nvalid, jnp.int32))
 
 
 def _zo_perturb_batch_body(x_ref, meta_ref, nu_ref, o_ref, *, rv: int, block: int):

@@ -56,3 +56,37 @@ def zo_tangent(seed, r, d: int, *, dtype=jnp.float32, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((d,), dtype),
         interpret=interpret,
     )(meta)
+
+
+def _zo_tangent_plane_body(meta_ref, delta_ref, nvalid_ref, o_ref, *, block: int):
+    pid = pl.program_id(0)
+    lane = jax.lax.iota(jnp.int32, block)
+    base = (pid * block + lane - delta_ref[0]).astype(jnp.uint32)
+    seed = meta_ref[0].astype(jnp.uint32)
+    r = meta_ref[1].astype(jnp.uint32)
+    u = counter_normal(seed, base, r)
+    valid = lane < nvalid_ref[0]
+    o_ref[...] = jnp.where(valid, u, 0.0).astype(o_ref.dtype)
+
+
+def zo_tangent_plane(seed, r, delta, nvalid, d: int, *, dtype=jnp.float32,
+                     interpret: bool = False):
+    """Plane-layout tangent: u_r on the compact counter stream with the
+    block-alignment pads zeroed (``delta`` / ``nvalid`` are the tables
+    from ``core.plane.rng_tables``), bit-equal at the valid lanes to
+    ``zo_tangent`` over the compact vector."""
+    assert d % BLOCK == 0, d
+    assert delta.shape == nvalid.shape == (d // BLOCK,), (delta.shape, d)
+    meta = jnp.stack([jnp.asarray(seed, jnp.int32), jnp.asarray(r, jnp.int32)])
+    return pl.pallas_call(
+        functools.partial(_zo_tangent_plane_body, block=BLOCK),
+        grid=(d // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), dtype),
+        interpret=interpret,
+    )(meta, jnp.asarray(delta, jnp.int32), jnp.asarray(nvalid, jnp.int32))

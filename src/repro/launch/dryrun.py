@@ -29,6 +29,7 @@ from repro.configs.base import (
     GOSSIP_MODES,
     MOMENTUM_DTYPES,
     OPTIMIZERS,
+    PARAM_LAYOUTS,
     TOPOLOGIES,
     HDOConfig,
 )
@@ -60,7 +61,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
                  moe_constraint: bool = False, donate: bool = False,
                  fsdp: bool = False, topology: str = "ring",
                  optimizer: str = "sgd", local_steps: int = 1,
-                 clip_norm: float = 0.0,
+                 clip_norm: float = 0.0, param_layout: str = "tree",
                  sigmas=None, rvs=None, lrs=None, estimators_zo=None):
     """Returns (lowered, mesh, meta) for one combination, or None if skipped."""
     shape = INPUT_SHAPES[shape_name]
@@ -119,19 +120,32 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
             clip_norm=clip_norm,
             dispatch=dispatch,
             momentum_dtype=momentum_dtype,
+            param_layout=param_layout,
         )
         model = build_model(cfg)
         loss_fn = model.loss
+        # the plane layout derives its static leaf manifest from the
+        # params template — eval_shape structs carry all it needs
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         step = hdolib.build_hdo_step(
             loss_fn, hcfg, param_dim=cfg.param_count(),
             mesh=mesh, population_axes=mcfg.population_axes,
+            params_template=params_sds,
         )
 
-        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         state_sds = jax.eval_shape(lambda p: hdolib.init_state(p, hcfg), params_sds)
         batch_sds = specs.train_batch_specs(cfg, shape, n_agents)
 
-        pspec_params = shardlib.params_pspecs(state_sds.params, mcfg, mesh, population=True)
+        if hcfg.param_layout == "plane":
+            # the plane is one bare (n_agents, dim) buffer — the
+            # leaf-NAME-based pspec machinery cannot apply, so shard the
+            # agent axis over the population axes and replicate the
+            # (BLOCK-aligned, contiguous) plane dim
+            pop_axes = shardlib._maybe(mcfg.population_axes, n_agents, mesh)
+            pspec_params = P(pop_axes) if pop_axes else P()
+        else:
+            pspec_params = shardlib.params_pspecs(
+                state_sds.params, mcfg, mesh, population=True)
         # the opt state shards exactly like the params it tracks
         # (momentum tree for sgd, mu/nu/count for adamw)
         state_psp = hdolib.HDOState(
@@ -199,7 +213,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
             fsdp: bool = False, label: str = "",
             topology: str = "ring",
             optimizer: str = "sgd", local_steps: int = 1,
-            clip_norm: float = 0.0,
+            clip_norm: float = 0.0, param_layout: str = "tree",
             sigmas=None, rvs=None, lrs=None, estimators_zo=None) -> Dict[str, Any]:
     t0 = time.time()
     built = build_dryrun(arch, shape_name, multi_pod=multi_pod, gossip=gossip,
@@ -208,6 +222,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
                          moe_constraint=moe_constraint, donate=donate, fsdp=fsdp,
                          topology=topology, optimizer=optimizer,
                          local_steps=local_steps, clip_norm=clip_norm,
+                         param_layout=param_layout,
                          sigmas=sigmas, rvs=rvs, lrs=lrs,
                          estimators_zo=estimators_zo)
     if built is None:
@@ -245,6 +260,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
         "variant": {
             "dispatch": dispatch, "momentum_dtype": momentum_dtype,
             "optimizer": optimizer, "local_steps": local_steps,
+            "param_layout": param_layout,
             "attn_remat": attn_remat, "window_slice": window_slice,
             "moe_constraint": moe_constraint, "donate": donate, "fsdp": fsdp,
         },
@@ -283,6 +299,10 @@ def main() -> None:
                     help="estimate+update iterations per gossip round")
     ap.add_argument("--clip-norm", type=float, default=0.0,
                     help="per-agent gradient clip (0 disables)")
+    ap.add_argument("--param-layout", default="tree",
+                    choices=list(PARAM_LAYOUTS),
+                    help="stacked pytree vs contiguous per-agent plane "
+                         "(core/plane.py)")
     ap.add_argument("--attn-remat", action="store_true")
     ap.add_argument("--window-slice", action="store_true")
     ap.add_argument("--moe-constraint", nargs="?", const=True, default=False,
@@ -302,6 +322,7 @@ def main() -> None:
                      donate=args.donate, fsdp=args.fsdp, label=args.label,
                      topology=args.topology, optimizer=args.optimizer,
                      local_steps=args.local_steps, clip_norm=args.clip_norm,
+                     param_layout=args.param_layout,
                      sigmas=parse_csv(args.sigmas, float),
                      rvs=parse_csv(args.rvs, int),
                      lrs=parse_csv(args.lrs, float),

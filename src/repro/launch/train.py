@@ -46,11 +46,13 @@ from repro.configs.base import (
     GOSSIP_MODES,
     HDOConfig,
     OPTIMIZERS,
+    PARAM_LAYOUTS,
     TOPOLOGIES,
     ZO_ESTIMATORS,
     ZO_IMPLS,
 )
 from repro.core import build_hdo_step, consensus_distance, init_state
+from repro.core import plane as planelib
 from repro.core.population import parse_csv, tile
 from repro.data import AgentBatcher, brackets, synthetic
 from repro.models import build_model
@@ -119,6 +121,11 @@ def main() -> None:
     ap.add_argument("--weight-decay", type=float, default=0.0,
                     help="decoupled weight decay for --optimizer adamw "
                          "(0 = plain Adam; ignored by sgd)")
+    ap.add_argument("--param-layout", default="tree", choices=list(PARAM_LAYOUTS),
+                    help="population state layout: stacked pytree (tree) or "
+                         "the persistent block-aligned flat buffer per agent "
+                         "(plane, core/plane.py — O(#agents) kernel "
+                         "dispatches per phase)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
@@ -158,6 +165,7 @@ def main() -> None:
         local_steps=args.local_steps,
         clip_norm=args.clip_norm,
         weight_decay=args.weight_decay,
+        param_layout=args.param_layout,
         warmup_steps=min(50, args.steps // 5),
         cosine_steps=args.steps,
         seed=args.seed,
@@ -208,11 +216,26 @@ def main() -> None:
           f"estimator={est_desc}/{args.zo_impl} "
           f"optimizer={args.optimizer}/H={args.local_steps} gossip={gossip_desc}")
 
-    step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params))
+    step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params,
+                                     params_template=params))
+    # the manifest hash fingerprints the model's leaf set/shapes/dtypes
+    # for BOTH layouts, so --resume across a model change fails loudly
+    man_hash = planelib.manifest_hash(planelib.build_manifest(params))
+    ckpt_meta = {"arch": cfg.name, "hdo": dataclasses.asdict(hcfg),
+                 "param_layout": hcfg.param_layout, "manifest_hash": man_hash}
     state = init_state(params, hcfg)
-    ckpt_meta = {"arch": cfg.name, "hdo": dataclasses.asdict(hcfg)}
     start = 0
     if args.resume:
+        # sidecar-only guard BEFORE any array load: layout or
+        # model-shape drift gets a clear message instead of a deep
+        # structure/shape mismatch inside restore
+        try:
+            checkpoint.check_meta_compat(
+                checkpoint.read_meta(args.resume),
+                param_layout=hcfg.param_layout, manifest_hash=man_hash,
+            )
+        except ValueError as e:
+            raise SystemExit(f"--resume: {e}")
         state, meta = checkpoint.restore_state(args.resume, state)
         saved_hdo = meta.get("hdo")
         if saved_hdo is not None:

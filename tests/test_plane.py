@@ -1,0 +1,387 @@
+"""The persistent flat parameter plane (``param_layout="plane"``,
+core/plane.py): manifest invariants + round-trip across every
+registered architecture, the plane kernels' compact-counter-stream
+contract, the fused adamw apply, the small-leaf regime where the plane
+layout earns its keep (zero jnp-fallback leaves by construction), the
+plane-vs-tree single-step equivalence matrix, and the checkpoint
+manifest/layout guards.
+
+Comparison discipline (mirrors tests/test_kernels.py): kernel vs
+kernel on the same stream is asserted BIT-EXACT; kernel vs jnp oracle
+is allclose only (XLA may fuse multiply-add chains the kernel
+associates differently).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, init_state
+from repro.core import plane as planelib
+from repro.kernels import ops, ref
+from repro.kernels.zo_combine import BLOCK
+from repro.models import build_model
+
+# ---------------------------------------------------------------------------
+# the small-leaf regime model: one leaf above BLOCK (the embedding) and
+# several far below it (biases, norms) — the shapes where the tree
+# layout pays per-leaf dispatch and the jnp fallback
+# ---------------------------------------------------------------------------
+
+
+def small_leaf_params():
+    k = jax.random.PRNGKey(7)
+    ks = jax.random.split(k, 3)
+    return {
+        "emb": jax.random.normal(ks[0], (96, 90)) * 0.1,   # 8640 > BLOCK
+        "blk": {
+            "w": jax.random.normal(ks[1], (40, 40)) * 0.1,  # 1600 < BLOCK
+            "b": jnp.zeros((40,)),
+            "ln": jnp.ones((40,)),
+        },
+        "head": jax.random.normal(ks[2], (90,)) * 0.1,
+    }
+
+
+PARAMS = small_leaf_params()
+MAN = planelib.build_manifest(PARAMS)
+D = MAN.size
+W_TRUE = jax.random.normal(jax.random.PRNGKey(42), (D,)) * 0.1
+
+
+def loss_fn(params, batch):
+    w = jnp.concatenate([l.reshape(-1) for l in jax.tree_util.tree_leaves(params)])
+    return jnp.mean((batch["X"] @ w - batch["y"]) ** 2)
+
+
+def make_batches(key, n_agents, bsz=4):
+    X = jax.random.normal(key, (n_agents, bsz, D)) / np.sqrt(D)
+    return {"X": X, "y": X @ W_TRUE}
+
+
+# ---------------------------------------------------------------------------
+# manifest: invariants + pack/unpack round-trip for every architecture
+# ---------------------------------------------------------------------------
+
+
+def _counter_filled(sds_tree):
+    """Deterministic leaves whose values survive any float cast exactly
+    (arange % 127 is exact even in bfloat16)."""
+    leaves, treedef = jax.tree_util.tree_flatten(sds_tree)
+    out = [
+        (jnp.arange(int(np.prod(l.shape) or 1)) % 127)
+        .astype(l.dtype).reshape(l.shape)
+        for l in leaves
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_manifest_round_trip_every_architecture(arch):
+    """build_manifest works on eval_shape structs of every registered
+    model, the layout invariants hold, the hash is stable, and
+    pack -> unpack restores every leaf exactly."""
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    model = build_model(cfg)
+    sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    man = planelib.build_manifest(sds)
+
+    offset = 0
+    for spec in man.leaves:
+        assert spec.offset == offset
+        assert spec.offset % BLOCK == 0
+        assert spec.extent % BLOCK == 0
+        assert spec.size <= spec.extent < spec.size + BLOCK
+        offset += spec.extent
+    assert man.dim == offset and man.dim % BLOCK == 0
+    assert man.size == sum(s.size for s in man.leaves)
+    # the fingerprint is a pure function of the layout
+    assert planelib.manifest_hash(man) == planelib.manifest_hash(
+        planelib.build_manifest(sds))
+
+    tree = _counter_filled(sds)
+    plane = planelib.pack(man, tree)
+    assert plane.shape == (man.dim,)
+    back = planelib.unpack(man, plane)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manifest_hash_sensitive_to_layout():
+    p2 = {**PARAMS, "head": jnp.zeros((91,))}
+    assert (planelib.manifest_hash(planelib.build_manifest(p2))
+            != planelib.manifest_hash(MAN))
+
+
+def test_manifest_rejects_non_float_leaves():
+    with pytest.raises(ValueError, match="floating-point"):
+        planelib.build_manifest({"ids": jnp.zeros((8,), jnp.int32)})
+
+
+def test_unpack_stacked_matches_per_row():
+    plane = planelib.pack(MAN, PARAMS)
+    stacked = jnp.stack([plane, 2.0 * plane])
+    tree = planelib.unpack_stacked(MAN, stacked)
+    row0 = planelib.unpack(MAN, plane)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(row0)):
+        np.testing.assert_array_equal(np.asarray(a)[0], np.asarray(b))
+
+
+def test_small_leaf_model_is_the_fallback_regime():
+    """The test model really exercises the regime the plane removes:
+    the tree layout has a non-empty sub-BLOCK fallback set, the plane
+    has none and O(#agents) dispatches per phase."""
+    counts = planelib.dispatch_counts(MAN, n_agents=4)
+    assert counts["tree"]["update_fallback_leaves"] > 0
+    assert counts["tree"]["mix_kernel_calls"] == 4 * counts["n_leaves"]
+    assert counts["plane"] == {
+        "update_kernel_calls": 4,
+        "mix_kernel_calls": 4,
+        "update_fallback_leaves": 0,
+    }
+    assert all(s.extent % BLOCK == 0 for s in MAN.leaves)
+
+
+# ---------------------------------------------------------------------------
+# plane kernels: compact counter stream + masked pads
+# ---------------------------------------------------------------------------
+
+
+DELTA, NVALID = (jnp.asarray(t) for t in planelib.rng_tables(MAN))
+SEED = 1234
+
+
+def _compact_of(plane_vec):
+    """Gather the compact lanes of a plane vector, in leaf order."""
+    return np.concatenate([
+        np.asarray(plane_vec)[s.offset:s.offset + s.size] for s in MAN.leaves
+    ])
+
+
+def _pad_mask():
+    m = np.zeros((MAN.dim,), bool)
+    for s in MAN.leaves:
+        m[s.offset + s.size:s.offset + s.extent] = True
+    return m
+
+
+def test_zo_combine_plane_matches_tree_kernel_bitwise():
+    coeffs = jax.random.normal(jax.random.PRNGKey(0), (4,))
+    g_plane = ops.zo_combine_plane(coeffs, SEED, DELTA, NVALID, MAN.dim)
+    g_tree = ops.zo_combine(coeffs, SEED, MAN.size)
+    np.testing.assert_array_equal(_compact_of(g_plane), np.asarray(g_tree))
+    assert not np.any(np.asarray(g_plane)[_pad_mask()])
+    # and allclose to the jnp oracle (FMA association may differ)
+    g_ref = jax.jit(lambda c: ref.zo_combine_plane_ref(
+        c, SEED, DELTA, NVALID, MAN.dim, BLOCK))(coeffs)
+    np.testing.assert_allclose(np.asarray(g_plane), np.asarray(g_ref),
+                               atol=1e-5, rtol=1e-6)
+
+
+def test_zo_tangent_plane_matches_tree_kernel_bitwise():
+    u_plane = ops.zo_tangent_plane(SEED, 3, DELTA, NVALID, MAN.dim)
+    u_tree = ops.zo_tangent(SEED, 3, MAN.size)
+    np.testing.assert_array_equal(_compact_of(u_plane), np.asarray(u_tree))
+    assert not np.any(np.asarray(u_plane)[_pad_mask()])
+    # tangent is pure generation (no FMA chain): oracle is bit-exact too
+    u_ref = jax.jit(lambda: ref.zo_tangent_plane_ref(
+        SEED, 3, DELTA, NVALID, MAN.dim, BLOCK))()
+    np.testing.assert_array_equal(np.asarray(u_plane), np.asarray(u_ref))
+
+
+def test_zo_perturb_plane_matches_tree_kernel_bitwise():
+    x_plane = planelib.pack(MAN, PARAMS)
+    x_tree = jnp.asarray(_compact_of(x_plane))
+    nu = 1e-3
+    c_plane = ops.zo_perturb_plane(x_plane, SEED, 2, nu, DELTA, NVALID)
+    c_tree = ops.zo_perturb(x_tree, SEED, 2, nu)
+    np.testing.assert_array_equal(_compact_of(c_plane), np.asarray(c_tree))
+    # pad lanes pass x through untouched (here: the zero pads)
+    np.testing.assert_array_equal(np.asarray(c_plane)[_pad_mask()],
+                                  np.asarray(x_plane)[_pad_mask()])
+    c_ref = jax.jit(lambda v: ref.zo_perturb_plane_ref(
+        v, SEED, 2, nu, DELTA, NVALID, BLOCK))(x_plane)
+    np.testing.assert_allclose(np.asarray(c_plane), np.asarray(c_ref),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw apply
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mdt", [jnp.float32, jnp.bfloat16])
+def test_adamw_apply_kernel_equals_oracle(mdt):
+    """Dyadic constants => the kernel and the oracle compute the same
+    float chain exactly (the rounded mu drives the update in both)."""
+    d = BLOCK + 100
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    p = jax.random.normal(ks[0], (d,))
+    g = jax.random.normal(ks[1], (d,))
+    mu = (jax.random.normal(ks[2], (d,)) * 0.1).astype(mdt)
+    nu = jnp.abs(jax.random.normal(ks[3], (d,))) * 0.01
+    lr, b1, b2, eps, wd, count = 0.25, 0.5, 0.75, 0.0078125, 0.125, 3
+    outs_k = ops.adamw_apply(p, g, mu, nu, lr, b1, b2, eps, wd, count)
+    outs_r = jax.jit(ref.adamw_apply_ref)(p, g, mu, nu, lr, b1, b2, eps,
+                                          wd, count)
+    for a, b, name in zip(outs_k, outs_r, ("p", "mu", "nu")):
+        assert a.dtype == b.dtype, name
+        np.testing.assert_allclose(
+            np.asarray(a, jnp.float32), np.asarray(b, jnp.float32),
+            rtol=2e-6, err_msg=name)
+    assert outs_k[1].dtype == mdt
+
+
+def test_adamw_apply_vmaps_per_agent_lr():
+    n, d = 3, BLOCK
+    p = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    g = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    mu = jnp.zeros((n, d))
+    nu = jnp.zeros((n, d))
+    lrs = jnp.asarray([0.1, 0.2, 0.4], jnp.float32)
+    po, _, _ = jax.vmap(
+        lambda pf, gf, mf, vf, lrf: ops.adamw_apply(
+            pf, gf, mf, vf, lrf, 0.9, 0.999, 1e-8, 0.0, 1)
+    )(p, g, mu, nu, lrs)
+    singles = [
+        ops.adamw_apply(p[i], g[i], mu[i], nu[i], lrs[i],
+                        0.9, 0.999, 1e-8, 0.0, 1)[0]
+        for i in range(n)
+    ]
+    np.testing.assert_array_equal(np.asarray(po), np.stack([np.asarray(s) for s in singles]))
+
+
+# ---------------------------------------------------------------------------
+# plane-vs-tree single-step equivalence (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+BASE = dict(n_agents=4, n_zeroth=2, estimator_zo="multi_rv", rv=2,
+            nu=1e-3, gossip="dense", warmup_steps=0, use_cosine=False)
+# all-equal per-agent tables: goes down the heterogeneous path but must
+# collapse to the homogeneous trajectory (the PR-4 contract), so the
+# plane/tree comparison covers the het machinery too
+ALL_EQUAL = dict(sigmas=(1e-3, 1e-3), rvs=(2, 2), lrs=(0.25,) * 4,
+                 estimators_zo=("multi_rv", "multi_rv"))
+
+
+def _run_layout(cfg, steps=3):
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D,
+                                  params_template=PARAMS))
+    state = init_state(PARAMS, cfg)
+    for t in range(steps):
+        state, m = step(state, make_batches(
+            jax.random.fold_in(jax.random.PRNGKey(5), t), cfg.n_agents))
+    return state, m
+
+
+def _params_tree(cfg, state):
+    if cfg.param_layout == "plane":
+        return planelib.unpack_stacked(MAN, state.params)
+    return state.params
+
+
+@pytest.mark.parametrize("zo_impl", ["tree", "fused"])
+@pytest.mark.parametrize("dispatch", ["select", "split"])
+@pytest.mark.parametrize("het", [False, True], ids=["hom", "all_equal_het"])
+def test_plane_step_bit_identical_to_tree_sgd(zo_impl, dispatch, het):
+    """The headline contract: with dyadic lr/momentum the plane layout
+    replays the tree layout's sgd trajectory BIT FOR BIT — estimate
+    (compact counter stream), clip-free update, and mix included —
+    for both ZO engines, both grouped dispatches, and the heterogeneous
+    all-equal cohort."""
+    kw = dict(BASE, lr=0.25, momentum=0.5, zo_impl=zo_impl,
+              dispatch=dispatch, **(ALL_EQUAL if het else {}))
+    s_tree, m_tree = _run_layout(HDOConfig(param_layout="tree", **kw))
+    s_pln, m_pln = _run_layout(HDOConfig(param_layout="plane", **kw))
+
+    pt = _params_tree(HDOConfig(param_layout="plane", **kw), s_pln)
+    for a, b in zip(jax.tree_util.tree_leaves(s_tree.params),
+                    jax.tree_util.tree_leaves(pt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # momentum plane rows unpack to the tree momentum exactly
+    for a, b in zip(jax.tree_util.tree_leaves(s_tree.opt_state),
+                    jax.tree_util.tree_leaves(
+                        planelib.unpack_stacked(MAN, s_pln.opt_state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert set(m_tree) == set(m_pln)
+    np.testing.assert_array_equal(np.asarray(m_tree["loss_mean"]),
+                                  np.asarray(m_pln["loss_mean"]))
+
+
+def test_plane_pads_stay_zero_through_the_step():
+    """The pads-are-invariant-zero contract that makes every phase safe
+    to run on the padded buffer."""
+    cfg = HDOConfig(param_layout="plane", lr=0.25, momentum=0.5, **BASE)
+    state, _ = _run_layout(cfg)
+    pads = np.asarray(state.params)[:, _pad_mask()]
+    np.testing.assert_array_equal(pads, np.zeros_like(pads))
+    mpads = np.asarray(state.opt_state)[:, _pad_mask()]
+    np.testing.assert_array_equal(mpads, np.zeros_like(mpads))
+
+
+def test_plane_adamw_allclose_to_tree():
+    """adamw goes through the fused plane kernel vs the optim transform
+    tree path — same math, different association, so allclose (the sgd
+    rule above is the bit-exact surface)."""
+    kw = dict(BASE, lr=0.01, momentum=0.9, optimizer="adamw",
+              weight_decay=0.01)
+    s_tree, _ = _run_layout(HDOConfig(param_layout="tree", **kw))
+    s_pln, _ = _run_layout(HDOConfig(param_layout="plane", **kw))
+    pt = _params_tree(HDOConfig(param_layout="plane", **kw), s_pln)
+    for a, b in zip(jax.tree_util.tree_leaves(s_tree.params),
+                    jax.tree_util.tree_leaves(pt)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+    assert s_pln.opt_state["count"] == 3
+
+
+def test_plane_adamw_bf16_first_moment():
+    """momentum_dtype reaches the adamw first moment under the plane
+    layout (the fused kernel's write-back discipline legitimizes it)."""
+    cfg = HDOConfig(param_layout="plane", lr=0.01, momentum=0.9,
+                    optimizer="adamw", momentum_dtype="bfloat16", **BASE)
+    state, m = _run_layout(cfg)
+    assert state.opt_state["mu"].dtype == jnp.bfloat16
+    assert state.opt_state["nu"].dtype == jnp.float32
+    assert np.isfinite(float(m["loss_mean"]))
+    assert bool(jnp.all(jnp.isfinite(state.params)))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: the manifest/layout guards + plane state round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_meta_guards(tmp_path):
+    cfg = HDOConfig(param_layout="plane", lr=0.25, momentum=0.5, **BASE)
+    state = init_state(PARAMS, cfg)
+    h = planelib.manifest_hash(MAN)
+    path = str(tmp_path / "ckpt")
+    checkpoint.save_state(path, state,
+                          meta={"param_layout": "plane", "manifest_hash": h})
+
+    meta = checkpoint.read_meta(path)
+    assert meta["param_layout"] == "plane" and meta["manifest_hash"] == h
+    # matching run: no raise; layout drift and manifest drift: loud
+    checkpoint.check_meta_compat(meta, param_layout="plane", manifest_hash=h)
+    with pytest.raises(ValueError, match="param_layout"):
+        checkpoint.check_meta_compat(meta, param_layout="tree")
+    with pytest.raises(ValueError, match="manifest"):
+        checkpoint.check_meta_compat(meta, param_layout="plane",
+                                     manifest_hash="deadbeefdeadbeef")
+    # checkpoints written before the guard keys existed stay accepted
+    checkpoint.check_meta_compat({}, param_layout="plane", manifest_hash=h)
+
+    # and the plane state itself round-trips exactly
+    restored, _ = checkpoint.restore_state(path, init_state(PARAMS, cfg))
+    np.testing.assert_array_equal(np.asarray(restored.params),
+                                  np.asarray(state.params))

@@ -245,10 +245,88 @@ def test_heterogeneous_lr_only():
     assert float(m["loss_mean"]) < 5e-2
 
 
-def test_shard_cond_rejects_heterogeneous():
+def test_shard_cond_heterogeneous_no_mesh_equals_select():
+    """The shard_cond homogeneous-cohort restriction is lifted: a
+    heterogeneous cohort builds, and without a mesh the shard_cond path
+    documents itself as falling through to the grouped select — the two
+    dispatches must be the SAME program, bit for bit."""
+    cfg_sc = HDOConfig(dispatch="shard_cond", **HET, **BASE)
+    cfg_sel = dataclasses.replace(cfg_sc, dispatch="select")
+    s0 = init_state({"w": jnp.zeros((D,))}, cfg_sc)
+    b = make_batches(jax.random.PRNGKey(3), cfg_sc.n_agents)
+    s1, m1 = jax.jit(build_hdo_step(loss_fn, cfg_sc, param_dim=D))(s0, b)
+    s2, m2 = jax.jit(build_hdo_step(loss_fn, cfg_sel, param_dim=D))(s0, b)
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(s2.params["w"]))
+    assert set(m1) == set(m2)
+
+
+def test_shard_cond_heterogeneous_misaligned_groups_raise():
+    """With a real mesh, every population shard must hold agents of a
+    single estimator-kind group (the runtime branch is per shard): a
+    1-device mesh puts all of HET's mixed-kind cohort on one shard, so
+    the build must fail loudly with the alignment message rather than
+    silently running the wrong estimator."""
+    mesh = jax.make_mesh((1,), ("data",))
     cfg = HDOConfig(dispatch="shard_cond", **HET, **BASE)
-    with pytest.raises(ValueError, match="shard_cond"):
-        build_hdo_step(loss_fn, cfg, param_dim=D)
+    with pytest.raises(ValueError, match="single estimator kind group"):
+        build_hdo_step(loss_fn, cfg, param_dim=D, mesh=mesh,
+                       population_axes=("data",))
+
+
+@pytest.mark.slow
+def test_het_shard_cond_parity_subprocess():
+    """Mixed-kind cohort under shard_cond == select on a real
+    multi-device population mesh (group-aligned shards: 8 agents over 4
+    population shards, each shard a single kind group), both engines."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import HDOConfig
+        from repro.core import build_hdo_step, init_state
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        d = 12
+        w_true = jax.random.normal(jax.random.PRNGKey(42), (d,))
+        def loss_fn(params, batch):
+            return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+        for impl in ("tree", "fused"):
+            outs = {}
+            for disp in ("select", "shard_cond"):
+                cfg = HDOConfig(n_agents=8, n_zeroth=4, gossip="rr_static",
+                                lr=0.05, momentum=0.0, warmup_steps=0,
+                                use_cosine=False, nu=1e-3,
+                                sigmas=(1e-3, 1e-2, 1e-3, 1e-3),
+                                rvs=(4, 2, 2, 1),
+                                lrs=(0.05, 0.01, 0.05, 0.05,
+                                     0.05, 0.05, 0.05, 0.05),
+                                estimators_zo=("multi_rv", "multi_rv",
+                                               "fwd_grad", "fwd_grad"),
+                                dispatch=disp, zo_impl=impl)
+                step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=d,
+                                              mesh=mesh,
+                                              population_axes=("data",)))
+                state = init_state({"w": jnp.zeros((d,))}, cfg)
+                for t in range(30):
+                    k = jax.random.fold_in(jax.random.PRNGKey(9), t)
+                    X = jax.random.normal(k, (8, 8, d))
+                    state, m = step(state, {"X": X, "y": X @ w_true})
+                outs[disp] = np.asarray(state.params["w"])
+            np.testing.assert_allclose(outs["select"], outs["shard_cond"],
+                                       atol=1e-5, err_msg=impl)
+        print("HET_SHARD_COND_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=420, env=env, cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "HET_SHARD_COND_OK" in proc.stdout
 
 
 def test_high_sigma_agent_dominates_group_variance():
