@@ -29,10 +29,21 @@ plane layout targets (per-(agent, leaf) dispatch and the sub-BLOCK jnp
 fallback vs O(#agents) dispatches over one contiguous buffer);
 ``--json`` writes ``BENCH_plane.json`` with the analytic per-phase
 dispatch counts (``core.plane.dispatch_counts``) and HBM bytes.
+
+The ``compress_*`` section sweeps the compressed-gossip round
+(``compress_mix``: compress -> decompress -> difference-form combine +
+error-feedback write-back in one O(d) pass) across compressor settings
+at d ~ 2^20, reporting the communication/convergence trade the
+subsystem exists to expose: bytes-on-wire per agent per round
+(``topology.compress.Compressor.bytes_on_wire``) against the predicted
+per-round Gamma contraction under that compressor
+(``topology.spectral.effective_slem`` squared) and wall time; ``--json``
+writes ``BENCH_compress.json`` (schema in ``benchmarks/README.md``).
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import time
@@ -96,6 +107,7 @@ def main(json_path: str | None = None) -> None:
     gossip_bench(json_path=side("BENCH_gossip.json"))
     optim_bench(json_path=side("BENCH_optim.json"))
     plane_bench(json_path=side("BENCH_plane.json"))
+    compress_bench(json_path=side("BENCH_compress.json"))
 
 
 def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
@@ -143,6 +155,88 @@ def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
                            f"hbm_mb={hbm / 1e6:.1f}"))
     if json_path:
         payload = {"d": d, "backend": jax.default_backend(),
+                   "interpret_mode": jax.default_backend() != "tpu",
+                   "entries": entries}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return entries
+
+
+def compress_bench(d: int = 1 << 20, json_path: str | None = None):
+    """The compressed-gossip round at d >= 1e6: ``compress_mix`` (fused
+    compress -> decompress -> weighted k-neighbor combine +
+    error-feedback residual in one O(d) pass) vs the jnp oracle, per
+    compressor setting, on a ring (degree k=2).
+
+    Each entry carries the trade the sweep exists to plot:
+      * ``wire_bytes``      — payload bytes one agent puts on the wire
+        per round (``Compressor.bytes_on_wire``; dense f32 ``4*d`` for
+        the uncompressed baseline).
+      * ``delta``           — the compressor's contraction-retention
+        factor (top-k: k/d; qsgd: 1/(1+omega)).
+      * ``predicted_gamma`` — the per-round consensus contraction
+        ``effective_slem(topo, delta)**2`` the spectral model predicts
+        (validated against measurement in tests/test_compress.py).
+      * ``hbm_bytes``       — analytic kernel traffic: read x + u +
+        k neighbor bases, write out + residual: ``(k + 4) * d * 4``
+        (payload statistics are O(k) scalars).
+
+    The uncompressed baseline row times the plain ``gossip_mix`` kernel
+    (no send basis / residual stream) so the fused path's overhead over
+    the PR-6 hot path is visible in the same artifact.
+    """
+    from repro.topology import compress as compresslib
+    from repro.topology import graphs, spectral
+
+    topo = graphs.ring(8)
+    k = int(topo.neighbors.shape[1])
+    w = jnp.asarray(topo.weights[0], jnp.float32)  # ring: uniform rows
+    w_self = float(1.0 - float(jnp.sum(w)))
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    nbrs = jax.random.normal(jax.random.PRNGKey(1), (k, d))
+    u = x.astype(jnp.float32)  # zero residual: send basis == params
+    seeds = compresslib.payload_seeds(0, 0, k + 1)
+
+    settings = [
+        ("none", None),
+        ("topk_1pct", compresslib.Compressor("topk", k=max(1, d // 100))),
+        ("topk_10pct", compresslib.Compressor("topk", k=max(1, d // 10))),
+        ("qsgd_4bit", compresslib.Compressor("qsgd", bits=4)),
+        ("qsgd_8bit", compresslib.Compressor("qsgd", bits=8)),
+    ]
+    entries = []
+    for name, comp in settings:
+        if comp is None:
+            us_k = _time(lambda: ops.gossip_mix(x, nbrs, w_self, w), n=3)
+            us_r = _time(
+                lambda: jax.jit(ref.gossip_mix_ref)(x, nbrs, w_self, w), n=3)
+            wire, delta = 4 * d, 1.0
+            hbm = (k + 2) * d * 4
+        else:
+            rows = jnp.concatenate([u[None, :], nbrs], axis=0)
+            thr = comp.thresholds(rows)
+            mode, bits = comp.mode, comp.bits
+            us_k = _time(lambda: ops.compress_mix(
+                x, u, nbrs, w, thr, seeds, mode, bits), n=3)
+            jref = jax.jit(functools.partial(
+                ref.compress_mix_ref, mode=mode, bits=bits))
+            us_r = _time(lambda: jref(x, u, nbrs, w, thr, seeds), n=3)
+            wire, delta = comp.bytes_on_wire(d), comp.delta(d)
+            hbm = (k + 4) * d * 4
+        gamma = spectral.effective_slem(topo, delta=delta) ** 2
+        entries.append({
+            "setting": name, "d": d, "k_neighbors": k,
+            "us_per_call": round(us_k, 1), "ref_us_per_call": round(us_r, 1),
+            "wire_bytes": int(wire), "delta": round(float(delta), 6),
+            "predicted_gamma": round(float(gamma), 6),
+            "hbm_bytes": hbm,
+        })
+        print(csv_line(f"compress_{name}_d{d}", us_k,
+                       f"wire_mb={wire / 1e6:.2f},gamma={gamma:.4f}"))
+    if json_path:
+        payload = {"d": d, "topology": "ring8", "k_neighbors": k,
+                   "backend": jax.default_backend(),
                    "interpret_mode": jax.default_backend() != "tpu",
                    "entries": entries}
         with open(json_path, "w") as f:

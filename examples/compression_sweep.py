@@ -1,0 +1,99 @@
+"""Compressed-gossip sweep on the Brackets (Dyck-1) task: what payload
+compression, error feedback, staleness, and injected faults do to
+consensus and convergence for a fixed hybrid population on a ring.
+
+  PYTHONPATH=src python examples/compression_sweep.py [--steps 120]
+
+Each regime prints its bytes-on-wire per agent per round next to the
+effective contraction the spectral model predicts
+(``effective_slem(W, delta, staleness)^2``) and the measured consensus
+distance / validation loss — the communication-efficiency story: top-k
+at 1% of coordinates cuts the wire bytes by ~50x while error feedback
+keeps the population converging, and the no-EF ablation shows the
+compressor bias the residual stream is there to absorb. The fault rows
+stress the same run under replayable drop/straggler injection
+(``HDOConfig.fault_*``).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HDOConfig
+from repro.configs.paper_tasks import brackets_transformer
+from repro.core import build_hdo_step, consensus_distance, init_state
+from repro.core import plane as planelib
+from repro.data import brackets
+from repro.models import build_model
+from repro.topology import compress as compresslib
+
+N_AGENTS = 8
+
+# (name, config overrides) — every regime rides gossip="graph"/ring
+SWEEP = [
+    ("dense_payload", dict()),
+    ("topk_10pct", dict(compression="topk")),          # k filled in below
+    ("topk_1pct", dict(compression="topk")),
+    ("topk_1pct_noEF", dict(compression="topk", error_feedback=False)),
+    ("qsgd_4bit", dict(compression="qsgd", compress_bits=4)),
+    ("qsgd_4bit_stale2", dict(compression="qsgd", compress_bits=4,
+                              staleness=2)),
+    ("topk_1pct_faults", dict(compression="topk", fault_drop_rate=0.1,
+                              fault_straggler_rate=0.1, fault_seed=7)),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(brackets_transformer(), dtype="float32")
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    d = planelib.build_manifest(params0).size  # compact parameter count
+    toks, labs = brackets.make_dataset(n_samples=4096, seq_len=17, seed=0)
+    toks_v, labs_v = brackets.make_dataset(n_samples=512, seq_len=17, seed=7)
+    eval_batch = {"tokens": jnp.asarray(toks_v), "labels": jnp.asarray(labs_v)}
+
+    print(f"{'regime':>18s} {'wire_KiB':>8s} {'eff_contr':>9s} "
+          f"{'gamma':>10s} {'val_loss':>9s}")
+    for name, over in SWEEP:
+        over = dict(over)
+        if over.get("compression") == "topk":
+            over["compress_k"] = max(1, d // (10 if "10pct" in name else 100))
+        hcfg = HDOConfig(n_agents=N_AGENTS, n_zeroth=4,
+                         estimator_zo="fwd_grad", rv=8, gossip="graph",
+                         topology="ring", lr=0.05, momentum=0.8,
+                         warmup_steps=10, cosine_steps=args.steps,
+                         nu=1e-4, seed=0, **over)
+        # param_dim feeds the compressor's delta into the spectral
+        # diagnostics (without it the effective contraction reports the
+        # raw graph slem)
+        step = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=d))
+        state = init_state(params0, hcfg)
+        rng = np.random.default_rng(1)
+        for t in range(args.steps):
+            idx = rng.integers(0, len(toks), size=(N_AGENTS, 32))
+            state, metrics = step(state, {"tokens": jnp.asarray(toks[idx]),
+                                          "labels": jnp.asarray(labs[idx])})
+        mu = jax.tree.map(lambda x: x.mean(0), state.params)
+        val = float(model.loss(mu, eval_batch))
+        gamma = float(consensus_distance(state.params))
+        if hcfg.compression == "none":
+            wire = 4 * d
+        else:
+            comp = compresslib.Compressor(hcfg.compression,
+                                          k=hcfg.compress_k,
+                                          bits=hcfg.compress_bits)
+            wire = comp.bytes_on_wire(d)
+        eff = float(metrics.get("gossip_effective_lambda2",
+                                metrics["gossip_lambda2"])) ** 2
+        print(f"{name:>18s} {wire / 1024:>8.1f} {eff:>9.4f} "
+              f"{gamma:>10.2e} {val:>9.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -69,7 +69,10 @@ def main():
         state = init_state(model.init(jax.random.PRNGKey(0)), hcfg)
         rng = np.random.default_rng(1)
         for t in range(rounds):
-            idx = rng.integers(0, len(toks), size=(N_AGENTS, 32))
+            # H>1 rounds take fresh per-substep batches: every leaf
+            # carries a leading (H, n_agents, ...) axis
+            shape = (N_AGENTS, 32) if H == 1 else (H, N_AGENTS, 32)
+            idx = rng.integers(0, len(toks), size=shape)
             state, metrics = step(state, {"tokens": jnp.asarray(toks[idx]),
                                           "labels": jnp.asarray(labs[idx])})
         mu = jax.tree.map(lambda x: x.mean(0), state.params)

@@ -153,8 +153,12 @@ def check_meta_compat(meta: Dict, *, param_layout: Optional[str] = None,
 
 
 def save_state(path: str, state, *, meta: Optional[Dict] = None) -> None:
-    """Persist a full ``core.hdo.HDOState`` (params, opt_state, step)."""
-    tree = {"params": state.params, "opt_state": state.opt_state}
+    """Persist a full ``core.hdo.HDOState`` (params, opt_state, step,
+    and the gossip communication state — error-feedback residuals /
+    stale-broadcast buffers; an empty ``comm`` contributes no leaves, so
+    plain configs produce the exact pre-comm checkpoint structure)."""
+    tree = {"params": state.params, "opt_state": state.opt_state,
+            "comm": state.comm}
     save(path, jax.device_get(tree), step=int(state.step), meta=meta)
 
 
@@ -164,14 +168,17 @@ def restore_state(path: str, like) -> Tuple[Any, Dict]:
     ``like`` is a template state with the target structure/dtypes —
     build it with ``core.init_state`` under the SAME ``HDOConfig``
     (optimizer / momentum / momentum_dtype decide the opt_state
+    structure; compression / staleness / fault knobs decide the comm
     structure).  Returns ``(state, meta)``.
     """
     from repro.core.hdo import HDOState
 
     tree, step, meta = restore(
-        path, {"params": like.params, "opt_state": like.opt_state}
+        path, {"params": like.params, "opt_state": like.opt_state,
+               "comm": like.comm}
     )
     state = HDOState(
-        params=tree["params"], opt_state=tree["opt_state"], step=jnp.int32(step)
+        params=tree["params"], opt_state=tree["opt_state"],
+        step=jnp.int32(step), comm=tree["comm"]
     )
     return state, meta

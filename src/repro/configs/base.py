@@ -193,6 +193,7 @@ TOPOLOGIES = (
 )
 MOMENTUM_DTYPES = ("float32", "bfloat16")
 PARAM_LAYOUTS = ("tree", "plane")
+COMPRESSIONS = ("none", "topk", "qsgd")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -296,6 +297,43 @@ class HDOConfig:
     #             is pinned bit-identical to "tree" for sgd and allclose
     #             for adamw (tests/test_plane.py).
     param_layout: str = "tree"
+    # -- communication-reduced + fault-tolerant gossip (graph modes) ----
+    # payload compression of the gossip exchange (repro.topology.compress):
+    #   "none" — raw params on the wire (bit-identical to the plain
+    #            graph mixers; the pinned pass-through);
+    #   "topk" — each agent broadcasts only its compress_k
+    #            largest-magnitude coordinates per payload vector;
+    #   "qsgd" — stochastic quantization to 2^compress_bits - 1 levels
+    #            per coordinate (unbiased in expectation), scaled by the
+    #            payload's inf-norm.  Both mix in difference form
+    #            x_i += sum_j W_ij (q_j - q_i), which preserves the
+    #            population mean exactly for ANY compressor.
+    compression: str = "none"
+    compress_k: int = 0  # topk: coordinates kept per payload vector
+    compress_bits: int = 4  # qsgd: bits per coordinate (1..8)
+    # error feedback: each agent accumulates what its compressor failed
+    # to transmit (residual e_i, a new HDOState stream) and adds it to
+    # the next payload — sent + residual telescopes to the raw signal
+    error_feedback: bool = True
+    # stale/asynchronous mixing bound tau: agents rebroadcast on a
+    # staggered round-robin schedule every tau+1 rounds, so neighbors
+    # mix against last-broadcast payloads at most tau rounds old
+    # (0 = synchronous: fresh payloads every round)
+    staleness: int = 0
+    # fault-injection harness (repro.topology.faults) — per-round,
+    # per-agent Bernoulli draws from a counter-derived RNG keyed on
+    # (fault_seed, step, agent), so runs are exactly replayable:
+    #   drop       — the agent is offline this round (sends nothing,
+    #                mixes nothing; its edges vanish symmetrically)
+    #   straggler  — the agent fails to refresh its broadcast buffer
+    #                (neighbors keep mixing against its stale payload)
+    #   byzantine  — the agent's broadcast is adversarially corrupted
+    #                (scaled sign-flip by fault_byzantine_scale)
+    fault_drop_rate: float = 0.0
+    fault_straggler_rate: float = 0.0
+    fault_byzantine_rate: float = 0.0
+    fault_byzantine_scale: float = 10.0
+    fault_seed: int = 0
 
     def __post_init__(self):
         if self.estimator_zo not in ZO_ESTIMATORS:
@@ -343,6 +381,49 @@ class HDOConfig:
             raise ValueError(
                 f"param_layout must be one of {PARAM_LAYOUTS}, "
                 f"got {self.param_layout!r}"
+            )
+        if self.compression not in COMPRESSIONS:
+            raise ValueError(
+                f"compression must be one of {COMPRESSIONS}, "
+                f"got {self.compression!r}"
+            )
+        if self.compression == "topk" and self.compress_k < 1:
+            raise ValueError(
+                f"compression='topk' needs compress_k >= 1 (coordinates "
+                f"kept per payload vector), got {self.compress_k}"
+            )
+        if self.compression == "qsgd" and not 1 <= self.compress_bits <= 8:
+            raise ValueError(
+                f"compression='qsgd' needs compress_bits in [1, 8], "
+                f"got {self.compress_bits}"
+            )
+        if self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {self.staleness}")
+        for fname in ("fault_drop_rate", "fault_straggler_rate",
+                      "fault_byzantine_rate"):
+            r = getattr(self, fname)
+            if not 0.0 <= r < 1.0:
+                raise ValueError(f"{fname} must lie in [0, 1), got {r}")
+        faults_on = (self.fault_drop_rate > 0 or self.fault_straggler_rate > 0
+                     or self.fault_byzantine_rate > 0)
+        comm_active = (self.compression != "none" or self.staleness > 0
+                       or faults_on)
+        if comm_active:
+            if self.gossip not in ("graph", "graph_ppermute"):
+                raise ValueError(
+                    "compression/staleness/fault injection are built on the "
+                    "graph mixers — set gossip='graph' (or 'graph_ppermute' "
+                    f"for compression alone), got gossip={self.gossip!r}"
+                )
+            if self.topology.startswith("tv_"):
+                raise ValueError(
+                    "compression/staleness/fault injection need a static "
+                    f"topology, got time-varying {self.topology!r}"
+                )
+        if self.gossip == "graph_ppermute" and (self.staleness > 0 or faults_on):
+            raise ValueError(
+                "gossip='graph_ppermute' supports the fresh compressed path "
+                "only — staleness and fault injection need gossip='graph'"
             )
         if not 0 <= self.n_zeroth <= self.n_agents:
             raise ValueError(

@@ -14,11 +14,18 @@ One parallel round is an **estimate -> update -> mix** pipeline:
      doubly-stochastic scheme from ``repro.topology``).
 
 ``HDOConfig.local_steps = H > 1`` runs H estimate+update iterations
-per round (``lax.scan`` over per-substep folded keys) before the single
-mix — the periodic-averaging communication/computation trade-off of
-Omidvar et al. / Sahu et al.; the Mixer still runs exactly once per
-round, so ``consensus_distance`` / spectral diagnostics keep lining up
-per *round*.
+per round (``lax.scan`` over per-substep folded keys AND per-substep
+batch slices — every batches leaf carries a leading H axis) before the
+single mix — the periodic-averaging communication/computation
+trade-off of Omidvar et al. / Sahu et al.; the Mixer still runs
+exactly once per round, so ``consensus_distance`` / spectral
+diagnostics keep lining up per *round*.
+
+Communication-reduced / fault-tolerant gossip (``cfg.compression``,
+``cfg.staleness``, ``cfg.fault_*``) threads a communication state —
+error-feedback residuals, stale-broadcast buffers — through the round
+as ``HDOState.comm`` (``()`` for plain configs, so existing states and
+checkpoints are structurally unchanged).
 
 The population is carried as a stacked pytree with a leading
 ``n_agents`` axis (shardable over a mesh axis -> each agent's replica
@@ -51,6 +58,10 @@ class HDOState:
     # "adamw" — generalizes the old ``momentum`` field
     opt_state: PyTree
     step: jnp.ndarray  # scalar int32
+    # communication state of the Mixer (topology.compress.init_comm):
+    # error-feedback residuals / stale-broadcast buffers, mirroring the
+    # params layout; () for plain configs
+    comm: PyTree = ()
 
 
 def tree_stack_broadcast(params: PyTree, n: int) -> PyTree:
@@ -74,7 +85,12 @@ def init_state(params: PyTree, cfg: HDOConfig) -> HDOState:
     else:
         stacked = tree_stack_broadcast(params, cfg.n_agents)
     lu = localupdate.make_local_update(cfg)
-    return HDOState(params=stacked, opt_state=lu.init(stacked), step=jnp.int32(0))
+    # deferred for the same core<->topology cycle as build_hdo_step
+    from repro.topology import compress as compresslib
+
+    return HDOState(params=stacked, opt_state=lu.init(stacked),
+                    step=jnp.int32(0),
+                    comm=compresslib.init_comm(cfg, stacked))
 
 
 def zo_mask(cfg: HDOConfig) -> jnp.ndarray:
@@ -431,9 +447,11 @@ def build_hdo_step(
     ``cfg.local_steps = H > 1`` the estimate+update pair runs H times
     per round under ``lax.scan`` — each substep folds its own PRNG key
     from the global substep counter ``t*H + h`` (H=1 reduces to the
-    pre-refactor key stream exactly) and reuses the round's batches —
-    and the Mixer still runs exactly once, after the scan.  Scalar
-    metrics are averaged over the H substeps.
+    pre-refactor key stream exactly) and consumes its own batch slice:
+    every ``batches`` leaf must carry a leading H axis (then
+    ``n_agents``), so H local steps see H fresh batches instead of
+    re-descending one — and the Mixer still runs exactly once, after
+    the scan.  Scalar metrics are averaged over the H substeps.
 
     ``donate=True`` returns the step already jitted with the incoming
     state's buffers donated (in-place update of params/opt_state — the
@@ -497,7 +515,8 @@ def build_hdo_step(
         pop.lr0 if pop.homogeneous else cfg.lr,
         cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine,
     )
-    mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes)
+    mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes,
+                       param_dim=param_dim)
     mixer_metrics = {
         k: jnp.float32(v) for k, v in mixer.diagnostics().items()
     }
@@ -551,12 +570,13 @@ def build_hdo_step(
         else:
             nu_vec = sigma_tab
 
-        def substep(params, opt_state, ctr):
+        def substep(params, opt_state, ctr, b):
             """One estimate+update iteration at substep counter ``ctr``
-            (H=1: ctr == t, the pre-refactor key stream)."""
+            on batch slice ``b`` (H=1: ctr == t and b == batches, the
+            pre-refactor key stream and data)."""
             skey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), ctr)
             agent_keys = jax.random.split(skey, n)
-            losses, g = estimate(params, batches, agent_keys, nu, nu_vec)
+            losses, g = estimate(params, b, agent_keys, nu, nu_vec)
             new_params, new_opt = local_update.apply(
                 params, g, opt_state, lr, lr_vec
             )
@@ -583,24 +603,37 @@ def build_hdo_step(
 
         # ---- local update phase: H estimate+update substeps ----------
         if H == 1:
-            new_params, new_opt, mets = substep(state.params, state.opt_state, t)
+            new_params, new_opt, mets = substep(
+                state.params, state.opt_state, t, batches)
         else:
-            def body(carry, h):
+            for leaf in jax.tree.leaves(batches):
+                if leaf.shape[0] != H:
+                    raise ValueError(
+                        f"local_steps={H} needs fresh per-substep batches: "
+                        f"every batches leaf must have leading axis H="
+                        f"{H} (then n_agents), got leaf shape {leaf.shape}"
+                    )
+
+            def body(carry, xs):
+                h, b = xs
                 p, o = carry
-                np_, no_, m_ = substep(p, o, t * H + h)
+                np_, no_, m_ = substep(p, o, t * H + h, b)
                 return (np_, no_), m_
 
             (new_params, new_opt), mets = jax.lax.scan(
-                body, (state.params, state.opt_state), jnp.arange(H)
+                body, (state.params, state.opt_state),
+                (jnp.arange(H), batches)
             )
             mets = {k: v.mean(axis=0) for k, v in mets.items()}
 
         # ---- mix (the Mixer interaction step — once per round) -------
         gkey = jax.random.fold_in(key, 7)
-        new_params = mixer(new_params, key=gkey, step=t)
+        new_params, new_comm = mixer.mix(
+            new_params, key=gkey, step=t, comm=state.comm)
 
         metrics = {**mets, "lr": lr, **mixer_metrics}
-        return HDOState(params=new_params, opt_state=new_opt, step=t + 1), metrics
+        return HDOState(params=new_params, opt_state=new_opt, step=t + 1,
+                        comm=new_comm), metrics
 
     if donate:
         return jax.jit(step, donate_argnums=(0,))

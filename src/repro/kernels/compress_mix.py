@@ -1,0 +1,126 @@
+"""Fused compress -> decompress -> weighted k-neighbor combine kernel.
+
+One gossip round of the communication-reduced graph mixer, for one
+agent with k neighbors and error-feedback send bases u (= x + e):
+
+    m_j  = C(u_j)                      (compress + decompress)
+    out  = x + sum_s w[s] * (m_s - m_self)
+    e'   = u_self - m_self             (the new error-feedback residual)
+
+streamed in a single O(d) pass with f32 accumulation.  The difference
+form preserves the population mean exactly for ANY compressor (the
+doubly-stochastic row weights cancel telescopically), and the residual
+write-back rides the same sweep, so compression costs no extra HBM
+round-trips over the plain ``gossip_mix`` combine.
+
+The compressor itself is elementwise given a per-payload scalar
+(``quantize`` below): top-k needs the k-th largest |u| as a threshold,
+qsgd the payload's inf-norm as a scale — both are O(d) reductions the
+caller computes once per payload and passes as tiny array operands
+(no recompilation across steps).  qsgd's stochastic rounding draws
+from the counter-based RNG at the tile's global positions, so the
+kernel regenerates the randomness in VMEM exactly like the ZO kernels
+and stays bit-exact against the ``ref.py`` oracle.
+
+Non-block-aligned ``d`` is tail-padded here (pad lanes compress to 0
+and mix to 0), so callers never see the BLOCK constraint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.rng import _uniform
+
+BLOCK = 8192
+
+# salt for the qsgd stochastic-rounding uniform stream — distinct from
+# the Box-Muller salts rng.counter_normal derives from its draw index
+_QSGD_SALT = 97
+
+MODES = ("topk", "qsgd")
+
+
+def quantize(u, thr, seed, idx, *, mode: str, bits: int = 0):
+    """Elementwise compress+decompress of a payload (f32 -> f32).
+
+    Identical inside the Pallas body (per tile) and in the jnp mixers
+    (full width) — the property that keeps kernel and oracle bit-exact.
+
+    ``thr`` is the payload's scalar statistic: for ``topk`` the k-th
+    largest |u| of the FULL vector (kept-set threshold), for ``qsgd``
+    the full vector's inf-norm (clamped > 0).  ``seed`` (uint32 scalar,
+    per payload per round) and ``idx`` (uint32 global positions) drive
+    qsgd's stochastic rounding on the counter stream.
+    """
+    if mode == "topk":
+        return jnp.where(jnp.abs(u) >= thr, u, jnp.float32(0.0))
+    if mode == "qsgd":
+        levels = float((1 << bits) - 1)
+        scaled = jnp.abs(u) / thr * jnp.float32(levels)  # in [0, levels]
+        lo = jnp.floor(scaled)
+        p = scaled - lo
+        b = (_uniform(seed, idx, jnp.uint32(_QSGD_SALT)) < p).astype(jnp.float32)
+        return jnp.sign(u) * thr * (lo + b) * jnp.float32(1.0 / levels)
+    raise ValueError(f"unknown compression mode {mode!r} (one of {MODES})")
+
+
+def _body(x_ref, u_ref, nbrs_ref, w_ref, thr_ref, seed_ref, o_ref, e_ref,
+          *, k: int, mode: str, bits: int, block: int):
+    pid = pl.program_id(0)
+    idx = (pid * block + jax.lax.iota(jnp.int32, block)).astype(jnp.uint32)
+    u = u_ref[...].astype(jnp.float32)
+    m_self = quantize(u, thr_ref[0], seed_ref[0], idx, mode=mode, bits=bits)
+    acc = x_ref[...].astype(jnp.float32)
+    for s in range(k):
+        m_s = quantize(nbrs_ref[s, :].astype(jnp.float32), thr_ref[s + 1],
+                       seed_ref[s + 1], idx, mode=mode, bits=bits)
+        acc = acc + w_ref[s] * (m_s - m_self)
+    o_ref[...] = acc.astype(o_ref.dtype)
+    e_ref[...] = (u - m_self).astype(e_ref.dtype)
+
+
+def compress_mix(x, u, nbrs, w, thr, seeds, *, mode: str, bits: int = 0,
+                 interpret: bool = False):
+    """x: (d,) params row; u: (d,) f32 send basis (x + residual);
+    nbrs: (k, d) f32 neighbor send bases; w: (k,) f32 edge weights;
+    thr: (k+1,) f32 payload statistics [self, nbr_0..]; seeds: (k+1,)
+    uint32 payload seeds -> (out (d,) x.dtype, residual (d,) f32)."""
+    assert x.ndim == 1 and u.shape == x.shape, (x.shape, u.shape)
+    assert nbrs.ndim == 2 and nbrs.shape[1] == x.shape[0], (x.shape, nbrs.shape)
+    d = x.shape[0]
+    k = nbrs.shape[0]
+    w = jnp.asarray(w, jnp.float32).reshape(k)
+    thr = jnp.asarray(thr, jnp.float32).reshape(k + 1)
+    seeds = jnp.asarray(seeds, jnp.uint32).reshape(k + 1)
+    pad = (-d) % BLOCK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        u = jnp.concatenate([u, jnp.zeros((pad,), u.dtype)])
+        nbrs = jnp.concatenate([nbrs, jnp.zeros((k, pad), nbrs.dtype)], axis=1)
+    dp = d + pad
+    out, resid = pl.pallas_call(
+        functools.partial(_body, k=k, mode=mode, bits=bits, block=BLOCK),
+        grid=(dp // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((k, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k + 1,), lambda i: (0,)),
+            pl.BlockSpec((k + 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), x.dtype),
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, u.astype(jnp.float32), nbrs.astype(jnp.float32), w, thr, seeds)
+    return out[:d], resid[:d]

@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compress_mix as _cmix
 from repro.kernels import gossip_avg as _gossip
 from repro.kernels import gossip_mix as _gmix
 from repro.kernels import opt_apply as _opt
@@ -108,6 +109,19 @@ def gossip_mix(x, nbrs, w_self, w, interpret: bool | None = None):
     with its k neighbors (one fused O(d) pass)."""
     interpret = _interpret_default() if interpret is None else interpret
     return _gmix.gossip_mix(x, nbrs, w_self, w, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("mode", "bits", "interpret"))
+def compress_mix(x, u, nbrs, w, thr, seeds, mode: str, bits: int = 0,
+                 interpret: bool | None = None):
+    """x: (d,), u: (d,) send basis, nbrs: (k, d) neighbor send bases,
+    w: (k,), thr: (k+1,) payload statistics, seeds: (k+1,) uint32 ->
+    (mixed (d,), residual (d,) f32): the fused compress -> decompress ->
+    difference-form combine + error-feedback write-back in one O(d)
+    pass (see kernels/compress_mix.py)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _cmix.compress_mix(x, u, nbrs, w, thr, seeds, mode=mode,
+                              bits=bits, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

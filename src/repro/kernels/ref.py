@@ -142,6 +142,46 @@ def gossip_mix_ref(x, nbrs, w_self, w):
     return acc.astype(x.dtype)
 
 
+def _quantize_ref(u, thr, seed, idx, *, mode: str, bits: int = 0):
+    """Standalone mirror of ``compress_mix.quantize`` (the oracle keeps
+    its own copy of the math so kernel drift cannot hide)."""
+    from repro.kernels.rng import _uniform
+
+    if mode == "topk":
+        return jnp.where(jnp.abs(u) >= thr, u, jnp.float32(0.0))
+    if mode == "qsgd":
+        levels = float((1 << bits) - 1)
+        scaled = jnp.abs(u) / thr * jnp.float32(levels)
+        lo = jnp.floor(scaled)
+        p = scaled - lo
+        b = (_uniform(seed, idx, jnp.uint32(97)) < p).astype(jnp.float32)
+        return jnp.sign(u) * thr * (lo + b) * jnp.float32(1.0 / levels)
+    raise ValueError(f"unknown compression mode {mode!r}")
+
+
+def compress_mix_ref(x, u, nbrs, w, thr, seeds, *, mode: str, bits: int = 0):
+    """Compressed-gossip round oracle (the kernel's exact association):
+
+        m_j = C(u_j); out = x + sum_s w[s] * (m_s - m_self);
+        residual = u_self - m_self
+
+    x: (d,), u: (d,) f32, nbrs: (k, d) f32, w: (k,) f32, thr: (k+1,)
+    f32, seeds: (k+1,) uint32 -> (out (d,) x.dtype, residual (d,) f32).
+    """
+    d = x.shape[0]
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    u = u.astype(jnp.float32)
+    thr = jnp.asarray(thr, jnp.float32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    m_self = _quantize_ref(u, thr[0], seeds[0], idx, mode=mode, bits=bits)
+    acc = x.astype(jnp.float32)
+    for s in range(nbrs.shape[0]):
+        m_s = _quantize_ref(nbrs[s].astype(jnp.float32), thr[s + 1],
+                            seeds[s + 1], idx, mode=mode, bits=bits)
+        acc = acc + jnp.asarray(w[s], jnp.float32) * (m_s - m_self)
+    return acc.astype(x.dtype), u - m_self
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm):
     """Sequential-recurrence oracle (see models.mamba2.ssd_reference).
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro import sharding as shardlib
 from repro.configs import INPUT_SHAPES, get_config, get_mesh_config
 from repro.configs.base import (
+    COMPRESSIONS,
     DISPATCH_MODES,
     GOSSIP_MODES,
     MOMENTUM_DTYPES,
@@ -62,7 +63,10 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
                  fsdp: bool = False, topology: str = "ring",
                  optimizer: str = "sgd", local_steps: int = 1,
                  clip_norm: float = 0.0, param_layout: str = "tree",
-                 sigmas=None, rvs=None, lrs=None, estimators_zo=None):
+                 sigmas=None, rvs=None, lrs=None, estimators_zo=None,
+                 compression: str = "none", compress_k: int = 0,
+                 compress_bits: int = 4, error_feedback: bool = True,
+                 staleness: int = 0):
     """Returns (lowered, mesh, meta) for one combination, or None if skipped."""
     shape = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
@@ -121,6 +125,11 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
             dispatch=dispatch,
             momentum_dtype=momentum_dtype,
             param_layout=param_layout,
+            compression=compression if n_agents > 1 else "none",
+            compress_k=compress_k,
+            compress_bits=compress_bits,
+            error_feedback=error_feedback,
+            staleness=staleness if n_agents > 1 else 0,
         )
         model = build_model(cfg)
         loss_fn = model.loss
@@ -135,6 +144,18 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
 
         state_sds = jax.eval_shape(lambda p: hdolib.init_state(p, hcfg), params_sds)
         batch_sds = specs.train_batch_specs(cfg, shape, n_agents)
+        batch_psp = shardlib.batch_pspecs(batch_sds, mcfg, mesh, population=True)
+        if hcfg.local_steps > 1:
+            # local_steps=H consumes a leading per-substep axis on every
+            # batches leaf (the lax.scan xs contract); the H axis is
+            # unsharded, the per-substep layout shifts right unchanged
+            batch_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (hcfg.local_steps,) + s.shape, s.dtype),
+                batch_sds)
+            batch_psp = jax.tree.map(
+                lambda s: P(None, *s), batch_psp,
+                is_leaf=lambda x: isinstance(x, P))
 
         if hcfg.param_layout == "plane":
             # the plane is one bare (n_agents, dim) buffer — the
@@ -148,12 +169,16 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
                 state_sds.params, mcfg, mesh, population=True)
         # the opt state shards exactly like the params it tracks
         # (momentum tree for sgd, mu/nu/count for adamw)
+        from repro.topology import compress as compresslib
+
         state_psp = hdolib.HDOState(
             params=pspec_params,
             opt_state=localupdate.opt_state_pspecs(hcfg, pspec_params),
             step=P(),
+            # comm streams (EF residuals / bcast buffers) mirror the
+            # params layout, so they shard exactly like the params
+            comm=compresslib.comm_pspecs(hcfg, pspec_params),
         )
-        batch_psp = shardlib.batch_pspecs(batch_sds, mcfg, mesh, population=True)
 
         jitted = jax.jit(
             step,
@@ -214,7 +239,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
             topology: str = "ring",
             optimizer: str = "sgd", local_steps: int = 1,
             clip_norm: float = 0.0, param_layout: str = "tree",
-            sigmas=None, rvs=None, lrs=None, estimators_zo=None) -> Dict[str, Any]:
+            sigmas=None, rvs=None, lrs=None, estimators_zo=None,
+            compression: str = "none", compress_k: int = 0,
+            compress_bits: int = 4, error_feedback: bool = True,
+            staleness: int = 0) -> Dict[str, Any]:
     t0 = time.time()
     built = build_dryrun(arch, shape_name, multi_pod=multi_pod, gossip=gossip,
                          rv=rv, dispatch=dispatch, momentum_dtype=momentum_dtype,
@@ -224,7 +252,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
                          local_steps=local_steps, clip_norm=clip_norm,
                          param_layout=param_layout,
                          sigmas=sigmas, rvs=rvs, lrs=lrs,
-                         estimators_zo=estimators_zo)
+                         estimators_zo=estimators_zo,
+                         compression=compression, compress_k=compress_k,
+                         compress_bits=compress_bits,
+                         error_feedback=error_feedback, staleness=staleness)
     if built is None:
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "skipped": "long_500k requires sub-quadratic attention (DESIGN.md §4)"}
@@ -261,6 +292,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, gossip: str, rv: int
             "dispatch": dispatch, "momentum_dtype": momentum_dtype,
             "optimizer": optimizer, "local_steps": local_steps,
             "param_layout": param_layout,
+            "compression": compression, "staleness": staleness,
             "attn_remat": attn_remat, "window_slice": window_slice,
             "moe_constraint": moe_constraint, "donate": donate, "fsdp": fsdp,
         },
@@ -303,6 +335,17 @@ def main() -> None:
                     choices=list(PARAM_LAYOUTS),
                     help="stacked pytree vs contiguous per-agent plane "
                          "(core/plane.py)")
+    ap.add_argument("--compression", default="none", choices=list(COMPRESSIONS),
+                    help="gossip payload compressor (graph modes only)")
+    ap.add_argument("--compress-k", type=int, default=0,
+                    help="kept coordinates for --compression topk")
+    ap.add_argument("--compress-bits", type=int, default=4,
+                    help="quantization bits for --compression qsgd")
+    ap.add_argument("--error-feedback", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="carry compression residuals across rounds")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="staleness bound tau for buffered gossip payloads")
     ap.add_argument("--attn-remat", action="store_true")
     ap.add_argument("--window-slice", action="store_true")
     ap.add_argument("--moe-constraint", nargs="?", const=True, default=False,
@@ -326,7 +369,12 @@ def main() -> None:
                      sigmas=parse_csv(args.sigmas, float),
                      rvs=parse_csv(args.rvs, int),
                      lrs=parse_csv(args.lrs, float),
-                     estimators_zo=parse_csv(args.estimators_zo, str))
+                     estimators_zo=parse_csv(args.estimators_zo, str),
+                     compression=args.compression,
+                     compress_k=args.compress_k,
+                     compress_bits=args.compress_bits,
+                     error_feedback=args.error_feedback,
+                     staleness=args.staleness)
     line = json.dumps(report)
     print(line)
     if args.out:

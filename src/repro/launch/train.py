@@ -24,10 +24,20 @@ trajectories (``loss_zo_<kind>_mean``).
 
 Local update: ``--optimizer {sgd,adamw}`` picks the LocalUpdate rule,
 ``--local-steps H`` runs H estimate+update iterations per gossip round
-(periodic averaging — communication drops to 1/H per estimator pass),
-``--clip-norm`` clips each agent's gradient by its global norm.
-``--ckpt`` + ``--save-every`` checkpoint the full HDOState (params +
-opt_state + step); ``--resume`` continues a run bit-identically.
+on H fresh batches (periodic averaging — communication drops to 1/H
+per estimator pass), ``--clip-norm`` clips each agent's gradient by
+its global norm.  ``--ckpt`` + ``--save-every`` checkpoint the full
+HDOState (params + opt_state + step + gossip comm state); ``--resume``
+continues a run bit-identically.
+
+Communication-reduced / fault-tolerant gossip (graph modes only):
+``--compression {topk,qsgd}`` (+ ``--compress-k`` / ``--compress-bits``)
+compresses every broadcast payload with error feedback
+(``--no-error-feedback`` disables the residual stream),
+``--staleness tau`` lets agents rebroadcast only every tau+1 rounds
+(staggered), and ``--fault-drop-rate`` / ``--fault-straggler-rate`` /
+``--fault-byzantine-rate`` inject replayable per-round agent faults
+(see ``repro.topology.faults``).
 """
 from __future__ import annotations
 
@@ -43,6 +53,7 @@ import numpy as np
 from repro import checkpoint
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import (
+    COMPRESSIONS,
     GOSSIP_MODES,
     HDOConfig,
     OPTIMIZERS,
@@ -105,6 +116,40 @@ def main() -> None:
     ap.add_argument("--topology-rounds", type=int, default=8,
                     help="cycle length for tv_erdos_renyi (tv_round_robin "
                          "always cycles its n-1 tournament rounds)")
+    # communication-reduced / fault-tolerant gossip (graph modes only;
+    # HDOConfig.__post_init__ validates the combinations)
+    ap.add_argument("--compression", default="none", choices=list(COMPRESSIONS),
+                    help="gossip payload compression: top-k sparsification "
+                         "or qsgd stochastic quantization (difference-form "
+                         "mixing keeps the population mean exact)")
+    ap.add_argument("--compress-k", type=int, default=0,
+                    help="kept coordinates per payload for --compression topk")
+    ap.add_argument("--compress-bits", type=int, default=4,
+                    help="quantization bits per coordinate for "
+                         "--compression qsgd (levels = 2^bits - 1)")
+    ap.add_argument("--error-feedback", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="carry per-agent compression residuals in "
+                         "HDOState.comm and re-send them next round")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="staleness bound tau: agents rebroadcast only every "
+                         "tau+1 rounds (staggered), neighbors mix against "
+                         "buffered payloads at most tau rounds old")
+    ap.add_argument("--fault-drop-rate", type=float, default=0.0,
+                    help="per-round probability an agent is offline "
+                         "(drops out of the mix symmetrically)")
+    ap.add_argument("--fault-straggler-rate", type=float, default=0.0,
+                    help="per-round probability an agent's broadcast fails "
+                         "to land (neighbors keep its last buffered payload)")
+    ap.add_argument("--fault-byzantine-rate", type=float, default=0.0,
+                    help="per-round probability an agent transmits an "
+                         "adversarially corrupted payload")
+    ap.add_argument("--fault-byzantine-scale", type=float, default=10.0,
+                    help="magnitude of the byzantine corruption "
+                         "(payload -> -scale * payload)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the replayable fault schedule "
+                         "(counter-RNG over (seed, round, agent))")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--optimizer", default="sgd", choices=list(OPTIMIZERS),
@@ -166,6 +211,16 @@ def main() -> None:
         clip_norm=args.clip_norm,
         weight_decay=args.weight_decay,
         param_layout=args.param_layout,
+        compression=args.compression,
+        compress_k=args.compress_k,
+        compress_bits=args.compress_bits,
+        error_feedback=args.error_feedback,
+        staleness=args.staleness,
+        fault_drop_rate=args.fault_drop_rate,
+        fault_straggler_rate=args.fault_straggler_rate,
+        fault_byzantine_rate=args.fault_byzantine_rate,
+        fault_byzantine_scale=args.fault_byzantine_scale,
+        fault_seed=args.fault_seed,
         warmup_steps=min(50, args.steps // 5),
         cosine_steps=args.steps,
         seed=args.seed,
@@ -195,6 +250,18 @@ def main() -> None:
             if cfg.family == "audio":
                 out["frames"] = rng.normal(size=(args.agents, args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
             return out
+
+    # one ROUND of data: local_steps=H pulls H fresh per-substep batch
+    # draws and stacks them under a leading H axis (the lax.scan xs
+    # contract of build_hdo_step); H=1 keeps the raw (n, b, ...) draw
+    if args.local_steps > 1:
+        draw_batches, H = next_batches, args.local_steps
+
+        def round_batches():
+            draws = [draw_batches() for _ in range(H)]
+            return jax.tree.map(lambda *xs: np.stack(xs), *draws)
+    else:
+        round_batches = next_batches
 
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -254,14 +321,15 @@ def main() -> None:
         start = int(state.step)
         # fast-forward the (stateful) batch stream past the rounds the
         # checkpointed run already consumed, so the resumed run sees the
-        # same batches an uninterrupted run would at each round
+        # same batches an uninterrupted run would at each round (H>1:
+        # each round_batches() call consumes H per-substep draws)
         for _ in range(start):
-            next_batches()
+            round_batches()
         print(f"# resumed from {args.resume} at round {start}")
 
     t0 = time.time()
     for t in range(start, args.steps):
-        state, metrics = step_fn(state, next_batches())
+        state, metrics = step_fn(state, round_batches())
         if t % args.log_every == 0 or t == args.steps - 1:
             gamma = consensus_distance(state.params)
             m = {k: float(v) for k, v in metrics.items()}

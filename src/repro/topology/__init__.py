@@ -13,8 +13,21 @@ mixing-matrix gossip over static (and time-varying) neighbor graphs:
                    (all legacy gossip modes + the graph modes and their
                    shard_map/ppermute lowerings).
 
-See ``kernels/gossip_mix.py`` for the fused k-neighbor combine kernel.
+plus the communication-reduced, fault-tolerant layer on top:
+
+  * ``compress`` — payload compressors (top-k, qsgd stochastic
+                   quantization) with error feedback, the bytes-on-wire
+                   accounting, and the ``HDOState.comm`` structure;
+  * ``faults``   — replayable drop / straggler / byzantine injection on
+                   the counter-based RNG.
+
+See ``kernels/gossip_mix.py`` for the fused k-neighbor combine kernel
+and ``kernels/compress_mix.py`` for its compressed difference-form
+sibling.
 """
+from repro.topology import compress, faults
+from repro.topology.compress import Compressor, make_compressor
+from repro.topology.faults import FaultSpec, fault_masks
 from repro.topology.graphs import (
     TimeVaryingTopology,
     Topology,
@@ -29,6 +42,8 @@ from repro.topology.graphs import (
 )
 from repro.topology.mixer import (
     AllReduceMixer,
+    CompressedGraphMixer,
+    CompressedGraphPpermuteMixer,
     DenseMatchingMixer,
     GraphMixer,
     GraphPpermuteMixer,
@@ -40,11 +55,16 @@ from repro.topology.mixer import (
     make_mixer,
 )
 from repro.topology.spectral import (
+    compressed_diagnostics,
+    compression_delta,
     diagnostics,
+    effective_slem,
     mixing_eigenvalues,
     predicted_contraction,
+    predicted_contraction_empirical,
     slem,
     spectral_gap,
+    tail_rate,
 )
 
 __all__ = [
@@ -67,10 +87,23 @@ __all__ = [
     "TimeVaryingGraphMixer",
     "RRPpermuteMixer",
     "GraphPpermuteMixer",
+    "CompressedGraphMixer",
+    "CompressedGraphPpermuteMixer",
     "make_mixer",
+    "compress",
+    "faults",
+    "Compressor",
+    "make_compressor",
+    "FaultSpec",
+    "fault_masks",
     "mixing_eigenvalues",
     "slem",
     "spectral_gap",
     "predicted_contraction",
     "diagnostics",
+    "compressed_diagnostics",
+    "compression_delta",
+    "effective_slem",
+    "predicted_contraction_empirical",
+    "tail_rate",
 ]

@@ -1,0 +1,191 @@
+"""Payload compression for the gossip exchange, with error feedback.
+
+The communication side of the communication-reduced mixers: every
+round each agent broadcasts a *compressed* payload m_i = C(u_i) of its
+send basis u_i (= params + error-feedback residual), and the receivers
+mix in difference form
+
+    x_i <- x_i + sum_s w[s] * (m_{nbr(i,s)} - m_i),
+
+which preserves the population mean exactly for ANY compressor (the
+doubly-stochastic weights cancel telescopically over symmetric edges),
+so consensus diagnostics stay honest under lossy payloads.
+
+Two compressors (``HDOConfig.compression``):
+
+  * ``topk`` — transmit only the k largest-magnitude coordinates
+    (biased; error feedback recovers the dropped mass over rounds);
+  * ``qsgd`` — stochastic quantization to 2^bits - 1 levels per
+    coordinate, scaled by the payload's inf-norm (unbiased in
+    expectation: E[C(u)] = u), with the rounding randomness drawn from
+    the counter-based RNG at (seed, step, agent, position) so every
+    round is exactly replayable and the fused kernel regenerates it
+    bit-exactly in VMEM.
+
+With ``error_feedback`` each agent carries a residual stream e_i in
+``HDOState.comm`` (plane-shaped under ``param_layout="plane"``: the
+streams mirror the params tree, so the plane's single (n_agents, dim)
+leaf stays one buffer): e_i' = u_i - m_i, giving the telescoping
+identity  m_i + e_i' == x_i + e_i  (sent + residual == raw) that the
+contract tests pin.
+
+This module owns the payload math and the ``HDOState.comm`` structure
+(``init_comm`` / ``comm_pspecs``); the round logic lives in
+``topology.mixer`` (CompressedGraphMixer) and the fused O(d) pass in
+``kernels/compress_mix.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compress_mix import quantize
+
+PyTree = Any
+
+__all__ = [
+    "Compressor",
+    "make_compressor",
+    "payload_seeds",
+    "comm_stream_flags",
+    "init_comm",
+    "comm_pspecs",
+]
+
+# qsgd scale floor: an all-zero payload quantizes to zero, not NaN
+_SCALE_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """One payload compressor: mode + its static knob.
+
+    ``thresholds`` computes the per-payload scalar statistic (the O(d)
+    reduction the fused kernel takes as an operand); ``apply`` is the
+    dense compress+decompress (the jnp mixers and oracles);
+    ``bytes_on_wire`` / ``delta`` are the accounting and the spectral
+    model's energy-fraction parameter.
+    """
+
+    mode: str  # "topk" | "qsgd"
+    k: int = 0
+    bits: int = 0
+
+    def thresholds(self, u: jnp.ndarray) -> jnp.ndarray:
+        """u: (n, d) f32 payload rows -> (n,) scalar statistic per row:
+        topk: the k-th largest |u| (kept-set threshold, ties keep >= k);
+        qsgd: the row's inf-norm, clamped > 0."""
+        if self.mode == "topk":
+            kk = min(self.k, u.shape[-1])
+            return jax.lax.top_k(jnp.abs(u), kk)[0][..., -1]
+        return jnp.maximum(jnp.max(jnp.abs(u), axis=-1),
+                           jnp.float32(_SCALE_EPS))
+
+    def apply(self, u: jnp.ndarray, thr: jnp.ndarray,
+              seeds: jnp.ndarray) -> jnp.ndarray:
+        """Dense compress+decompress: u (n, d) f32, thr (n,), seeds (n,)
+        uint32 -> (n, d) f32 decompressed payloads (the receiver's
+        view).  Elementwise math shared with the fused kernel."""
+        d = u.shape[-1]
+        idx = jnp.arange(d, dtype=jnp.uint32)
+        return quantize(u, thr[..., None], seeds[..., None].astype(jnp.uint32),
+                        idx[None, :], mode=self.mode, bits=self.bits)
+
+    def bytes_on_wire(self, d: int) -> int:
+        """Bytes one agent broadcasts per payload vector of dim d
+        (raw f32 baseline: 4 * d)."""
+        if self.mode == "topk":
+            # (f32 value + u32 index) per kept coordinate
+            return 8 * min(self.k, d)
+        # sign + bits per coordinate, plus the f32 scale
+        return math.ceil(d * (self.bits + 1) / 8) + 4
+
+    def delta(self, d: int) -> float:
+        """Energy-fraction parameter of the spectral model in (0, 1]:
+        the per-round fraction of deviation mass the payload carries
+        (topk: k/d worst case; qsgd: 1/(1 + omega) with the standard
+        variance bound omega = min(d/s^2, sqrt(d)/s))."""
+        if self.mode == "topk":
+            return min(self.k, d) / float(d)
+        s = float((1 << self.bits) - 1)
+        omega = min(d / (s * s), math.sqrt(d) / s)
+        return 1.0 / (1.0 + omega)
+
+
+def make_compressor(cfg) -> Optional[Compressor]:
+    """The configured Compressor, or None for ``compression="none"``."""
+    if cfg.compression == "none":
+        return None
+    if cfg.compression == "topk":
+        return Compressor(mode="topk", k=cfg.compress_k)
+    return Compressor(mode="qsgd", bits=cfg.compress_bits)
+
+
+# python-int mix constants (distinct from kernels.rng's), folded as
+# literals so the payload seed stream never collides with the ZO draws
+_K_STEP = 0x9E3779B9
+_K_AGENT = 0x85EBCA6B
+_K_BASE = 2654435761
+
+
+def payload_seeds(seed, step, n: int) -> jnp.ndarray:
+    """(n,) uint32 payload seeds for one round — a pure function of
+    (config seed, step, agent), so compression randomness is replayable
+    and identical across the gather and ppermute lowerings."""
+    agents = jnp.arange(n, dtype=jnp.uint32)
+    return (
+        jnp.uint32(seed % (1 << 32)) * jnp.uint32(_K_BASE)
+        + jnp.asarray(step, jnp.uint32) * jnp.uint32(_K_STEP)
+        + agents * jnp.uint32(_K_AGENT)
+    )
+
+
+def comm_stream_flags(cfg) -> Tuple[bool, bool]:
+    """(has_residual, has_bcast) — the single source for which streams
+    ``HDOState.comm`` carries under this config (mirrored by the
+    compressed mixers; checkpoint structure follows from it)."""
+    if cfg.n_agents == 1 or cfg.gossip not in ("graph", "graph_ppermute"):
+        return False, False
+    has_residual = cfg.compression != "none" and cfg.error_feedback
+    has_bcast = (cfg.gossip == "graph"
+                 and (cfg.staleness > 0 or cfg.fault_straggler_rate > 0))
+    return has_residual, has_bcast
+
+
+def init_comm(cfg, stacked_params: PyTree) -> PyTree:
+    """The initial ``HDOState.comm`` for a stacked population:
+
+      * ``residual`` — per-agent error-feedback residuals, zero at start
+        (nothing has been dropped yet), f32, mirroring the params tree;
+      * ``bcast``    — last-broadcast (decompressed) payloads for stale
+        mixing, initialized to the start params (every agent "broadcast"
+        its init point at round 0).
+
+    Returns ``()`` when neither stream is active, so the default state
+    structure — and every existing checkpoint — is unchanged.
+    """
+    has_residual, has_bcast = comm_stream_flags(cfg)
+    comm = {}
+    if has_residual:
+        comm["residual"] = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), stacked_params)
+    if has_bcast:
+        comm["bcast"] = jax.tree.map(
+            lambda x: jnp.asarray(x, jnp.float32), stacked_params)
+    return comm if comm else ()
+
+
+def comm_pspecs(cfg, params_pspecs):
+    """PartitionSpecs for ``HDOState.comm`` — every stream shards
+    exactly like the params it mirrors (see launch/dryrun.py)."""
+    has_residual, has_bcast = comm_stream_flags(cfg)
+    comm = {}
+    if has_residual:
+        comm["residual"] = params_pspecs
+    if has_bcast:
+        comm["bcast"] = params_pspecs
+    return comm if comm else ()

@@ -1,0 +1,99 @@
+"""Replayable fault injection for the gossip exchange.
+
+Three fault processes, each an independent Bernoulli draw per
+(round, agent) on the counter-based RNG (``kernels.rng._uniform``) —
+NOT on the JAX key stream — so a fault schedule is a pure function of
+``(fault_seed, step, agent)``: the same config replays the exact same
+drops/stragglers/corruptions through the jitted step, across restarts,
+and inside ``lax.scan``.  The contract the fault-injection suite pins.
+
+  * **drop** — the agent is offline this round: it neither broadcasts
+    nor mixes.  Because the mixing weights are symmetric, zeroing the
+    agent's row AND its appearances in other rows removes its edges
+    symmetrically, so the population mean is still preserved exactly.
+  * **straggler** — the agent is alive but its broadcast doesn't land:
+    neighbors keep mixing against its last buffered payload (the
+    ``bcast`` stream), i.e. a randomly-stale link.
+  * **byzantine** — the agent broadcasts an adversarial payload
+    (``-fault_byzantine_scale`` times the true one) that neighbors
+    consume; the agent's own state uses its true payload.
+
+All three compose with compression and staleness in
+``topology.mixer.CompressedGraphMixer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.rng import _uniform
+
+__all__ = ["FaultSpec", "fault_masks"]
+
+# per-process salts for the Bernoulli streams (distinct from the ZO
+# Box-Muller salts and compress_mix's qsgd salt 97)
+_SALT_DROP = 11
+_SALT_STRAGGLER = 13
+_SALT_BYZANTINE = 17
+
+# step is folded into the uint32 seed lane (idx carries the agent)
+_K_STEP = 0x27D4EB2F
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Static fault configuration (rates in [0, 1), all independent)."""
+
+    drop_rate: float = 0.0
+    straggler_rate: float = 0.0
+    byzantine_rate: float = 0.0
+    byzantine_scale: float = 10.0
+    seed: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return (self.drop_rate > 0 or self.straggler_rate > 0
+                or self.byzantine_rate > 0)
+
+    @classmethod
+    def from_config(cls, cfg) -> Optional["FaultSpec"]:
+        """The configured FaultSpec, or None when all rates are zero."""
+        spec = cls(
+            drop_rate=cfg.fault_drop_rate,
+            straggler_rate=cfg.fault_straggler_rate,
+            byzantine_rate=cfg.fault_byzantine_rate,
+            byzantine_scale=cfg.fault_byzantine_scale,
+            seed=cfg.fault_seed,
+        )
+        return spec if spec.enabled else None
+
+    def corrupt(self, payload: jnp.ndarray) -> jnp.ndarray:
+        """The byzantine transmission: a scaled sign-flip of the true
+        payload — adversarial (points away from consensus) yet
+        deterministic, so runs replay bit-exactly."""
+        return jnp.float32(-self.byzantine_scale) * payload
+
+
+def _bernoulli(spec: FaultSpec, step, n: int, salt: int, rate: float):
+    """(n,) bool fault mask for one round; rate == 0.0 can never fire
+    (the counter uniform lies in (0, 1])."""
+    seed = (jnp.uint32(spec.seed % (1 << 32))
+            + jnp.asarray(step, jnp.uint32) * jnp.uint32(_K_STEP))
+    agents = jnp.arange(n, dtype=jnp.uint32)
+    return _uniform(seed, agents, jnp.uint32(salt)) < jnp.float32(rate)
+
+
+def fault_masks(spec: FaultSpec, step, n: int) -> Dict[str, jnp.ndarray]:
+    """The round's fault schedule: dict of (n,) bool masks
+    ``{"alive", "straggler", "byzantine"}`` — a pure function of
+    (spec.seed, step, agent), identical on every replay."""
+    drop = _bernoulli(spec, step, n, _SALT_DROP, spec.drop_rate)
+    return {
+        "alive": ~drop,
+        "straggler": _bernoulli(spec, step, n, _SALT_STRAGGLER,
+                                spec.straggler_rate),
+        "byzantine": _bernoulli(spec, step, n, _SALT_BYZANTINE,
+                                spec.byzantine_rate),
+    }

@@ -13,6 +13,17 @@ shard_map/ppermute lowering ``GraphPpermuteMixer``) also expose
 spectral ``diagnostics()`` — lambda_2, spectral gap, and the predicted
 per-round Gamma contraction — which the step surfaces as training
 metrics next to ``consensus_distance``.
+
+Communication-reduced, fault-tolerant rounds live in the *stateful*
+lift of the protocol: ``init_comm(params)`` builds the communication
+state carried in ``HDOState.comm`` (error-feedback residuals,
+stale-broadcast buffers) and ``mix(params, key=..., step=..., comm=...)``
+threads it through the round.  Stateless mixers inherit defaults that
+carry the empty pytree, so ``compression="none"`` runs are structurally
+(and bit-) identical to the plain mixers; ``CompressedGraphMixer`` /
+``CompressedGraphPpermuteMixer`` implement compression (topology.
+compress), error feedback, staleness-bounded broadcasts, and fault
+injection (topology.faults) on top of the same graph machinery.
 """
 from __future__ import annotations
 
@@ -31,6 +42,9 @@ from repro.core.gossip import (
     sample_matching,
 )
 from repro.kernels import ops
+from repro.kernels.compress_mix import quantize
+from repro.topology import compress as compresslib
+from repro.topology import faults as faultlib
 from repro.topology import spectral
 from repro.topology.graphs import TimeVaryingTopology, Topology, make_topology
 
@@ -47,6 +61,8 @@ __all__ = [
     "TimeVaryingGraphMixer",
     "RRPpermuteMixer",
     "GraphPpermuteMixer",
+    "CompressedGraphMixer",
+    "CompressedGraphPpermuteMixer",
     "make_mixer",
 ]
 
@@ -61,6 +77,20 @@ class Mixer:
 
     def __call__(self, params: PyTree, *, key, step) -> PyTree:
         raise NotImplementedError
+
+    def init_comm(self, params: PyTree) -> PyTree:
+        """Communication state carried across rounds in ``HDOState.comm``
+        (error-feedback residuals, stale-broadcast buffers).  Stateless
+        mixers carry none — the empty pytree keeps the state (and every
+        existing checkpoint) structurally unchanged."""
+        return ()
+
+    def mix(self, params: PyTree, *, key, step,
+            comm: PyTree) -> Tuple[PyTree, PyTree]:
+        """Stateful entry point used by ``build_hdo_step``: mix and
+        thread the comm state.  Default: the stateless ``__call__``
+        with the comm passed through untouched."""
+        return self(params, key=key, step=step), comm
 
     def diagnostics(self) -> Dict[str, float]:
         return {}
@@ -163,6 +193,170 @@ class GraphMixer(Mixer):
 
     def diagnostics(self):
         return spectral.diagnostics(self.topo)
+
+
+class CompressedGraphMixer(GraphMixer):
+    """Communication-reduced, fault-tolerant lift of ``GraphMixer``.
+
+    Each round every agent broadcasts a compressed payload
+    m_i = C(x_i + e_i) (e_i the error-feedback residual) and mixes in
+    difference form  x_i <- x_i + sum_s w[i,s] * (m_s - m_i), which
+    preserves the population mean for ANY compressor (symmetric
+    doubly-stochastic weights cancel telescopically).  Three optional
+    layers compose on top:
+
+      * error feedback — e_i' = u_i - m_i carried in ``comm["residual"]``;
+      * staleness bound tau — agents refresh their broadcast buffer
+        (``comm["bcast"]``) on the staggered schedule
+        (step + i) % (tau+1) == 0, neighbors mix against the buffer, so
+        every consumed payload is at most tau rounds old;
+      * faults (topology.faults) — dropped agents leave the round
+        symmetrically (mean still preserved), stragglers skip their
+        buffer refresh, byzantine agents transmit a corrupted payload
+        while keeping their own state honest.
+
+    The fresh path (no faults, no staleness) routes through the fused
+    ``compress_mix`` Pallas kernel under ``use_kernel``; the buffered /
+    fault path is the jnp lowering of the same math.  Constructed only
+    when communication features are on — plain configs keep the exact
+    ``GraphMixer`` object, so ``compression="none"`` stays bit-identical.
+    """
+
+    def __init__(self, topo: Topology, *, compressor=None,
+                 error_feedback: bool = True, staleness: int = 0,
+                 faults: Optional[faultlib.FaultSpec] = None, seed: int = 0,
+                 use_kernel: bool = False, param_dim: Optional[int] = None):
+        super().__init__(topo, use_kernel=use_kernel)
+        self.compressor = compressor
+        self.error_feedback = bool(error_feedback and compressor is not None)
+        self.staleness = int(staleness)
+        self.faults = faults
+        self.seed = seed
+        self.param_dim = param_dim
+        self._buffered = (self.staleness > 0
+                          or (faults is not None and faults.straggler_rate > 0))
+        self._general = self._buffered or faults is not None
+
+    def __call__(self, params, *, key, step):
+        raise TypeError(
+            "CompressedGraphMixer is stateful; use "
+            ".mix(params, key=..., step=..., comm=...)")
+
+    def init_comm(self, params):
+        comm = {}
+        if self.error_feedback:
+            comm["residual"] = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        if self._buffered:
+            comm["bcast"] = jax.tree.map(
+                lambda x: jnp.asarray(x, jnp.float32), params)
+        return comm if comm else ()
+
+    def mix(self, params, *, key, step, comm):
+        comm = comm if isinstance(comm, dict) else {}
+        resid = comm.get("residual")
+        bcast = comm.get("bcast")
+        p_leaves, tdef = jax.tree.flatten(params)
+        nleaf = len(p_leaves)
+        r_leaves = jax.tree.leaves(resid) if resid is not None else [None] * nleaf
+        b_leaves = jax.tree.leaves(bcast) if bcast is not None else [None] * nleaf
+        masks = (faultlib.fault_masks(self.faults, step, self.topo.n)
+                 if self.faults is not None else None)
+        outs = [self._mix_leaf_compressed(x, e, b, step, masks)
+                for x, e, b in zip(p_leaves, r_leaves, b_leaves)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_comm = {}
+        if resid is not None:
+            new_comm["residual"] = jax.tree.unflatten(
+                jax.tree.structure(resid), [o[1] for o in outs])
+        if bcast is not None:
+            new_comm["bcast"] = jax.tree.unflatten(
+                jax.tree.structure(bcast), [o[2] for o in outs])
+        return new_params, (new_comm if new_comm else ())
+
+    def _mix_leaf_compressed(self, x, e, b, step, masks):
+        n, k = self._nbr.shape
+        shape = x.shape
+        x2 = x.reshape(n, -1)
+        d = x2.shape[1]
+        xf = x2.astype(jnp.float32)
+        u = xf + e.reshape(n, d) if e is not None else xf
+        comp = self.compressor
+        if comp is not None:
+            thr = comp.thresholds(u)
+            seeds = compresslib.payload_seeds(self.seed, step, n)
+
+        if not self._general:
+            # fresh path: every payload is this round's, no faults —
+            # the fused-kernel shape (comp is always set here: plain
+            # configs never construct this mixer)
+            if self.use_kernel:
+                gathered = jnp.take(u, self._nbr.reshape(-1), axis=0
+                                    ).reshape(n, k, d)
+                thr_rows = jnp.concatenate(
+                    [thr[:, None], thr[self._nbr]], axis=1)
+                seed_rows = jnp.concatenate(
+                    [seeds[:, None], seeds[self._nbr]], axis=1)
+                mode, bits = comp.mode, comp.bits
+
+                def one(xi, ui, gi, wi, ti, si):
+                    return ops.compress_mix(xi, ui, gi, wi, ti, si, mode, bits)
+
+                out, new_e = jax.vmap(one)(x2, u, gathered, self._w,
+                                           thr_rows, seed_rows)
+            else:
+                m = comp.apply(u, thr, seeds)
+                m_nbr = jnp.take(m, self._nbr.reshape(-1), axis=0
+                                 ).reshape(n, k, d)
+                acc = (self._w[:, :, None]
+                       * (m_nbr - m[:, None, :])).sum(axis=1)
+                out = (xf + acc).astype(x.dtype)
+                new_e = u - m
+            new_e = new_e.reshape(shape) if self.error_feedback else None
+            return out.reshape(shape), new_e, None
+
+        # general path: staleness-buffered broadcasts and/or faults
+        m = comp.apply(u, thr, seeds) if comp is not None else u
+        if masks is not None:
+            alive, straggler, byz = (masks["alive"], masks["straggler"],
+                                     masks["byzantine"])
+        else:
+            alive = jnp.ones((n,), bool)
+            straggler = byz = jnp.zeros((n,), bool)
+        if self.staleness > 0:
+            sched = ((jnp.asarray(step, jnp.int32)
+                      + jnp.arange(n, dtype=jnp.int32))
+                     % (self.staleness + 1)) == 0
+        else:
+            sched = jnp.ones((n,), bool)
+        refresh = sched & alive & ~straggler
+        b_prev = b.reshape(n, d) if b is not None else m
+        b_new = jnp.where(refresh[:, None], m, b_prev)
+        if self.faults is not None:
+            payload = jnp.where((byz & alive)[:, None],
+                                self.faults.corrupt(b_new), b_new)
+        else:
+            payload = b_new
+        gathered = jnp.take(payload, self._nbr.reshape(-1), axis=0
+                            ).reshape(n, k, d)
+        # dropped agents vanish from BOTH sides of each edge, so the
+        # deleted terms cancel pairwise and the mean is still exact
+        wa = self._w * alive[self._nbr].astype(jnp.float32)  # (n, k)
+        acc = (wa[:, :, None] * (gathered - b_new[:, None, :])).sum(axis=1)
+        out = (xf + alive[:, None].astype(jnp.float32) * acc).astype(x.dtype)
+        if self.error_feedback:
+            new_e = jnp.where(refresh[:, None], u - m, e.reshape(n, d))
+            new_e = new_e.reshape(shape)
+        else:
+            new_e = None
+        new_b = b_new.reshape(shape) if b is not None else None
+        return out.reshape(shape), new_e, new_b
+
+    def diagnostics(self):
+        delta = (self.compressor.delta(self.param_dim)
+                 if self.compressor is not None and self.param_dim else 1.0)
+        return spectral.compressed_diagnostics(
+            self.topo, delta=delta, staleness=self.staleness)
 
 
 class TimeVaryingGraphMixer(Mixer):
@@ -339,13 +533,137 @@ class GraphPpermuteMixer(Mixer):
         return spectral.diagnostics(self.topo)
 
 
+class CompressedGraphPpermuteMixer(GraphPpermuteMixer):
+    """shard_map/ppermute lowering of the *fresh* compressed round: each
+    neighbor slot ppermutes the (send basis, threshold, payload seed)
+    triple over ICI, and every shard runs the fused ``compress_mix``
+    kernel (or its jnp lowering) locally.  Payload seeds and thresholds
+    match ``CompressedGraphMixer`` exactly, so the two lowerings agree
+    bit-for-bit on the kernel path.  Staleness and fault injection are
+    config-rejected for this mixer (buffered rounds need the gather
+    path); error feedback is supported."""
+
+    def __init__(self, topo: Topology, mesh, population_axes, *,
+                 compressor, error_feedback: bool = True, seed: int = 0,
+                 use_kernel: bool = False, param_dim: Optional[int] = None):
+        super().__init__(topo, mesh, population_axes, use_kernel=use_kernel)
+        if compressor is None:
+            raise ValueError("CompressedGraphPpermuteMixer needs a compressor")
+        self.compressor = compressor
+        self.error_feedback = bool(error_feedback)
+        self.seed = seed
+        self.param_dim = param_dim
+
+    def __call__(self, params, *, key, step):
+        raise TypeError(
+            "CompressedGraphPpermuteMixer is stateful; use "
+            ".mix(params, key=..., step=..., comm=...)")
+
+    def init_comm(self, params):
+        if not self.error_feedback:
+            return ()
+        return {"residual": jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)}
+
+    def mix(self, params, *, key, step, comm):
+        topo = self.topo
+        comp = self.compressor
+        n, k = topo.n, topo.k
+        ef = self.error_feedback
+        axis = self.pop_axes if len(self.pop_axes) > 1 else self.pop_axes[0]
+        weights = jnp.asarray(topo.weights)
+        seeds_all = compresslib.payload_seeds(self.seed, step, n)  # (n,)
+        from jax.sharding import PartitionSpec as P
+
+        def gossip_shard(p_l, e_l, seeds_l):
+            # every leaf is locally (1, ...); seeds_l is the shard's (1,)
+            idx = shard_agent_index(self.mesh, self.pop_axes)
+            w_i = weights[idx]  # (k,)
+            p_leaves, tdef = jax.tree.flatten(p_l)
+            e_leaves = (jax.tree.leaves(e_l) if ef
+                        else [None] * len(p_leaves))
+            us, thrs = [], []
+            for x, e in zip(p_leaves, e_leaves):
+                u = x.astype(jnp.float32).reshape(-1)
+                if e is not None:
+                    u = u + e.reshape(-1)
+                us.append(u)
+                thrs.append(comp.thresholds(u[None, :]))  # (1,)
+            recvs = []
+            for s in range(k):
+                perm = [(int(topo.neighbors[j, s]), j) for j in range(n)]
+
+                def pp(z, _perm=perm):
+                    return jax.lax.ppermute(z, axis_name=axis, perm=_perm)
+
+                recvs.append(([pp(u) for u in us],
+                              [pp(t) for t in thrs],
+                              pp(seeds_l)))
+            outs_p, outs_e = [], []
+            for li, (x, u) in enumerate(zip(p_leaves, us)):
+                nbrs = jnp.stack([recvs[s][0][li] for s in range(k)])
+                thr_vec = jnp.concatenate(
+                    [thrs[li]] + [recvs[s][1][li] for s in range(k)])
+                seed_vec = jnp.concatenate(
+                    [seeds_l] + [recvs[s][2] for s in range(k)])
+                flat = x.reshape(-1)
+                if self.use_kernel:
+                    out, new_e = ops.compress_mix(
+                        flat, u, nbrs, w_i, thr_vec, seed_vec,
+                        comp.mode, comp.bits)
+                else:
+                    d = u.shape[0]
+                    pos = jnp.arange(d, dtype=jnp.uint32)
+                    m_self = quantize(u, thr_vec[0], seed_vec[0], pos,
+                                      mode=comp.mode, bits=comp.bits)
+                    acc = flat.astype(jnp.float32)
+                    for s in range(k):
+                        m_s = quantize(nbrs[s], thr_vec[s + 1],
+                                       seed_vec[s + 1], pos,
+                                       mode=comp.mode, bits=comp.bits)
+                        acc = acc + w_i[s] * (m_s - m_self)
+                    out = acc.astype(x.dtype)
+                    new_e = u - m_self
+                outs_p.append(out.reshape(x.shape))
+                outs_e.append(new_e.reshape(x.shape))
+            new_p = jax.tree.unflatten(tdef, outs_p)
+            if ef:
+                return new_p, jax.tree.unflatten(
+                    jax.tree.structure(e_l), outs_e)
+            return new_p, ()
+
+        pspec = P(axis)
+        e_arg = comm["residual"] if ef else ()
+        new_params, new_e = compat.shard_map(
+            gossip_shard,
+            mesh=self.mesh,
+            in_specs=(pspec, pspec, pspec),
+            out_specs=(pspec, pspec),
+            axis_names=set(self.pop_axes),
+            check_vma=False,
+        )(params, e_arg, seeds_all)
+        return new_params, ({"residual": new_e} if ef else ())
+
+    def diagnostics(self):
+        delta = (self.compressor.delta(self.param_dim)
+                 if self.param_dim else 1.0)
+        return spectral.compressed_diagnostics(self.topo, delta=delta)
+
+
 def make_mixer(cfg: HDOConfig, *, mesh=None, population_axes: Tuple[str, ...] = (),
-               use_kernel: Optional[bool] = None) -> Mixer:
+               use_kernel: Optional[bool] = None,
+               param_dim: Optional[int] = None) -> Mixer:
     """Builds the Mixer for ``cfg.gossip`` (+ topology knobs).
 
     ``use_kernel`` routes the graph mixers' combine through the fused
-    ``gossip_mix`` Pallas kernel; default off the kernel is used on TPU
-    only (the jnp path is the interpret-friendly oracle elsewhere).
+    ``gossip_mix`` / ``compress_mix`` Pallas kernels; default off the
+    kernel is used on TPU only (the jnp path is the interpret-friendly
+    oracle elsewhere).  ``param_dim`` (total flat parameter count, when
+    the caller knows it) feeds the compression-aware spectral
+    diagnostics.  When compression / staleness / faults are enabled the
+    graph modes route to their stateful Compressed* lifts; otherwise
+    the exact plain mixer objects are returned, keeping
+    ``compression="none"`` bit-identical to the uncompressed path.
     """
     n = cfg.n_agents
     if cfg.gossip == "none" or n == 1:
@@ -365,15 +683,33 @@ def make_mixer(cfg: HDOConfig, *, mesh=None, population_axes: Tuple[str, ...] = 
             cfg.topology, n, p=cfg.topology_p, seed=cfg.topology_seed,
             rounds=cfg.topology_rounds,
         )
+        compressor = compresslib.make_compressor(cfg)
+        fault_spec = faultlib.FaultSpec.from_config(cfg)
+        comm_active = (compressor is not None or cfg.staleness > 0
+                       or fault_spec is not None)
         if cfg.gossip == "graph_ppermute":
             if isinstance(topo, TimeVaryingTopology):
                 raise ValueError(
                     "graph_ppermute supports static topologies only; "
                     f"got time-varying {topo.name!r}"
                 )
+            if comm_active:
+                return CompressedGraphPpermuteMixer(
+                    topo, mesh, population_axes, compressor=compressor,
+                    error_feedback=cfg.error_feedback, seed=cfg.seed,
+                    use_kernel=use_kernel, param_dim=param_dim)
             return GraphPpermuteMixer(topo, mesh, population_axes,
                                       use_kernel=use_kernel)
         if isinstance(topo, TimeVaryingTopology):
+            if comm_active:
+                raise ValueError(
+                    "compression/staleness/faults need a static topology")
             return TimeVaryingGraphMixer(topo, use_kernel=use_kernel)
+        if comm_active:
+            return CompressedGraphMixer(
+                topo, compressor=compressor,
+                error_feedback=cfg.error_feedback, staleness=cfg.staleness,
+                faults=fault_spec, seed=cfg.seed, use_kernel=use_kernel,
+                param_dim=param_dim)
         return GraphMixer(topo, use_kernel=use_kernel)
     raise ValueError(f"unknown gossip mode {cfg.gossip!r}")

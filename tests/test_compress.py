@@ -1,0 +1,720 @@
+"""Compressed, fault-tolerant gossip (PR 7): compressor contracts
+(top-k support, qsgd unbiasedness, error-feedback telescoping), mean
+preservation of the difference-form round, kernel-vs-oracle
+bit-exactness, the compression="none" regression pin, replayable fault
+injection, measured-vs-predicted Gamma contraction under compression /
+staleness, checkpoint round-trip of the comm state, and plane-vs-tree
+residual-stream parity.
+
+Comparison discipline (mirrors tests/test_kernels.py): the fused
+``compress_mix`` kernel is compared BIT-EXACT against the JITTED jnp
+oracle (both run as one compiled jaxpr, so XLA applies the same FMA
+contraction); kernel vs the eager oracle or across different
+associations is allclose only.
+
+Hypothesis property variants of the compressor contracts live at the
+bottom, gated exactly like tests/test_properties.py — the seeded
+deterministic versions above them always run.
+"""
+import dataclasses
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import require_hypothesis
+from repro import checkpoint
+from repro import topology as topolib
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, consensus_distance, init_state
+from repro.core import plane as planelib
+from repro.core.hdo import HDOState
+from repro.kernels import ops, ref
+from repro.kernels.compress_mix import BLOCK
+from repro.topology import compress as compresslib
+from repro.topology import faults as faultlib
+from repro.topology import spectral
+
+D = 16
+W_TRUE = jax.random.normal(jax.random.PRNGKey(42), (D,))
+
+
+def loss_fn(params, batch):
+    return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+
+
+def make_batches(key, n_agents, bsz=4):
+    X = jax.random.normal(key, (n_agents, bsz, D))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+CONST = dict(lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False,
+             nu=1e-3, rv=1, gossip="graph", topology="ring")
+
+
+# ---------------------------------------------------------------------------
+# compressor unit contracts (seeded, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _payload(key, n, d):
+    u = jax.random.normal(key, (n, d), jnp.float32)
+    seeds = compresslib.payload_seeds(0, 0, n)
+    return u, seeds
+
+
+def test_topk_keeps_exactly_the_largest_coordinates():
+    """C(u) is supported on exactly the k largest-|u| coordinates and
+    equals u there (continuous draws: ties are measure-zero)."""
+    comp = compresslib.Compressor("topk", k=5)
+    u, seeds = _payload(jax.random.PRNGKey(0), 6, 41)
+    m = np.asarray(comp.apply(u, comp.thresholds(u), seeds))
+    un = np.asarray(u)
+    for i in range(6):
+        support = np.nonzero(m[i])[0]
+        assert len(support) == 5, (i, support)
+        expect = set(np.argsort(-np.abs(un[i]))[:5].tolist())
+        assert set(support.tolist()) == expect, i
+        np.testing.assert_array_equal(m[i][support], un[i][support])
+
+
+def test_qsgd_values_on_the_level_grid():
+    """Every quantized coordinate is sign(u) * thr * j / levels for an
+    integer j in [0, levels], so the payload really is bits+sign."""
+    bits = 3
+    comp = compresslib.Compressor("qsgd", bits=bits)
+    u, seeds = _payload(jax.random.PRNGKey(1), 4, 257)
+    thr = comp.thresholds(u)
+    m = np.asarray(comp.apply(u, thr, seeds), np.float64)
+    levels = (1 << bits) - 1
+    j = m * levels / np.asarray(thr)[:, None]
+    np.testing.assert_allclose(j, np.round(j), atol=1e-4)
+    assert np.abs(j).max() <= levels + 1e-4
+    # sign never flips
+    assert np.all(m * np.asarray(u) >= 0.0)
+
+
+def test_qsgd_unbiased_in_expectation():
+    """E[C(u)] == u over the rounding randomness (the seed lane) —
+    CLT tolerance on the per-coordinate mean."""
+    bits = 3
+    comp = compresslib.Compressor("qsgd", bits=bits)
+    d, S = 64, 4096
+    u = jax.random.normal(jax.random.PRNGKey(2), (1, d), jnp.float32)
+    rows = jnp.broadcast_to(u, (S, d))
+    thr = comp.thresholds(rows)
+    seeds = jnp.arange(S, dtype=jnp.uint32)
+    m = np.asarray(jax.jit(comp.apply)(rows, thr, seeds), np.float64)
+    mean = m.mean(axis=0)
+    # per-coordinate std <= thr/(2*levels); 5 sigma of the S-mean
+    tol = 5.0 * float(thr[0]) / (2 * ((1 << bits) - 1)) / np.sqrt(S)
+    np.testing.assert_allclose(mean, np.asarray(u[0], np.float64), atol=tol)
+
+
+def test_error_feedback_telescopes():
+    """sent + residual == raw send basis: m_i + e_i' == x_i + e_i after
+    every round, for both compressors (exact for topk — the residual is
+    a masked copy; float-tight for qsgd)."""
+    n = 8
+    topo = topolib.ring(n)
+    for comp, atol in ((compresslib.Compressor("topk", k=3), 0.0),
+                       (compresslib.Compressor("qsgd", bits=4), 1e-6)):
+        mixer = topolib.CompressedGraphMixer(topo, compressor=comp, seed=5)
+        params = {"w": jax.random.normal(jax.random.PRNGKey(3), (n, D))}
+        comm = mixer.init_comm(params)
+        for t in range(4):
+            u = (params["w"].astype(jnp.float32)
+                 + comm["residual"]["w"])  # raw send basis this round
+            new_params, new_comm = mixer.mix(
+                params, key=None, step=jnp.int32(t), comm=comm)
+            seeds = compresslib.payload_seeds(5, t, n)
+            m = comp.apply(u, comp.thresholds(u), seeds)
+            lhs = np.asarray(m + new_comm["residual"]["w"], np.float64)
+            np.testing.assert_allclose(lhs, np.asarray(u, np.float64),
+                                       atol=atol, err_msg=f"{comp.mode}@{t}")
+            params, comm = new_params, new_comm
+
+
+def test_payload_seeds_replayable_and_distinct():
+    a = np.asarray(compresslib.payload_seeds(3, 7, 8))
+    b = np.asarray(compresslib.payload_seeds(3, 7, 8))
+    np.testing.assert_array_equal(a, b)
+    assert len(set(a.tolist())) == 8  # distinct per agent
+    c = np.asarray(compresslib.payload_seeds(3, 8, 8))
+    assert not np.array_equal(a, c)  # step moves the stream
+
+
+def test_bytes_on_wire_accounting():
+    d = 1 << 20
+    topk = compresslib.Compressor("topk", k=d // 100)
+    qsgd = compresslib.Compressor("qsgd", bits=4)
+    assert topk.bytes_on_wire(d) == 8 * (d // 100)
+    assert qsgd.bytes_on_wire(d) == (d * 5 + 7) // 8 + 4
+    # both far below the dense f32 payload
+    assert topk.bytes_on_wire(d) < 4 * d / 10
+    assert qsgd.bytes_on_wire(d) < 4 * d / 5
+    assert 0.0 < topk.delta(d) < 1.0 and 0.0 < qsgd.delta(d) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# mean preservation of the compressed round
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,kw", [("topk", dict(k=3)),
+                                     ("qsgd", dict(bits=4))])
+@pytest.mark.parametrize("topo_fn", [
+    lambda: topolib.ring(8),
+    lambda: topolib.torus(8),
+    lambda: topolib.erdos_renyi(8, 0.5, seed=2),
+])
+def test_compressed_round_preserves_mean(topo_fn, mode, kw):
+    """Difference-form mixing keeps the population mean exact for ANY
+    compressor — including under staleness and drop/straggler faults
+    (byzantine intentionally excepted, asserted below)."""
+    topo = topo_fn()
+    comp = compresslib.Compressor(mode, **kw)
+    variants = [
+        topolib.CompressedGraphMixer(topo, compressor=comp),
+        topolib.CompressedGraphMixer(topo, compressor=comp, staleness=2),
+        topolib.CompressedGraphMixer(
+            topo, compressor=comp, staleness=1,
+            faults=faultlib.FaultSpec(drop_rate=0.3, straggler_rate=0.3,
+                                      seed=11)),
+    ]
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (8, D))}
+    mu0 = np.asarray(params["w"], np.float64).mean(axis=0)
+    for mixer in variants:
+        p, comm = params, mixer.init_comm(params)
+        for t in range(5):
+            p, comm = mixer.mix(p, key=None, step=jnp.int32(t), comm=comm)
+        np.testing.assert_allclose(
+            np.asarray(p["w"], np.float64).mean(axis=0), mu0, atol=1e-5)
+
+
+def test_byzantine_breaks_the_mean():
+    """The adversarial payload must actually move the population mean —
+    otherwise the fault injection is a no-op."""
+    topo = topolib.ring(8)
+    mixer = topolib.CompressedGraphMixer(
+        topo, compressor=compresslib.Compressor("topk", k=8),
+        faults=faultlib.FaultSpec(byzantine_rate=0.5, seed=3))
+    params = {"w": jax.random.normal(jax.random.PRNGKey(6), (8, D))}
+    p, comm = params, mixer.init_comm(params)
+    for t in range(3):
+        p, comm = mixer.mix(p, key=None, step=jnp.int32(t), comm=comm)
+    drift = np.abs(np.asarray(p["w"]).mean(axis=0)
+                   - np.asarray(params["w"]).mean(axis=0)).max()
+    assert drift > 1e-3, drift
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs jitted jnp oracle: bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,bits,k", [("topk", 0, 37), ("qsgd", 4, 0)])
+@pytest.mark.parametrize("d", [1000, BLOCK, 10007])
+def test_compress_mix_kernel_bit_exact_vs_jitted_ref(d, mode, bits, k):
+    """ops.compress_mix == jit(ref.compress_mix_ref) bit for bit across
+    sub-block, exactly-aligned, and tail-padded sizes, for both
+    compressors — output AND residual."""
+    comp = compresslib.Compressor(mode, k=k, bits=bits)
+    key = jax.random.PRNGKey(d)
+    x = jax.random.normal(key, (d,))
+    e = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * 0.1
+    u = x + e
+    nbrs = jax.random.normal(jax.random.fold_in(key, 2), (2, d))
+    w = jnp.asarray([0.25, 0.25], jnp.float32)
+    rows = jnp.concatenate([u[None], nbrs], axis=0)
+    thr = comp.thresholds(rows)
+    seeds = compresslib.payload_seeds(9, 3, 3)
+    out_k, res_k = ops.compress_mix(x, u, nbrs, w, thr, seeds, mode, bits)
+    jref = jax.jit(functools.partial(ref.compress_mix_ref, mode=mode,
+                                     bits=bits))
+    out_r, res_r = jref(x, u, nbrs, w, thr, seeds)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(res_k), np.asarray(res_r))
+
+
+def test_compress_mix_kernel_bf16_params():
+    """bf16 x with f32 send bases: the kernel accumulates in f32 and
+    casts the mixed output back to x.dtype, matching the jitted ref."""
+    d = 9000
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,)).astype(jnp.bfloat16)
+    u = x.astype(jnp.float32)
+    nbrs = jax.random.normal(jax.random.PRNGKey(1), (2, d))
+    w = jnp.asarray([0.25, 0.25], jnp.float32)
+    comp = compresslib.Compressor("qsgd", bits=4)
+    thr = comp.thresholds(jnp.concatenate([u[None], nbrs], axis=0))
+    seeds = compresslib.payload_seeds(1, 0, 3)
+    out_k, res_k = ops.compress_mix(x, u, nbrs, w, thr, seeds, "qsgd", 4)
+    jref = jax.jit(functools.partial(ref.compress_mix_ref, mode="qsgd",
+                                     bits=4))
+    out_r, res_r = jref(x, u, nbrs, w, thr, seeds)
+    assert out_k.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out_k, np.float32),
+                                  np.asarray(out_r, np.float32))
+    np.testing.assert_array_equal(np.asarray(res_k), np.asarray(res_r))
+
+
+def test_compressed_mixer_kernel_path_matches_jnp():
+    """CompressedGraphMixer(use_kernel=True) == the jnp lowering on the
+    fresh path (allclose: different float association)."""
+    topo = topolib.torus(8)
+    comp = compresslib.Compressor("topk", k=4)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(8), (8, D))}
+    outs = {}
+    for uk in (False, True):
+        mixer = topolib.CompressedGraphMixer(topo, compressor=comp,
+                                             use_kernel=uk, seed=2)
+        p, comm = mixer.mix(params, key=None, step=jnp.int32(0),
+                            comm=mixer.init_comm(params))
+        outs[uk] = (np.asarray(p["w"]), np.asarray(comm["residual"]["w"]))
+    np.testing.assert_allclose(outs[False][0], outs[True][0], atol=1e-6)
+    np.testing.assert_allclose(outs[False][1], outs[True][1], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the regression pin: compression="none" is bit-identical to the plain
+# graph round (the stateless Mixer objects, the empty comm stream)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("zo_impl,dispatch,param_layout", [
+    ("tree", "select", "tree"),
+    ("fused", "split", "tree"),
+    ("fused", "select", "plane"),
+])
+def test_none_compression_bit_identical(zo_impl, dispatch, param_layout):
+    """With compression="none" the step must replay the uncompressed
+    graph round EXACTLY: make_mixer returns the plain (stateless)
+    GraphMixer class, state.comm is the empty pytree, and one step
+    equals a gossip="none" step followed by the jitted GraphMixer on
+    its output (the pre-compression decomposition, same discipline as
+    tests/test_topology.py::test_dense_step_bit_identical_to_pre_refactor)
+    — across both ZO engines, grouped dispatch, and the plane layout."""
+    n = 6
+    kw = dict(n_agents=n, n_zeroth=3, zo_impl=zo_impl, dispatch=dispatch,
+              param_layout=param_layout, lr=0.25, momentum=0.5,
+              warmup_steps=0, use_cosine=False, nu=1e-3, rv=2)
+    cfg_g = HDOConfig(gossip="graph", topology="ring", compression="none",
+                      **kw)
+    cfg_n = HDOConfig(gossip="none", **kw)
+    assert type(topolib.make_mixer(cfg_g, use_kernel=False)) \
+        is topolib.GraphMixer
+    p0 = {"w": jnp.zeros((D,))}
+    tmpl = dict(params_template=p0) if param_layout == "plane" else {}
+    step_g = jax.jit(build_hdo_step(loss_fn, cfg_g, param_dim=D, **tmpl))
+    step_n = jax.jit(build_hdo_step(loss_fn, cfg_n, param_dim=D, **tmpl))
+    mixer = topolib.GraphMixer(topolib.ring(n))
+    sg = init_state(p0, cfg_g)
+    assert sg.comm == ()
+    sn = init_state(p0, cfg_n)
+    b = make_batches(jax.random.PRNGKey(13), n)
+    sg, mg = step_g(sg, b)
+    sn, _ = step_n(sn, b)
+    ref_params = jax.jit(
+        lambda p: mixer.mix(p, key=None, step=jnp.int32(0), comm=())[0]
+    )(sn.params)
+    for a, b in zip(jax.tree.leaves(sg.params), jax.tree.leaves(ref_params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # plain spectral metrics only — no compression diagnostics
+    assert "gossip_lambda2" in mg and "gossip_compress_delta" not in mg
+
+
+def test_compression_metrics_surface_in_step():
+    cfg = HDOConfig(n_agents=8, n_zeroth=4, compression="topk", compress_k=4,
+                    staleness=1, **CONST)
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    _, m = step(state, make_batches(jax.random.PRNGKey(0), 8))
+    topo = topolib.ring(8)
+    assert float(m["gossip_compress_delta"]) == pytest.approx(4 / D)
+    assert float(m["gossip_staleness"]) == 1.0
+    se = spectral.effective_slem(topo, delta=4 / D, staleness=1)
+    assert float(m["gossip_effective_lambda2"]) == pytest.approx(se, abs=1e-6)
+    assert float(m["gossip_gamma_contraction"]) == pytest.approx(
+        se * se, abs=1e-6)
+    # the raw graph slem is still reported unchanged
+    assert float(m["gossip_lambda2"]) == pytest.approx(
+        spectral.slem(topo), abs=1e-6)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="compress_k"):
+        HDOConfig(gossip="graph", compression="topk", compress_k=0)
+    with pytest.raises(ValueError, match="compress_bits"):
+        HDOConfig(gossip="graph", compression="qsgd", compress_bits=9)
+    with pytest.raises(ValueError, match="gossip"):
+        HDOConfig(gossip="dense", compression="topk", compress_k=2)
+    with pytest.raises(ValueError, match="static"):
+        HDOConfig(gossip="graph", topology="tv_round_robin",
+                  compression="topk", compress_k=2)
+    with pytest.raises(ValueError, match="fresh compressed path"):
+        HDOConfig(gossip="graph_ppermute", compression="topk", compress_k=2,
+                  staleness=1)
+    with pytest.raises(ValueError, match="fault_drop_rate"):
+        HDOConfig(gossip="graph", fault_drop_rate=1.5)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: replayable by construction
+# ---------------------------------------------------------------------------
+
+
+def test_fault_masks_replayable_and_step_dependent():
+    spec = faultlib.FaultSpec(drop_rate=0.5, straggler_rate=0.5,
+                              byzantine_rate=0.5, seed=21)
+    a = faultlib.fault_masks(spec, jnp.int32(4), 32)
+    b = jax.jit(lambda s: faultlib.fault_masks(spec, s, 32))(jnp.int32(4))
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]), k)
+    c = faultlib.fault_masks(spec, jnp.int32(5), 32)
+    assert any(not np.array_equal(np.asarray(a[k]), np.asarray(c[k]))
+               for k in a)
+    # zero rates can never fire (the counter uniform lies in (0, 1])
+    quiet = faultlib.FaultSpec(drop_rate=0.0, seed=21)
+    m = faultlib.fault_masks(quiet, jnp.int32(0), 32)
+    assert np.asarray(m["alive"]).all()
+    assert not np.asarray(m["straggler"]).any()
+    assert not np.asarray(m["byzantine"]).any()
+
+
+def test_faulty_run_replays_bit_identically():
+    """Two fresh builds of the same faulty config produce the same
+    trajectory bit for bit — the fault schedule is a pure function of
+    (fault_seed, step, agent), not of JAX PRNG state."""
+    cfg = HDOConfig(n_agents=8, n_zeroth=4, compression="qsgd",
+                    compress_bits=4, staleness=1, fault_drop_rate=0.25,
+                    fault_straggler_rate=0.25, fault_byzantine_rate=0.1,
+                    fault_seed=17, **CONST)
+    outs = []
+    for _ in range(2):
+        step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+        state = init_state({"w": jnp.zeros((D,))}, cfg)
+        for t in range(4):
+            state, _ = step(state, make_batches(
+                jax.random.fold_in(jax.random.PRNGKey(2), t), 8))
+        outs.append(state)
+    np.testing.assert_array_equal(np.asarray(outs[0].params["w"]),
+                                  np.asarray(outs[1].params["w"]))
+    for a, b in zip(jax.tree.leaves(outs[0].comm),
+                    jax.tree.leaves(outs[1].comm)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a different fault seed diverges (faults really injected)
+    cfg2 = dataclasses.replace(cfg, fault_seed=18)
+    step = jax.jit(build_hdo_step(loss_fn, cfg2, param_dim=D))
+    state = init_state({"w": jnp.zeros((D,))}, cfg2)
+    for t in range(4):
+        state, _ = step(state, make_batches(
+            jax.random.fold_in(jax.random.PRNGKey(2), t), 8))
+    assert not np.array_equal(np.asarray(state.params["w"]),
+                              np.asarray(outs[0].params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# measured Gamma vs the spectral model's prediction
+# ---------------------------------------------------------------------------
+
+
+def test_mc_prediction_sanity_none_equals_slem_sq():
+    """The independent numpy Monte-Carlo harness reproduces the exact
+    closed form in the uncompressed case — pinning the harness itself
+    before it is used as the reference for the lossy cases."""
+    topo = topolib.ring(8)
+    got = spectral.predicted_contraction_empirical(topo, compression="none")
+    assert got == pytest.approx(spectral.slem(topo) ** 2, abs=1e-9)
+
+
+@pytest.mark.parametrize("topo_name,n,comp_kw,tau,kw", [
+    ("ring", 12, dict(compression="topk", compress_k=4), 0, {}),
+    ("torus", 12, dict(compression="topk", compress_k=4), 1, {}),
+    ("erdos_renyi", 12, dict(compression="qsgd", compress_bits=4), 0,
+     dict(topology_p=0.45, topology_seed=3)),
+])
+def test_measured_gamma_matches_compressed_prediction(topo_name, n, comp_kw,
+                                                      tau, kw):
+    """With lr=0 (pure interaction) the measured per-round Gamma
+    contraction through the full jitted step matches the independent
+    numpy simulation of compressed/stale gossip — same tail estimator
+    (spectral.tail_rate) applied to both traces."""
+    cfg = HDOConfig(n_agents=n, n_zeroth=n // 2, gossip="graph",
+                    topology=topo_name, lr=0.0, momentum=0.0,
+                    warmup_steps=0, use_cosine=False, rv=1, nu=1e-3,
+                    staleness=tau, **comp_kw, **kw)
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+    st0 = init_state({"w": jnp.zeros((D,))}, cfg)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(7), (n, D))}
+    st = HDOState(params=params, opt_state=st0.opt_state, step=st0.step,
+                  comm=compresslib.init_comm(cfg, params))
+    gammas = [float(consensus_distance(st.params))]
+    for t in range(36):
+        st, _ = step(st, make_batches(
+            jax.random.fold_in(jax.random.PRNGKey(1), t), n))
+        gammas.append(float(consensus_distance(st.params)))
+    assert gammas[-1] > 1e-18, "Gamma hit the float noise floor"
+    measured = spectral.tail_rate(gammas, staleness=tau)
+    topo = topolib.make_topology(topo_name, n, p=kw.get("topology_p", 0.3),
+                                 seed=kw.get("topology_seed", 0))
+    predicted = spectral.predicted_contraction_empirical(
+        topo, compression=cfg.compression, k=cfg.compress_k,
+        bits=cfg.compress_bits, staleness=tau, dim=D, rounds=36, trials=8)
+    assert measured == pytest.approx(predicted, rel=0.2), (
+        topo_name, measured, predicted)
+    # and the closed-form effective model brackets the same decade
+    delta = spectral.compression_delta(cfg.compression, D, k=cfg.compress_k,
+                                       bits=cfg.compress_bits)
+    closed = spectral.effective_slem(topo, delta=delta, staleness=tau) ** 2
+    assert 0.0 < closed < 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip of the comm state
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_with_comm_state(tmp_path):
+    """Resume bit-identity with BOTH comm streams live (residual via
+    compression + error feedback, bcast via staleness + stragglers) and
+    faults injected — the restored run replays the interrupted one
+    exactly, comm leaves included."""
+    cfg = HDOConfig(n_agents=8, n_zeroth=4, compression="topk", compress_k=4,
+                    staleness=2, fault_drop_rate=0.2,
+                    fault_straggler_rate=0.2, fault_seed=9, **CONST)
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
+
+    def batch_at(t):
+        return make_batches(jax.random.fold_in(jax.random.PRNGKey(23), t), 8)
+
+    full = init_state({"w": jnp.zeros((D,))}, cfg)
+    assert sorted(full.comm) == ["bcast", "residual"]
+    for t in range(5):
+        full, _ = step(full, batch_at(t))
+    part = init_state({"w": jnp.zeros((D,))}, cfg)
+    for t in range(3):
+        part, _ = step(part, batch_at(t))
+    path = os.path.join(str(tmp_path), "ck")
+    checkpoint.save_state(path, part)
+    restored, _ = checkpoint.restore_state(
+        path, init_state({"w": jnp.zeros((D,))}, cfg))
+    assert int(restored.step) == 3
+    for t in range(3, 5):
+        restored, _ = step(restored, batch_at(t))
+    np.testing.assert_array_equal(np.asarray(full.params["w"]),
+                                  np.asarray(restored.params["w"]))
+    for a, b in zip(jax.tree.leaves(full.comm),
+                    jax.tree.leaves(restored.comm)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pre_comm_checkpoints_still_restore(tmp_path):
+    """A checkpoint written before the comm stream existed (raw
+    params+opt_state tree) restores into a plain config unchanged — the
+    empty comm contributes no leaves to the saved structure."""
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, **CONST)
+    state = init_state({"w": jnp.full((D,), 0.5)}, cfg)
+    assert state.comm == ()
+    path = os.path.join(str(tmp_path), "old")
+    # the pre-comm layout: exactly these two keys
+    checkpoint.save(path, jax.device_get(
+        {"params": state.params, "opt_state": state.opt_state}), step=7)
+    restored, meta = checkpoint.restore_state(path, state)
+    assert int(restored.step) == 7 and restored.comm == ()
+    np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                  np.asarray(state.params["w"]))
+
+
+def test_restore_rejects_comm_structure_mismatch(tmp_path):
+    """A checkpoint with comm streams cannot silently restore into a
+    config without them (and vice versa)."""
+    comp_cfg = HDOConfig(n_agents=4, n_zeroth=2, compression="topk",
+                         compress_k=2, **CONST)
+    plain_cfg = HDOConfig(n_agents=4, n_zeroth=2, **CONST)
+    path = os.path.join(str(tmp_path), "ck")
+    checkpoint.save_state(path, init_state({"w": jnp.zeros((D,))}, comp_cfg))
+    with pytest.raises(ValueError, match="structure mismatch"):
+        checkpoint.restore_state(
+            path, init_state({"w": jnp.zeros((D,))}, plain_cfg))
+
+
+# ---------------------------------------------------------------------------
+# plane-vs-tree residual-stream parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,kw", [("topk", dict(compress_k=4)),
+                                     ("qsgd", dict(compress_bits=4))])
+def test_plane_vs_tree_compressed_parity(mode, kw):
+    """On a single-leaf model the plane layout replays the compressed
+    tree trajectory bit for bit — the plane's padded coordinates are
+    zero in params AND residual, thresholds/seed positions coincide on
+    the compact prefix, and the residual stream unpacks to the tree
+    residual exactly."""
+    p0 = {"w": jax.random.normal(jax.random.PRNGKey(31), (D,))}
+    man = planelib.build_manifest(p0)
+    base = dict(n_agents=4, n_zeroth=2, estimator_zo="multi_rv", rv=2,
+                zo_impl="fused", lr=0.25, momentum=0.5, warmup_steps=0,
+                use_cosine=False, nu=1e-3, gossip="graph", topology="ring",
+                compression=mode, **kw)
+    states = {}
+    for layout in ("tree", "plane"):
+        cfg = HDOConfig(param_layout=layout, **base)
+        step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D,
+                                      params_template=p0))
+        st = init_state(p0, cfg)
+        for t in range(3):
+            st, _ = step(st, make_batches(
+                jax.random.fold_in(jax.random.PRNGKey(5), t), 4))
+        states[layout] = st
+    tree_p = states["tree"].params["w"]
+    plane_p = planelib.unpack_stacked(man, states["plane"].params)["w"]
+    np.testing.assert_array_equal(np.asarray(tree_p), np.asarray(plane_p))
+    tree_e = states["tree"].comm["residual"]["w"]
+    plane_res = states["plane"].comm["residual"]
+    plane_e = planelib.unpack_stacked(man, plane_res)["w"]
+    np.testing.assert_array_equal(np.asarray(tree_e), np.asarray(plane_e))
+    # pads stay invariantly zero in the residual stream too
+    if man.dim > D:
+        pads = np.asarray(plane_res)[:, D:]
+        np.testing.assert_array_equal(pads, np.zeros_like(pads))
+
+
+# ---------------------------------------------------------------------------
+# ppermute lowering parity (multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_compressed_graph_ppermute_parity_subprocess():
+    """CompressedGraphPpermuteMixer == CompressedGraphMixer on the fresh
+    path (identical payload seeds and thresholds by construction, so
+    only the neighbor-accumulation association differs across the two
+    lowerings — allclose, on both the kernel and jnp routes), and
+    end-to-end through the jitted HDO step."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.topology as T
+        from repro.configs.base import HDOConfig
+        from repro.core import build_hdo_step, init_state
+        from repro.topology import compress as C
+        mesh = jax.make_mesh((8,), ("data",))
+        n, d = 8, 12
+        topo = T.hypercube(n)
+        X = {"w": jax.random.normal(jax.random.PRNGKey(1), (n, 24))}
+        for comp in (C.Compressor("topk", k=5), C.Compressor("qsgd", bits=4)):
+            gm = T.CompressedGraphMixer(topo, compressor=comp, seed=3)
+            exp, ecomm = gm.mix(X, key=None, step=jnp.int32(2),
+                                comm=gm.init_comm(X))
+            for uk in (False, True):
+                pm = T.CompressedGraphPpermuteMixer(
+                    topo, mesh, ("data",), compressor=comp, seed=3,
+                    use_kernel=uk)
+                got, gcomm = jax.jit(
+                    lambda p, c: pm.mix(p, key=None, step=jnp.int32(2),
+                                        comm=c))(X, pm.init_comm(X))
+                np.testing.assert_allclose(np.asarray(got["w"]),
+                                           np.asarray(exp["w"]), atol=1e-6)
+                np.testing.assert_allclose(
+                    np.asarray(gcomm["residual"]["w"]),
+                    np.asarray(ecomm["residual"]["w"]), atol=1e-6)
+        w_true = jax.random.normal(jax.random.PRNGKey(42), (d,))
+        def loss_fn(params, batch):
+            return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+        outs = {}
+        for mode in ("graph", "graph_ppermute"):
+            cfg = HDOConfig(n_agents=n, n_zeroth=4, gossip=mode,
+                            topology="hypercube", compression="topk",
+                            compress_k=4, lr=0.05, momentum=0.0,
+                            warmup_steps=0, use_cosine=False, rv=2, nu=1e-3)
+            step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=d,
+                                          mesh=mesh,
+                                          population_axes=("data",)))
+            state = init_state({"w": jnp.zeros((d,))}, cfg)
+            for t in range(10):
+                k = jax.random.fold_in(jax.random.PRNGKey(9), t)
+                Xb = jax.random.normal(k, (n, 8, d))
+                state, m = step(state, {"X": Xb, "y": Xb @ w_true})
+            outs[mode] = np.asarray(state.params["w"])
+        # top-k selection is discontinuous: one ulp of association noise
+        # can flip which coordinate a payload keeps, so the multi-round
+        # trajectories only agree coarsely — the bit-level contract is
+        # the single-round mixer parity above; this leg catches gross
+        # wiring bugs (wrong neighbor routing => O(1) errors)
+        np.testing.assert_allclose(outs["graph"], outs["graph_ppermute"],
+                                   atol=2e-2)
+        np.testing.assert_allclose(outs["graph"].mean(0),
+                                   outs["graph_ppermute"].mean(0), atol=2e-3)
+        print("COMPRESSED_PPERMUTE_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=420, env=env, cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "COMPRESSED_PPERMUTE_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property variants (CI runs them; hypothesis-less
+# containers skip exactly these through the conftest gate)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("compress", max_examples=25, deadline=None)
+    settings.load_profile("compress")
+
+    @given(d=st.integers(2, 64), k=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1))
+    def test_prop_topk_support_size(d, k, seed):
+        comp = compresslib.Compressor("topk", k=k)
+        u = jax.random.normal(jax.random.PRNGKey(seed), (1, d))
+        m = np.asarray(comp.apply(u, comp.thresholds(u),
+                                  jnp.zeros((1,), jnp.uint32)))
+        assert (m != 0).sum() == min(k, d)
+
+    @given(d=st.integers(2, 64), bits=st.integers(1, 8),
+           seed=st.integers(0, 2**31 - 1), pseed=st.integers(0, 2**31 - 1))
+    def test_prop_qsgd_bounded_and_sign_preserving(d, bits, seed, pseed):
+        comp = compresslib.Compressor("qsgd", bits=bits)
+        u = jax.random.normal(jax.random.PRNGKey(pseed), (1, d))
+        thr = comp.thresholds(u)
+        m = np.asarray(comp.apply(u, thr, jnp.full((1,), seed % (1 << 32),
+                                                   jnp.uint32)))
+        assert np.abs(m).max() <= float(thr[0]) * (1 + 1e-6)
+        assert np.all(m * np.asarray(u) >= 0.0)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           mode=st.sampled_from(["topk", "qsgd"]),
+           step=st.integers(0, 100))
+    def test_prop_error_feedback_telescopes(seed, mode, step):
+        comp = (compresslib.Compressor("topk", k=3) if mode == "topk"
+                else compresslib.Compressor("qsgd", bits=4))
+        u = jax.random.normal(jax.random.PRNGKey(seed), (4, D))
+        seeds = compresslib.payload_seeds(seed, step, 4)
+        m = comp.apply(u, comp.thresholds(u), seeds)
+        resid = u - m
+        np.testing.assert_allclose(np.asarray(m + resid, np.float64),
+                                   np.asarray(u, np.float64), atol=1e-6)
+else:
+    @pytest.mark.parametrize("prop", ["topk_support", "qsgd_bounded",
+                                      "ef_telescoping"])
+    def test_hypothesis_properties_gated(prop):
+        require_hypothesis()  # records the standard skip reason

@@ -36,6 +36,12 @@ def make_batches(key, n_agents, bsz=8):
     return {"X": X, "y": X @ W_TRUE}
 
 
+def stack_rounds(*bs):
+    """Stack H per-substep batches along a new leading axis — the
+    local_steps>1 batch contract (every leaf (H, n_agents, ...))."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+
+
 BASE = dict(lr=0.05, momentum=0.9, warmup_steps=2, use_cosine=True,
             cosine_steps=50, nu=1e-3, rv=2, gossip="dense")
 
@@ -177,24 +183,39 @@ CONST = dict(lr=0.05, momentum=0.9, warmup_steps=0, use_cosine=False,
 
 
 def test_local_steps_equals_sequential_without_gossip():
-    """One H=3 round with no gossip == three H=1 rounds bit for bit
-    (constant lr; the substep counter t*H+h extends the H=1 key stream)
-    — proving the scan runs exactly H estimate+update iterations."""
+    """One H=3 round with no gossip == three H=1 rounds bit for bit on
+    the SAME three fresh batches (constant lr; the substep counter
+    t*H+h extends the H=1 key stream, and each substep consumes its own
+    slice of the stacked (H, n, ...) batches) — proving the scan runs
+    exactly H estimate+update iterations on H distinct batches."""
     cfg1 = HDOConfig(n_agents=4, n_zeroth=2, gossip="none", **CONST)
     cfgH = dataclasses.replace(cfg1, local_steps=3)
-    b = make_batches(jax.random.PRNGKey(3), 4)
+    bs = [make_batches(jax.random.fold_in(jax.random.PRNGKey(3), h), 4)
+          for h in range(3)]
     s1 = init_state({"w": jnp.zeros((D,))}, cfg1)
     step1 = jax.jit(build_hdo_step(loss_fn, cfg1, param_dim=D))
-    for _ in range(3):
+    for b in bs:
         s1, _ = step1(s1, b)
     sH = init_state({"w": jnp.zeros((D,))}, cfgH)
     stepH = jax.jit(build_hdo_step(loss_fn, cfgH, param_dim=D))
-    sH, mH = stepH(sH, b)
+    sH, mH = stepH(sH, stack_rounds(*bs))
     assert int(sH.step) == 1  # one round, H local substeps
     np.testing.assert_array_equal(np.asarray(s1.params["w"]),
                                   np.asarray(sH.params["w"]))
     np.testing.assert_array_equal(np.asarray(s1.opt_state["w"]),
                                   np.asarray(sH.opt_state["w"]))
+
+
+def test_local_steps_rejects_unstacked_batches():
+    """H>1 with batches missing the leading H axis must fail loudly at
+    trace time — silently re-descending one batch H times was the bug
+    this contract removed."""
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="none", local_steps=3,
+                    **CONST)
+    state = init_state({"w": jnp.zeros((D,))}, cfg)
+    step = build_hdo_step(loss_fn, cfg, param_dim=D)
+    with pytest.raises(ValueError, match="fresh per-substep batches"):
+        step(state, make_batches(jax.random.PRNGKey(0), 4))
 
 
 def test_local_steps_mix_once_per_round():
@@ -204,7 +225,9 @@ def test_local_steps_mix_once_per_round():
     cfgN = HDOConfig(n_agents=4, n_zeroth=2, gossip="none", local_steps=2,
                      **CONST)
     cfgA = dataclasses.replace(cfgN, gossip="all_reduce")
-    b = make_batches(jax.random.PRNGKey(5), 4)
+    b = stack_rounds(
+        make_batches(jax.random.PRNGKey(5), 4),
+        make_batches(jax.random.PRNGKey(6), 4))
     s0 = init_state({"w": jnp.zeros((D,))}, cfgN)
     sN, _ = jax.jit(build_hdo_step(loss_fn, cfgN, param_dim=D))(s0, b)
     sA, _ = jax.jit(build_hdo_step(loss_fn, cfgA, param_dim=D))(s0, b)
@@ -227,8 +250,9 @@ def test_local_steps_heterogeneous_runs():
     state = init_state({"w": jnp.zeros((D,))}, cfg)
     first = None
     for t in range(30):
-        state, m = step(state, make_batches(
-            jax.random.fold_in(jax.random.PRNGKey(2), t), 4))
+        state, m = step(state, stack_rounds(
+            make_batches(jax.random.fold_in(jax.random.PRNGKey(2), 2 * t), 4),
+            make_batches(jax.random.fold_in(jax.random.PRNGKey(2), 2 * t + 1), 4)))
         first = float(m["loss_mean"]) if first is None else first
     assert float(m["loss_mean"]) < 0.5 * first, (first, float(m["loss_mean"]))
     for k in ("grad_var_zo_multi_rv", "loss_zo_multi_rv_mean",
@@ -282,7 +306,8 @@ def test_adamw_local_steps_converges_brackets():
     rng = np.random.default_rng(0)
     first = None
     for t in range(30):
-        idx = rng.integers(0, 512, size=(4, 16))
+        # local_steps=2: each round consumes a fresh batch per substep
+        idx = rng.integers(0, 512, size=(2, 4, 16))
         batches = {"tokens": jnp.asarray(toks[idx]),
                    "labels": jnp.asarray(labs[idx])}
         state, m = step(state, batches)
@@ -397,7 +422,10 @@ def test_resume_bit_identity(tmp_path, optimizer):
     step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D))
 
     def batch_at(t):
-        return make_batches(jax.random.fold_in(jax.random.PRNGKey(11), t), 4)
+        # local_steps=2: two fresh sub-batches per round
+        return stack_rounds(
+            make_batches(jax.random.fold_in(jax.random.PRNGKey(11), 2 * t), 4),
+            make_batches(jax.random.fold_in(jax.random.PRNGKey(11), 2 * t + 1), 4))
 
     # uninterrupted: 5 rounds
     full = init_state({"w": jnp.zeros((D,))}, cfg)
