@@ -370,6 +370,16 @@ def plane_bench(n_agents: int = 4, n_layers: int = 12,
             loss_fn, cfg, param_dim=man.size, params_template=params))
         state = hdolib.init_state(params, cfg)
         us = _time(lambda: step(state, batches)[0].params, n=2)
+        # fenced per-phase split of the same round (repro.obs.timing:
+        # three separately-jitted calls, bit-identical to the fused
+        # step) — locates the layouts' cost difference by phase
+        from repro.obs import timing as obstiming
+
+        fns = obstiming.build_phase_fns(
+            loss_fn, cfg, param_dim=man.size, params_template=params)
+        timing = obstiming.PhaseTimer(fns, reps=2).measure(state, batches)
+        phase_ms = {ph: round(timing[f"phase_ms_{ph}"], 3)
+                    for ph in ("estimate", "update", "mix")}
         counts = planelib.dispatch_counts(man, n_agents)[layout]
         d_eff = man.dim if layout == "plane" else man.size
         large = sum(s.size for s in man.leaves if s.size >= 8192)
@@ -382,6 +392,7 @@ def plane_bench(n_agents: int = 4, n_layers: int = 12,
         entries.append({
             "layout": layout, "dim": d_eff, "n_agents": n_agents,
             "us_per_step": round(us, 1), "dispatch": counts,
+            "phase_ms": phase_ms,
             "update_hbm_bytes": update_hbm, "mix_hbm_bytes": mix_hbm,
         })
         print(csv_line(f"plane_round_{layout}_d{d_eff}", us,

@@ -45,6 +45,7 @@ from repro import compat
 from repro.configs.base import HDOConfig
 from repro.core import estimators, flatzo, localupdate, population, schedules
 from repro.core import plane as planelib
+from repro.obs.trace import phase_scope
 
 PyTree = Any
 
@@ -432,6 +433,7 @@ def build_hdo_step(
     mesh=None,
     population_axes: Tuple[str, ...] = (),
     params_template: Optional[PyTree] = None,
+    extended_metrics: bool = False,
 ) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
     """Returns step(state, batches) -> (state, metrics).
 
@@ -482,6 +484,23 @@ def build_hdo_step(
     collapses onto the homogeneous path bit-identically
     (tests/test_population.py).
 
+    ``extended_metrics=True`` additionally surfaces the per-agent
+    health diagnostics the default step keeps dark: the per-agent loss
+    vector (``loss_agent``), in-step consensus distance
+    (``consensus_gamma`` and the per-agent ``consensus_agent``
+    vector, post-mix), this round's fault-injection counters
+    (``fault_drop_count`` / ``fault_straggler_count`` /
+    ``fault_byzantine_count``, recomputed from the replayable fault
+    schedule — a pure function of (fault_seed, step, agent)), and the
+    measured on-wire traffic ``gossip_wire_bytes`` (broadcasting-agent
+    count x ``Mixer.wire_bytes_per_agent`` — staleness schedules,
+    drops, and stragglers reduce it, so compression sweeps quote
+    measured rather than analytic bytes).  Every extra key is
+    observe-only: the returned state is bit-identical with the flag on
+    or off (tests/test_obs.py), and every key is declared in the
+    ``repro.obs.metrics`` schema registry.  The default (False) emits
+    exactly the pre-existing metric set.
+
     ``cfg.param_layout="plane"`` additionally needs
     ``params_template`` — the single-agent model pytree (real arrays or
     ``jax.eval_shape`` structs) from which the static leaf manifest is
@@ -494,6 +513,7 @@ def build_hdo_step(
     """
     # deferred: topology depends on core.gossip's primitives, so a
     # module-level import here would cycle through repro.core.__init__
+    from repro.topology import faults as faultlib
     from repro.topology.mixer import make_mixer
 
     n = cfg.n_agents
@@ -525,6 +545,14 @@ def build_hdo_step(
         manifest=manifest,
     )
     local_update = localupdate.make_local_update(cfg)
+
+    # -- extended-metrics constants (trace-time) -----------------------
+    # wire accounting: the plane layout knows its dim from the manifest,
+    # otherwise the caller-provided param_dim prices the payloads
+    fault_spec = faultlib.FaultSpec.from_config(cfg) if extended_metrics else None
+    wire_dim = manifest.size if manifest is not None else param_dim
+    payload_bytes = (mixer.wire_bytes_per_agent(wire_dim)
+                     if extended_metrics and wire_dim else None)
 
     # -- heterogeneous cohort tables (trace-time constants) ------------
     if pop.homogeneous:
@@ -576,14 +604,18 @@ def build_hdo_step(
             pre-refactor key stream and data)."""
             skey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), ctr)
             agent_keys = jax.random.split(skey, n)
-            losses, g = estimate(params, b, agent_keys, nu, nu_vec)
-            new_params, new_opt = local_update.apply(
-                params, g, opt_state, lr, lr_vec
-            )
+            with phase_scope("estimate"):
+                losses, g = estimate(params, b, agent_keys, nu, nu_vec)
+            with phase_scope("update"):
+                new_params, new_opt = local_update.apply(
+                    params, g, opt_state, lr, lr_vec
+                )
             mets = {
                 "loss_mean": losses.mean(),
                 "loss_std": losses.std(),
             }
+            if extended_metrics:
+                mets["loss_agent"] = losses
             if cfg.n_first:
                 mets["loss_fo_mean"] = losses[n0:].mean()
             if cfg.n_zeroth:
@@ -628,10 +660,47 @@ def build_hdo_step(
 
         # ---- mix (the Mixer interaction step — once per round) -------
         gkey = jax.random.fold_in(key, 7)
-        new_params, new_comm = mixer.mix(
-            new_params, key=gkey, step=t, comm=state.comm)
+        with phase_scope("mix"):
+            new_params, new_comm = mixer.mix(
+                new_params, key=gkey, step=t, comm=state.comm)
 
         metrics = {**mets, "lr": lr, **mixer_metrics}
+        if extended_metrics:
+            # observe-only per-agent health; nothing here feeds back
+            # into the returned state (bit-identity pinned in tests)
+            per_agent = consensus_per_agent(new_params)
+            metrics["consensus_agent"] = per_agent
+            metrics["consensus_gamma"] = per_agent.mean()
+            masks = (faultlib.fault_masks(fault_spec, t, n)
+                     if fault_spec is not None else None)
+            if masks is not None:
+                f32sum = lambda m: m.sum().astype(jnp.float32)
+                metrics["fault_drop_count"] = f32sum(~masks["alive"])
+                metrics["fault_straggler_count"] = f32sum(masks["straggler"])
+                metrics["fault_byzantine_count"] = f32sum(
+                    masks["byzantine"] & masks["alive"])
+            if payload_bytes is not None:
+                # measured traffic: only agents that actually broadcast
+                # this round put payload on the wire — the staleness
+                # stagger, drops, and stragglers all reduce it (the
+                # same refresh predicate CompressedGraphMixer applies)
+                if fault_spec is not None or cfg.staleness > 0:
+                    alive = (masks["alive"] if masks is not None
+                             else jnp.ones((n,), bool))
+                    straggler = (masks["straggler"] if masks is not None
+                                 else jnp.zeros((n,), bool))
+                    if cfg.staleness > 0:
+                        sched_mask = ((t.astype(jnp.int32)
+                                       + jnp.arange(n, dtype=jnp.int32))
+                                      % (cfg.staleness + 1)) == 0
+                    else:
+                        sched_mask = jnp.ones((n,), bool)
+                    n_bcast = (sched_mask & alive & ~straggler
+                               ).sum().astype(jnp.float32)
+                else:
+                    n_bcast = jnp.float32(n)
+                metrics["gossip_wire_bytes"] = n_bcast * jnp.float32(
+                    payload_bytes)
         return HDOState(params=new_params, opt_state=new_opt, step=t + 1,
                         comm=new_comm), metrics
 
@@ -647,3 +716,15 @@ def consensus_distance(params: PyTree) -> jnp.ndarray:
         return jnp.sum((x.astype(jnp.float32) - mu.astype(jnp.float32)) ** 2) / x.shape[0]
 
     return sum(jax.tree.leaves(jax.tree.map(gamma, params)))
+
+
+def consensus_per_agent(params: PyTree) -> jnp.ndarray:
+    """Per-agent consensus distance: the (n,) vector of
+    ||X_i - mu||^2 whose mean is ``consensus_distance`` — the
+    extended-metrics health view (which agent is drifting)."""
+    def gamma_i(x):
+        xf = x.astype(jnp.float32)
+        mu = xf.mean(axis=0, keepdims=True)
+        return ((xf - mu) ** 2).reshape(x.shape[0], -1).sum(axis=-1)
+
+    return sum(jax.tree.leaves(jax.tree.map(gamma_i, params)))

@@ -48,8 +48,19 @@ from repro import optim
 from repro.configs.base import OPTIMIZERS as OPTIMIZERS  # canonical tuple
 from repro.configs.base import HDOConfig
 from repro.kernels import ops
+from repro.obs.trace import op_scope
 
 PyTree = Any
+
+
+def _scoped_apply(name: str, apply):
+    """Trace-scope the optimizer apply (``op/<name>`` in HLO metadata /
+    xprof) — annotation only, numerics untouched."""
+    def wrapped(params, grads, opt_state, lr, lr_vec):
+        with op_scope(name):
+            return apply(params, grads, opt_state, lr, lr_vec)
+
+    return wrapped
 
 # per-agent flat size below which the kernel route is not worth a
 # (tail-padded) pallas launch — small leaves use the jnp math instead.
@@ -122,7 +133,7 @@ def make_local_update(cfg: HDOConfig, *,
             upd, new_state = opt.update(maybe_clip(grads), opt_state, params)
             return _apply_lr(params, upd, lr, lr_vec, n), new_state
 
-        return LocalUpdate("adamw", opt.init, apply)
+        return LocalUpdate("adamw", opt.init, _scoped_apply("adamw_update", apply))
 
     # ---- "sgd": the paper's momentum-SGD rule ------------------------
     opt = optim.sgd(cfg.momentum)
@@ -182,7 +193,7 @@ def make_local_update(cfg: HDOConfig, *,
         new_m = jax.tree.map(lambda u, m: u.astype(m.dtype), upd_f32, opt_state)
         return _apply_lr(params, new_m, lr, lr_vec, n), new_m
 
-    return LocalUpdate("sgd", init, apply)
+    return LocalUpdate("sgd", init, _scoped_apply("sgd_update", apply))
 
 
 def _make_plane_adamw(cfg: HDOConfig, n: int, use_kernel: bool,
@@ -234,7 +245,7 @@ def _make_plane_adamw(cfg: HDOConfig, n: int, use_kernel: bool,
             po = (pf - lrs[:, None] * upd).astype(params.dtype)
         return po, {"mu": mu, "nu": nuv, "count": c}
 
-    return LocalUpdate("adamw", init, apply)
+    return LocalUpdate("adamw", init, _scoped_apply("adamw_plane_update", apply))
 
 
 def opt_state_pspecs(cfg: HDOConfig, params_pspecs: PyTree) -> PyTree:

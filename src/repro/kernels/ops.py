@@ -18,6 +18,7 @@ from repro.kernels import opt_apply as _opt
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import zo_combine as _zo
 from repro.kernels import zo_tangent as _zt
+from repro.obs.trace import op_scope
 
 BLOCK = _zo.BLOCK
 
@@ -39,8 +40,9 @@ def zo_combine(coeffs, seed, d: int, out_dtype=jnp.float32,
                interpret: bool | None = None, n_active=None):
     interpret = _interpret_default() if interpret is None else interpret
     dp = d + ((-d) % BLOCK)
-    out = _zo.zo_combine(coeffs, seed, dp, n_active=n_active,
-                         out_dtype=out_dtype, interpret=interpret)
+    with op_scope("zo_combine"):
+        out = _zo.zo_combine(coeffs, seed, dp, n_active=n_active,
+                             out_dtype=out_dtype, interpret=interpret)
     return out[:d]
 
 
@@ -48,22 +50,25 @@ def zo_combine(coeffs, seed, d: int, out_dtype=jnp.float32,
 def zo_tangent(seed, r, d: int, dtype=jnp.float32, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
     dp = d + ((-d) % BLOCK)
-    return _zt.zo_tangent(seed, r, dp, dtype=dtype, interpret=interpret)[:d]
+    with op_scope("zo_tangent"):
+        return _zt.zo_tangent(seed, r, dp, dtype=dtype, interpret=interpret)[:d]
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def zo_perturb(x, seed, r, nu, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
     xp, d = _pad_to_block(x)
-    return _zo.zo_perturb(xp, seed, r, nu, interpret=interpret)[:d]
+    with op_scope("zo_perturb"):
+        return _zo.zo_perturb(xp, seed, r, nu, interpret=interpret)[:d]
 
 
 @partial(jax.jit, static_argnames=("rv", "out_dtype", "interpret"))
 def zo_perturb_batch(x, seed, rv: int, nu, out_dtype=None, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
     xp, d = _pad_to_block(x)
-    return _zo.zo_perturb_batch(xp, seed, rv, nu, out_dtype=out_dtype,
-                                interpret=interpret)[:, :d]
+    with op_scope("zo_perturb_batch"):
+        return _zo.zo_perturb_batch(xp, seed, rv, nu, out_dtype=out_dtype,
+                                    interpret=interpret)[:, :d]
 
 
 @partial(jax.jit, static_argnames=("d", "out_dtype", "interpret"))
@@ -74,9 +79,10 @@ def zo_combine_plane(coeffs, seed, delta, nvalid, d: int, out_dtype=jnp.float32,
     consumed whole (no pad/slice round-trip), draws ride the compact
     counter stream, pads are written as zeros."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _zo.zo_combine_plane(coeffs, seed, delta, nvalid, d,
-                                n_active=n_active, out_dtype=out_dtype,
-                                interpret=interpret)
+    with op_scope("zo_combine_plane"):
+        return _zo.zo_combine_plane(coeffs, seed, delta, nvalid, d,
+                                    n_active=n_active, out_dtype=out_dtype,
+                                    interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -84,8 +90,9 @@ def zo_perturb_plane(x, seed, r, nu, delta, nvalid, interpret: bool | None = Non
     """Plane-layout perturb: x + nu * u_r on the compact counter stream;
     pad lanes pass x through (no pad/slice round-trip)."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _zo.zo_perturb_plane(x, seed, r, nu, delta, nvalid,
-                                interpret=interpret)
+    with op_scope("zo_perturb_plane"):
+        return _zo.zo_perturb_plane(x, seed, r, nu, delta, nvalid,
+                                    interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("d", "dtype", "interpret"))
@@ -93,14 +100,16 @@ def zo_tangent_plane(seed, r, delta, nvalid, d: int, dtype=jnp.float32,
                      interpret: bool | None = None):
     """Plane-layout tangent u_r (compact counter stream, zeroed pads)."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _zt.zo_tangent_plane(seed, r, delta, nvalid, d, dtype=dtype,
-                                interpret=interpret)
+    with op_scope("zo_tangent_plane"):
+        return _zt.zo_tangent_plane(seed, r, delta, nvalid, d, dtype=dtype,
+                                    interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def gossip_avg(x, y, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
-    return _gossip.gossip_avg(x, y, interpret=interpret)
+    with op_scope("gossip_avg"):
+        return _gossip.gossip_avg(x, y, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -108,7 +117,8 @@ def gossip_mix(x, nbrs, w_self, w, interpret: bool | None = None):
     """x: (d,), nbrs: (k, d), w_self scalar, w: (k,) -> W-row mix of x
     with its k neighbors (one fused O(d) pass)."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _gmix.gossip_mix(x, nbrs, w_self, w, interpret=interpret)
+    with op_scope("gossip_mix"):
+        return _gmix.gossip_mix(x, nbrs, w_self, w, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("mode", "bits", "interpret"))
@@ -120,8 +130,9 @@ def compress_mix(x, u, nbrs, w, thr, seeds, mode: str, bits: int = 0,
     difference-form combine + error-feedback write-back in one O(d)
     pass (see kernels/compress_mix.py)."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _cmix.compress_mix(x, u, nbrs, w, thr, seeds, mode=mode,
-                              bits=bits, interpret=interpret)
+    with op_scope("compress_mix"):
+        return _cmix.compress_mix(x, u, nbrs, w, thr, seeds, mode=mode,
+                                  bits=bits, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -130,7 +141,8 @@ def opt_apply(p, g, m, lr, beta, interpret: bool | None = None):
     ``m' = beta*m + (1-beta)*g; p' = p - lr*m'`` in one O(d) pass
     (f32 accumulate; m' stored in m.dtype before p' consumes it)."""
     interpret = _interpret_default() if interpret is None else interpret
-    return _opt.opt_apply(p, g, m, lr, beta, interpret=interpret)
+    with op_scope("opt_apply"):
+        return _opt.opt_apply(p, g, m, lr, beta, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -154,10 +166,12 @@ def adamw_apply(p, g, mu, nu, lr, b1, b2, eps, wd, count,
         1.0 - b1 ** c,
         1.0 - b2 ** c,
     ])
-    return _opt.adamw_apply(p, g, mu, nu, sc, interpret=interpret)
+    with op_scope("adamw_apply"):
+        return _opt.adamw_apply(p, g, mu, nu, sc, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool | None = None):
     interpret = _interpret_default() if interpret is None else interpret
-    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    with op_scope("ssd_scan"):
+        return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -354,6 +354,10 @@ def main() -> None:
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--label", default="")
     ap.add_argument("--out", default=None, help="append JSON line to this file")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a repro.obs run-manifest record (config hash "
+                         "+ the HLO cost / roofline / memory summary) to "
+                         "this metrics sink")
     args = ap.parse_args()
 
     from repro.core.population import parse_csv
@@ -380,6 +384,20 @@ def main() -> None:
     if args.out:
         with open(args.out, "a") as f:
             f.write(line + "\n")
+    if args.metrics_out:
+        from repro.obs import MetricsLogger, make_sink, run_manifest
+
+        # the manifest identity is the HDO config when the shape builds one
+        # (train shapes); otherwise hash the variant knobs so two dryruns of
+        # the same combination produce the same config_hash
+        ident = report.get("hdo") or {
+            "arch": args.arch, "shape": args.shape,
+            "variant": report.get("variant"),
+        }
+        summary = {k: v for k, v in report.items() if k != "hdo"}
+        logger = MetricsLogger([make_sink(args.metrics_out)])
+        logger.start_run(run_manifest(ident, dryrun=summary))
+        logger.finish()
     sys.exit(0)
 
 

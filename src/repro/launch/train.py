@@ -38,6 +38,23 @@ compresses every broadcast payload with error feedback
 (staggered), and ``--fault-drop-rate`` / ``--fault-straggler-rate`` /
 ``--fault-byzantine-rate`` inject replayable per-round agent faults
 (see ``repro.topology.faults``).
+
+Observability (``repro.obs``): every log line flows through the
+schema-checked ``MetricsLogger`` (stdout JSON by default).
+``--metrics-out run.jsonl`` adds a structured sink (JSONL; ``*.csv`` /
+``-`` / ``tb:<logdir>``), writes a run-manifest header (config hash,
+plane manifest hash, jax/device identity), turns on the extended
+per-agent health metrics (per-agent loss/consensus vectors, fault
+counters, measured ``gossip_wire_bytes`` with a cumulative
+``wire_mib_total``), and samples fenced per-phase timing records
+(``phase_ms_{estimate,update,mix}`` vs the fused round, compile vs
+steady state, achieved HBM GB/s).  Wall-clock is honest: the first
+(compiling) dispatch is reported once as ``compile_s`` and ``wall_s``
+counts steady-state rounds only.  ``--profile-dir`` captures an xprof
+trace over a few steady-state rounds; ``--trace-phases`` additionally
+dispatches sampled rounds as three separately-jitted phase calls under
+``TraceAnnotation``s (observe-only — the training trajectory is
+bit-identical with all of this on or off).
 """
 from __future__ import annotations
 
@@ -67,6 +84,8 @@ from repro.core import plane as planelib
 from repro.core.population import parse_csv, tile
 from repro.data import AgentBatcher, brackets, synthetic
 from repro.models import build_model
+from repro.obs import MetricsLogger, ProfileSchedule, StdoutSink, make_sink, run_manifest
+from repro.obs import timing as obstiming
 
 
 def main() -> None:
@@ -185,6 +204,20 @@ def main() -> None:
                     help="resume from a checkpoint written by --ckpt (the "
                          "HDOConfig must match; continues bit-identically)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="structured metrics sink: JSONL path (default), "
+                         "*.csv, '-' (stdout), or 'tb:<logdir>' (guarded "
+                         "TensorBoard).  Also enables the extended "
+                         "per-agent/wire metrics and fenced per-phase "
+                         "timing samples (repro.obs)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture an xprof trace (jax.profiler start/stop) "
+                         "over a few steady-state rounds into DIR")
+    ap.add_argument("--trace-phases", action="store_true",
+                    help="on sampled rounds, additionally dispatch the round "
+                         "as three separately-jitted phase calls under "
+                         "profiler TraceAnnotations (observe-only; the "
+                         "trajectory is untouched)")
     args = ap.parse_args()
     if args.save_every and not args.ckpt:
         ap.error("--save-every needs --ckpt (there is no path to save to)")
@@ -283,8 +316,12 @@ def main() -> None:
           f"estimator={est_desc}/{args.zo_impl} "
           f"optimizer={args.optimizer}/H={args.local_steps} gossip={gossip_desc}")
 
+    # the extended per-agent/wire metrics ride only structured-sink runs
+    # (observe-only: the returned state is bit-identical either way)
+    extended = bool(args.metrics_out)
     step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params,
-                                     params_template=params))
+                                     params_template=params,
+                                     extended_metrics=extended))
     # the manifest hash fingerprints the model's leaf set/shapes/dtypes
     # for BOTH layouts, so --resume across a model change fails loudly
     man_hash = planelib.manifest_hash(planelib.build_manifest(params))
@@ -327,21 +364,85 @@ def main() -> None:
             round_batches()
         print(f"# resumed from {args.resume} at round {start}")
 
-    t0 = time.time()
-    for t in range(start, args.steps):
-        state, metrics = step_fn(state, round_batches())
-        if t % args.log_every == 0 or t == args.steps - 1:
-            gamma = consensus_distance(state.params)
-            m = {k: float(v) for k, v in metrics.items()}
-            print(json.dumps({"step": t, **{k: round(v, 5) for k, v in m.items()},
-                              "gamma": float(gamma), "wall_s": round(time.time() - t0, 1)}))
-        if args.ckpt and args.save_every and (t + 1) % args.save_every == 0:
-            checkpoint.save_state(args.ckpt, state, meta=ckpt_meta)
+    # -- observability plumbing ----------------------------------------
+    # every log line flows through the schema-checked logger (stdout
+    # keeps the pre-existing one-JSON-line-per-log format)
+    logger = MetricsLogger(
+        [StdoutSink()] + ([make_sink(args.metrics_out)]
+                          if args.metrics_out else []))
+    logger.start_run(run_manifest(
+        hcfg, manifest_hash=man_hash, arch=cfg.name, n_params=n_params,
+        steps=args.steps))
+    prof = ProfileSchedule(args.profile_dir)
+    # fenced per-phase sampling: a handful of deterministic steady-state
+    # rounds, measured on the pre-round state with outputs discarded
+    phase_fns = timer = None
+    sample_set = frozenset()
+    if extended or args.trace_phases:
+        if hcfg.local_steps == 1:
+            sample_set = frozenset(obstiming.default_sample_rounds(args.steps))
+            phase_fns = obstiming.build_phase_fns(
+                model.loss, hcfg, param_dim=n_params, params_template=params)
+            if extended:
+                timer = obstiming.PhaseTimer(
+                    phase_fns,
+                    obstiming.analytic_phase_bytes(hcfg, n_params))
+        else:
+            print("# per-phase timing/tracing skipped: local_steps > 1 has "
+                  "no three-call phase decomposition")
+
+    compile_s = None
+    wall_start = None
+    instr_s = 0.0  # time spent inside observe-only instrumentation,
+    # subtracted from wall_s so sampling never pollutes the wall clock
+    try:
+        for t in range(start, args.steps):
+            b = round_batches()
+            prof.maybe_start(t)
+            if t in sample_set and wall_start is not None:
+                t_i = time.perf_counter()
+                if timer is not None:
+                    logger.log_timing(t, timer.measure(state, b,
+                                                       fused_fn=step_fn))
+                if args.trace_phases and phase_fns is not None:
+                    # annotated three-phase dispatch of the SAME round,
+                    # outputs discarded — shows up on the host timeline
+                    obstiming.phase_round(phase_fns, state, b, annotate=True)
+                instr_s += time.perf_counter() - t_i
+            if wall_start is None:
+                # first dispatch = trace + compile + run: report it once
+                # as compile_s; wall_s counts steady-state rounds only
+                t_c = time.perf_counter()
+                state, metrics = step_fn(state, b)
+                jax.block_until_ready(state.params)
+                compile_s = time.perf_counter() - t_c
+                wall_start = time.perf_counter()
+            else:
+                state, metrics = step_fn(state, b)
+            prof.maybe_stop(t)
+            if t % args.log_every == 0 or t == args.steps - 1:
+                gamma = consensus_distance(state.params)
+                rec = dict(metrics)
+                rec["gamma"] = float(gamma)
+                rec["wall_s"] = time.perf_counter() - wall_start - instr_s
+                if compile_s is not None:
+                    rec["compile_s"] = compile_s
+                    compile_s = None
+                logger.log_round(t, rec)
+            if args.ckpt and args.save_every and (t + 1) % args.save_every == 0:
+                checkpoint.save_state(args.ckpt, state, meta=ckpt_meta)
+    finally:
+        prof.stop()
 
     if args.ckpt:
         checkpoint.save_state(args.ckpt, state, meta=ckpt_meta)
         print(f"# checkpoint written to {args.ckpt}.npz "
               f"(full HDOState at round {int(state.step)})")
+    logger.finish({
+        "rounds": int(state.step),
+        "wall_s": round(time.perf_counter() - wall_start - instr_s, 3)
+        if wall_start is not None else 0.0,
+    })
 
 
 if __name__ == "__main__":

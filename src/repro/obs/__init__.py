@@ -1,0 +1,59 @@
+"""Runtime observability for the HDO pipeline.
+
+Three surfaces, one per question:
+
+  * ``obs.metrics`` — WHAT happened: the versioned metric schema
+    registry, the ``MetricsLogger`` with pluggable sinks (JSONL / CSV /
+    stdout / guarded TensorBoard), run manifests, artifact validation.
+  * ``obs.trace`` — WHERE in the program: ``jax.named_scope`` phase/op
+    scopes inside the jitted step and the xprof capture window
+    (``--profile-dir``).
+  * ``obs.timing`` — HOW LONG, honestly: fenced per-phase wall-clock
+    against a decomposition pinned bit-identical to the fused step,
+    with achieved-HBM-GB/s against the kernel_bench analytic model.
+    (Imported lazily — it pulls in ``repro.core``; ``trace`` and
+    ``metrics`` stay dependency-light so core/kernels can import them.)
+"""
+from repro.obs.metrics import (  # noqa: F401
+    REGISTRY,
+    SCHEMA_VERSION,
+    JSONLSink,
+    CSVSink,
+    MetricsLogger,
+    StdoutSink,
+    TensorBoardSink,
+    make_sink,
+    run_manifest,
+    spec_for,
+    undeclared,
+    validate_jsonl,
+)
+from repro.obs.trace import (  # noqa: F401
+    PHASES,
+    ProfileSchedule,
+    host_annotation,
+    op_scope,
+    phase_scope,
+    profile_window,
+)
+
+__all__ = [
+    "REGISTRY",
+    "SCHEMA_VERSION",
+    "MetricsLogger",
+    "JSONLSink",
+    "CSVSink",
+    "StdoutSink",
+    "TensorBoardSink",
+    "make_sink",
+    "run_manifest",
+    "spec_for",
+    "undeclared",
+    "validate_jsonl",
+    "PHASES",
+    "ProfileSchedule",
+    "host_annotation",
+    "op_scope",
+    "phase_scope",
+    "profile_window",
+]

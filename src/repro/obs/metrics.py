@@ -1,0 +1,599 @@
+"""Structured metrics pipeline: versioned schema registry + sinks.
+
+Every runtime metric the repo emits — the HDO step's training metrics,
+the launch drivers' wall-clock accounting, the fenced per-phase timing
+records, the serve driver's per-request stats — is declared ONCE in
+``REGISTRY`` below with its type, unit, and pipeline phase.  The
+``MetricsLogger`` refuses undeclared keys at runtime (``strict``), the
+drift test (tests/test_obs.py) walks ``build_hdo_step``'s emitted keys
+across dispatch x zo_impl x param_layout x compression, and the
+rendered schema table in ``docs/observability.md`` is generated from
+the same registry (``--write`` / ``--check``, the ``configs.knobs``
+pattern) — so code, runtime validation, and docs cannot drift apart.
+
+A run starts with a **manifest** record (``run_manifest``): schema
+version, a stable hash of the ``HDOConfig``, the parameter-plane
+``manifest_hash``, jax version, backend and device kind — enough to
+interpret every later record without the producing process.  JSONL
+records are self-describing via ``record``:
+
+    {"record": "manifest", "schema_version": ..., "config_hash": ...}
+    {"record": "metrics", "step": 0, "loss_mean": ..., ...}
+    {"record": "phase_timing", "step": 10, "phase_ms_estimate": ...}
+    {"record": "serve_request", "request_id": 0, "latency_ms": ...}
+    {"record": "final", ...}
+
+Sinks are pluggable: ``JSONLSink`` (the artifact format CI uploads),
+``CSVSink`` (flat metrics records for spreadsheet triage),
+``StdoutSink`` (the launch drivers' log lines), and an optional
+``TensorBoardSink`` that degrades with a clear error when no
+tensorboard writer is importable (never a hard dependency).
+
+``python -m repro.obs.metrics --validate run.jsonl`` checks a produced
+artifact: manifest header first, schema version match, every key
+declared, ``step`` monotone — the CI slow lane runs it on the 20-round
+smoke artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import fnmatch
+import hashlib
+import json
+import sys
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "MetricSpec",
+    "REGISTRY",
+    "SINK_KINDS",
+    "spec_for",
+    "undeclared",
+    "MetricsLogger",
+    "JSONLSink",
+    "CSVSink",
+    "StdoutSink",
+    "TensorBoardSink",
+    "make_sink",
+    "run_manifest",
+    "config_hash",
+    "validate_jsonl",
+    "schema_table_markdown",
+]
+
+# bump when a key is added/removed/retyped; recorded in every manifest
+SCHEMA_VERSION = 1
+
+SINK_KINDS = ("jsonl", "csv", "stdout", "tensorboard")
+
+# value types: "f32" scalar float, "i32" scalar integer,
+# "vec_f32" per-agent float vector (length n_agents)
+_TYPES = ("f32", "i32", "vec_f32")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One declared metric key.  ``key`` may hold ``*`` wildcards for
+    per-group families (``grad_var_zo_*`` matches every estimator-kind
+    group); ``phase`` locates the key in the estimate -> update -> mix
+    round (or ``round``/``system``/``serve`` for driver-level keys)."""
+
+    key: str
+    type: str
+    unit: str
+    phase: str
+    desc: str
+
+    def __post_init__(self):
+        if self.type not in _TYPES:
+            raise ValueError(f"{self.key}: bad type {self.type!r}")
+
+
+_S = MetricSpec
+
+REGISTRY: Tuple[MetricSpec, ...] = (
+    # ---- estimate phase ---------------------------------------------------
+    _S("loss_mean", "f32", "nats", "estimate", "population mean training loss"),
+    _S("loss_std", "f32", "nats", "estimate", "population loss standard deviation"),
+    _S("loss_fo_mean", "f32", "nats", "estimate", "mean loss over the FO cohort"),
+    _S("loss_zo_mean", "f32", "nats", "estimate", "mean loss over the ZO cohort"),
+    _S("loss_zo_*_mean", "f32", "nats", "estimate",
+       "per-estimator-kind-group mean loss (heterogeneous cohorts)"),
+    _S("grad_var_zo_*", "f32", "grad^2", "estimate",
+       "per-kind-group gradient-estimate variance (heterogeneous cohorts)"),
+    _S("grad_var_fo", "f32", "grad^2", "estimate",
+       "FO-cohort gradient variance (heterogeneous cohorts)"),
+    _S("loss_agent", "vec_f32", "nats", "estimate",
+       "per-agent loss vector (extended metrics)"),
+    # ---- update phase -----------------------------------------------------
+    _S("lr", "f32", "1/step", "update", "the shared learning-rate schedule value"),
+    # ---- mix phase --------------------------------------------------------
+    _S("gossip_lambda2", "f32", "1", "mix", "graph slem (second-largest |eigenvalue|)"),
+    _S("gossip_spectral_gap", "f32", "1", "mix", "1 - slem of the mixing matrix"),
+    _S("gossip_gamma_contraction", "f32", "1", "mix",
+       "predicted per-round Gamma contraction (effective slem^2)"),
+    _S("gossip_effective_lambda2", "f32", "1", "mix",
+       "compression/staleness-adjusted effective slem"),
+    _S("gossip_compress_delta", "f32", "1", "mix",
+       "compressor energy-fraction delta in (0, 1]"),
+    _S("gossip_staleness", "f32", "rounds", "mix", "configured staleness bound tau"),
+    _S("gossip_wire_bytes", "f32", "bytes", "mix",
+       "payload bytes the whole population broadcasts this round "
+       "(measured config: Compressor.bytes_on_wire, dense 4*d otherwise)"),
+    _S("wire_mib_total", "f32", "MiB", "mix",
+       "cumulative on-wire traffic since round 0 (logger-accumulated)"),
+    _S("fault_drop_count", "f32", "agents", "mix",
+       "agents dropped (offline) this round by the fault schedule"),
+    _S("fault_straggler_count", "f32", "agents", "mix",
+       "agents whose broadcast failed to land this round"),
+    _S("fault_byzantine_count", "f32", "agents", "mix",
+       "agents transmitting corrupted payloads this round"),
+    # ---- round level ------------------------------------------------------
+    _S("step", "i32", "rounds", "round", "global round index"),
+    _S("consensus_gamma", "f32", "param^2", "round",
+       "Gamma_t = (1/n) sum_i ||x_i - mu||^2 (in-step, extended metrics)"),
+    _S("consensus_agent", "vec_f32", "param^2", "round",
+       "per-agent ||x_i - mu||^2 (extended metrics)"),
+    _S("gamma", "f32", "param^2", "round",
+       "consensus distance (host-side, the launch drivers' log line)"),
+    _S("round_ms", "f32", "ms", "round",
+       "fenced steady-state wall time of one fused round"),
+    _S("wall_s", "f32", "s", "round",
+       "steady-state wall clock since the first post-compile round"),
+    # ---- system (once per run) -------------------------------------------
+    _S("compile_s", "f32", "s", "system",
+       "first-call (trace+compile) time of the jitted step, reported once"),
+    # ---- fenced per-phase timing records ---------------------------------
+    _S("phase_ms_estimate", "f32", "ms", "estimate",
+       "fenced wall time of the estimate phase (separately jitted call)"),
+    _S("phase_ms_update", "f32", "ms", "update",
+       "fenced wall time of the local-update phase"),
+    _S("phase_ms_mix", "f32", "ms", "mix",
+       "fenced wall time of the mix phase"),
+    _S("phase_ms_total", "f32", "ms", "round",
+       "sum of the three fenced phase times"),
+    _S("step_ms_fused", "f32", "ms", "round",
+       "fenced wall time of the fused (single-jit) round, same state"),
+    _S("phase_compile_ms_*", "f32", "ms", "system",
+       "first-call (compile) time per separately-jitted phase"),
+    _S("hbm_bytes_update", "f32", "bytes", "update",
+       "analytic HBM traffic of the update phase (kernel_bench model)"),
+    _S("hbm_bytes_mix", "f32", "bytes", "mix",
+       "analytic HBM traffic of the mix phase (kernel_bench model)"),
+    _S("hbm_gbps_update", "f32", "GB/s", "update",
+       "achieved HBM bandwidth: analytic bytes / fenced phase time"),
+    _S("hbm_gbps_mix", "f32", "GB/s", "mix",
+       "achieved HBM bandwidth: analytic bytes / fenced phase time"),
+    # ---- serve ------------------------------------------------------------
+    _S("request_id", "i32", "1", "serve", "request (sequence) index in the batch"),
+    _S("prompt_tokens", "i32", "tokens", "serve", "prompt length"),
+    _S("gen_tokens", "i32", "tokens", "serve", "generated tokens"),
+    _S("latency_ms", "f32", "ms", "serve", "end-to-end request latency"),
+    _S("tokens_per_s", "f32", "tokens/s", "serve", "per-request decode throughput"),
+)
+
+_EXACT = {s.key: s for s in REGISTRY if "*" not in s.key}
+_PATTERNS = [s for s in REGISTRY if "*" in s.key]
+
+
+def spec_for(key: str) -> Optional[MetricSpec]:
+    """The declared spec for ``key`` (exact match first, then the ``*``
+    families), or None for an undeclared key."""
+    spec = _EXACT.get(key)
+    if spec is not None:
+        return spec
+    for s in _PATTERNS:
+        if fnmatch.fnmatchcase(key, s.key):
+            return s
+    return None
+
+
+def undeclared(keys: Iterable[str]) -> List[str]:
+    """The subset of ``keys`` absent from the registry (sorted)."""
+    return sorted(k for k in set(keys) if spec_for(k) is None)
+
+
+# ---------------------------------------------------------------------------
+# run manifest
+# ---------------------------------------------------------------------------
+
+
+def config_hash(cfg) -> str:
+    """Stable short hash of an ``HDOConfig`` (or any dataclass/dict):
+    sha256 over the sorted-key JSON of its fields — the run identity the
+    manifest records (msgpack/json round-trips normalize tuples to
+    lists, matching the checkpoint meta comparison)."""
+    if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+        cfg = dataclasses.asdict(cfg)
+    blob = json.dumps(cfg, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def run_manifest(cfg=None, *, manifest_hash: Optional[str] = None,
+                 **extra: Any) -> Dict[str, Any]:
+    """The run-header record: schema version + config hash + plane
+    ``manifest_hash`` + jax/device identity (+ caller extras, e.g. the
+    dryrun HLO cost summary or the CLI arch name)."""
+    import jax
+
+    devs = jax.devices()
+    out: Dict[str, Any] = {
+        "record": "manifest",
+        "schema_version": SCHEMA_VERSION,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "unknown",
+        "n_devices": len(devs),
+    }
+    if cfg is not None:
+        out["config_hash"] = config_hash(cfg)
+        if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+            out["hdo"] = dataclasses.asdict(cfg)
+    if manifest_hash is not None:
+        out["manifest_hash"] = manifest_hash
+    out.update(extra)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+
+class JSONLSink:
+    """One JSON object per line, flushed per record (the smoke-scale
+    artifact format; CI uploads and validates it)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "w")
+
+    def write(self, record: Dict[str, Any]) -> None:
+        self._f.write(json.dumps(record) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class CSVSink:
+    """Flat CSV of the ``metrics`` records only (header from the first
+    record; later records fill missing columns blank and DROP novel
+    keys — CSV cannot grow columns mid-file; use JSONL for full
+    fidelity).  Vector values are JSON-encoded into their cell."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "w")
+        self._header: Optional[List[str]] = None
+
+    def write(self, record: Dict[str, Any]) -> None:
+        if record.get("record") != "metrics":
+            return
+        row = {k: v for k, v in record.items() if k != "record"}
+        if self._header is None:
+            self._header = list(row)
+            self._f.write(",".join(self._header) + "\n")
+        cells = []
+        for k in self._header:
+            v = row.get(k, "")
+            if isinstance(v, (list, tuple)):
+                v = '"' + json.dumps(list(v)).replace('"', '""') + '"'
+            cells.append(str(v))
+        self._f.write(",".join(cells) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class StdoutSink:
+    """The launch drivers' log line: every record printed as one JSON
+    line (manifests prefixed ``# `` so step streams stay grep-able)."""
+
+    def write(self, record: Dict[str, Any]) -> None:
+        if record.get("record") in ("manifest", "final"):
+            print("# " + json.dumps(record))
+        else:
+            print(json.dumps({k: v for k, v in record.items()
+                              if k != "record"}))
+
+    def close(self) -> None:
+        pass
+
+
+class TensorBoardSink:
+    """Optional scalar sink; imports a SummaryWriter lazily so the repo
+    never hard-depends on tensorboard (guarded per the no-new-deps
+    rule: a clear error at construction, not an import-time crash)."""
+
+    def __init__(self, logdir: str):
+        writer_cls = None
+        try:
+            from tensorboardX import SummaryWriter as writer_cls  # type: ignore
+        except ImportError:
+            try:
+                from torch.utils.tensorboard import SummaryWriter as writer_cls  # type: ignore
+            except ImportError:
+                pass
+        if writer_cls is None:
+            raise RuntimeError(
+                "TensorBoardSink needs tensorboardX or torch.utils."
+                "tensorboard; neither is importable — use the jsonl/csv "
+                "sinks instead"
+            )
+        self._w = writer_cls(logdir)
+
+    def write(self, record: Dict[str, Any]) -> None:
+        if record.get("record") not in ("metrics", "phase_timing"):
+            return
+        step = int(record.get("step", 0))
+        for k, v in record.items():
+            if k in ("record", "step"):
+                continue
+            if isinstance(v, (int, float)):
+                self._w.add_scalar(k, float(v), step)
+
+    def close(self) -> None:
+        self._w.close()
+
+
+def make_sink(spec: str):
+    """Sink from a ``--metrics-out`` value: ``*.csv`` -> CSVSink,
+    ``tb:<logdir>`` -> TensorBoardSink, ``-`` -> StdoutSink, anything
+    else -> JSONLSink."""
+    if spec == "-":
+        return StdoutSink()
+    if spec.startswith("tb:"):
+        return TensorBoardSink(spec[3:])
+    if spec.endswith(".csv"):
+        return CSVSink(spec)
+    return JSONLSink(spec)
+
+
+# ---------------------------------------------------------------------------
+# the logger
+# ---------------------------------------------------------------------------
+
+
+def _coerce(key: str, value: Any) -> Any:
+    """JSON-able python value for one metric (jax/np arrays -> float /
+    int / list of floats), type-checked against the declared spec."""
+    spec = spec_for(key)
+    if hasattr(value, "tolist"):  # jax / numpy array or scalar
+        value = value.tolist()
+    if spec is not None and spec.type == "vec_f32":
+        if not isinstance(value, (list, tuple)):
+            raise TypeError(f"{key}: declared vec_f32 but got scalar {value!r}")
+        return [float(v) for v in value]
+    if isinstance(value, (list, tuple)):
+        raise TypeError(f"{key}: declared scalar but got a vector of "
+                        f"length {len(value)}")
+    if spec is not None and spec.type == "i32":
+        return int(value)
+    return round(float(value), 6)
+
+
+class MetricsLogger:
+    """The runtime metrics pipeline: schema-checked records fanned out
+    to the configured sinks.
+
+    A logger with no sinks is inert: ``enabled`` is False and every
+    ``log_*`` call returns immediately, so default runs pay nothing
+    (and, by construction, cannot perturb the jitted step — the logger
+    only ever *reads* metric values; tests pin the stronger claim that
+    the step's arrays are bit-identical with metrics plumbing on/off).
+
+    ``strict=True`` (default) raises on undeclared keys — the runtime
+    half of the schema-drift gate.  The logger also owns the cumulative
+    accounting that needs cross-round state, e.g. ``wire_mib_total``
+    accumulated from per-round ``gossip_wire_bytes``.
+    """
+
+    def __init__(self, sinks: Sequence[Any] = (), *, strict: bool = True):
+        self.sinks = list(sinks)
+        self.strict = strict
+        self._wire_bytes = 0.0
+        self._wrote_manifest = False
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.sinks)
+
+    # -- record writers ----------------------------------------------------
+    def _emit(self, record: Dict[str, Any]) -> None:
+        for s in self.sinks:
+            s.write(record)
+
+    def _check(self, metrics: Dict[str, Any]) -> None:
+        bad = undeclared(metrics.keys())
+        if bad and self.strict:
+            raise KeyError(
+                f"undeclared metric keys {bad}: declare them in "
+                f"repro.obs.metrics.REGISTRY (and bump SCHEMA_VERSION) "
+                f"before emitting"
+            )
+
+    def start_run(self, manifest: Dict[str, Any]) -> None:
+        """Write the run-header record (must be the first record; see
+        ``run_manifest``)."""
+        if not self.enabled:
+            return
+        rec = dict(manifest)
+        rec.setdefault("record", "manifest")
+        rec.setdefault("schema_version", SCHEMA_VERSION)
+        self._emit(rec)
+        self._wrote_manifest = True
+
+    def log_round(self, step: int, metrics: Dict[str, Any]) -> None:
+        """One ``metrics`` record for round ``step``.  Accumulates
+        ``wire_mib_total`` whenever ``gossip_wire_bytes`` is present."""
+        if not self.enabled:
+            return
+        self._check(metrics)
+        rec: Dict[str, Any] = {"record": "metrics", "step": int(step)}
+        for k, v in metrics.items():
+            rec[k] = _coerce(k, v)
+        if "gossip_wire_bytes" in rec:
+            self._wire_bytes += rec["gossip_wire_bytes"]
+            rec["wire_mib_total"] = round(self._wire_bytes / (1 << 20), 6)
+        self._emit(rec)
+
+    def log_timing(self, step: int, timing: Dict[str, Any]) -> None:
+        """One fenced ``phase_timing`` record (see ``repro.obs.timing``)."""
+        if not self.enabled:
+            return
+        self._check(timing)
+        rec = {"record": "phase_timing", "step": int(step)}
+        rec.update({k: _coerce(k, v) for k, v in timing.items()})
+        self._emit(rec)
+
+    def log_request(self, payload: Dict[str, Any]) -> None:
+        """One ``serve_request`` record (the serve driver's per-request
+        latency / token accounting)."""
+        if not self.enabled:
+            return
+        self._check(payload)
+        rec = {"record": "serve_request"}
+        rec.update({k: _coerce(k, v) for k, v in payload.items()})
+        self._emit(rec)
+
+    def finish(self, summary: Optional[Dict[str, Any]] = None) -> None:
+        """Write the ``final`` record (freeform summary) and close all
+        sinks.  Idempotent enough for ``finally`` blocks."""
+        if self.enabled and summary is not None:
+            rec = {"record": "final"}
+            rec.update(summary)
+            self._emit(rec)
+        for s in self.sinks:
+            s.close()
+        self.sinks = []
+
+
+# ---------------------------------------------------------------------------
+# artifact validation (CI slow lane) + generated docs table
+# ---------------------------------------------------------------------------
+
+
+def validate_jsonl(path: str) -> List[str]:
+    """Validate a metrics JSONL artifact; returns a list of problems
+    (empty = valid).  Checks: manifest header first with a matching
+    schema version and a config hash, every metric/timing key declared,
+    and the ``metrics`` records' ``step`` strictly monotone."""
+    problems: List[str] = []
+    with open(path) as f:
+        lines = [ln for ln in (l.strip() for l in f) if ln]
+    if not lines:
+        return [f"{path}: empty file"]
+    try:
+        records = [json.loads(ln) for ln in lines]
+    except json.JSONDecodeError as e:
+        return [f"{path}: invalid JSON: {e}"]
+    head = records[0]
+    if head.get("record") != "manifest":
+        problems.append("first record is not the run manifest")
+    else:
+        if head.get("schema_version") != SCHEMA_VERSION:
+            problems.append(
+                f"manifest schema_version {head.get('schema_version')} != "
+                f"registry version {SCHEMA_VERSION}")
+        for field in ("config_hash", "jax_version", "backend"):
+            if field not in head:
+                problems.append(f"manifest missing {field!r}")
+    last_step = None
+    for i, rec in enumerate(records[1:], start=2):
+        kind = rec.get("record")
+        if kind in ("metrics", "phase_timing"):
+            bad = undeclared(k for k in rec if k != "record")
+            if bad:
+                problems.append(f"line {i}: undeclared keys {bad}")
+        if kind == "metrics":
+            step = rec.get("step")
+            if not isinstance(step, int):
+                problems.append(f"line {i}: metrics record without int step")
+            elif last_step is not None and step <= last_step:
+                problems.append(
+                    f"line {i}: step {step} not monotone (prev {last_step})")
+            else:
+                last_step = step
+    return problems
+
+
+BEGIN = ("<!-- metric-schema:begin (generated by `python -m repro.obs.metrics "
+         "--write docs/observability.md` — do not edit by hand) -->")
+END = "<!-- metric-schema:end -->"
+
+
+def schema_table_markdown() -> str:
+    lines = [
+        f"Schema version **{SCHEMA_VERSION}** "
+        f"(`repro.obs.metrics.SCHEMA_VERSION`).",
+        "",
+        "| key | type | unit | phase | meaning |",
+        "|---|---|---|---|---|",
+    ]
+    for s in REGISTRY:
+        key = s.key.replace("*", "\\*")
+        desc = s.desc.replace("|", "\\|")
+        lines.append(f"| `{key}` | {s.type} | {s.unit} | {s.phase} | {desc} |")
+    return "\n".join(lines)
+
+
+def rendered_section() -> str:
+    return f"{BEGIN}\n{schema_table_markdown()}\n{END}"
+
+
+def inject(text: str) -> str:
+    start, end = text.find(BEGIN), text.find(END)
+    if start < 0 or end < 0 or end < start:
+        raise SystemExit(
+            f"metric-schema markers missing or out of order "
+            f"(need {BEGIN!r} before {END!r})"
+        )
+    return text[:start] + rendered_section() + text[end + len(END):]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="docs/observability.md")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--write", action="store_true",
+                      help="rewrite the marked schema table in place")
+    mode.add_argument("--check", action="store_true",
+                      help="exit 1 if the marked schema table is stale")
+    mode.add_argument("--validate", action="store_true",
+                      help="validate PATH as a metrics JSONL artifact")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        problems = validate_jsonl(args.path)
+        for p in problems:
+            print(f"{args.path}: {p}", file=sys.stderr)
+        if not problems:
+            print(f"{args.path}: valid (schema v{SCHEMA_VERSION})")
+        return 1 if problems else 0
+
+    with open(args.path) as f:
+        text = f.read()
+    new = inject(text)
+    if args.write:
+        if new != text:
+            with open(args.path, "w") as f:
+                f.write(new)
+            print(f"{args.path}: metric schema table rewritten")
+        else:
+            print(f"{args.path}: metric schema table already current")
+        return 0
+    if new != text:
+        print(f"{args.path}: metric schema table is stale — run "
+              f"`PYTHONPATH=src python -m repro.obs.metrics --write {args.path}`",
+              file=sys.stderr)
+        return 1
+    print(f"{args.path}: metric schema table is current")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,311 @@
+"""Fenced per-phase wall-clock for the HDO round.
+
+``launch/train.py`` used to report one ``wall_s`` that (a) included
+compile time and (b) said nothing about WHERE a round spends its time.
+This module splits the round honestly:
+
+  * ``build_phase_fns`` rebuilds the fused step's three phases —
+    estimate, local update, mix — as separately-jittable calls **from
+    the same builders** ``build_hdo_step`` composes
+    (``build_estimate_phase`` / ``make_local_update`` / ``make_mixer``)
+    with the identical PRNG-key and nu/lr derivations, so
+    ``phase_round`` (estimate -> update -> mix, three dispatches) is
+    bit-identical to one fused ``step()`` call on the same state —
+    pinned by tests/test_obs.py, which is what makes the per-phase
+    numbers an honest decomposition rather than a lookalike.
+
+  * ``PhaseTimer`` measures sampled rounds with ``block_until_ready``
+    fences around each phase call: ``phase_ms_{estimate,update,mix}``,
+    their sum, the fused round on the same state (``step_ms_fused``),
+    and the compile-vs-steady-state split (``phase_compile_ms_*`` on
+    the first sample only).  Phase calls run on the *pre-round* state
+    and their outputs are discarded, so sampling never perturbs the
+    training trajectory.
+
+  * ``analytic_phase_bytes`` prices the update/mix phases with the
+    same analytic HBM-traffic model ``benchmarks/kernel_bench.py``
+    quotes for the fused kernels, so the timer can derive achieved
+    HBM GB/s (``hbm_gbps_update`` / ``hbm_gbps_mix``) next to the
+    fenced times.  (The estimate phase has no clean closed form — its
+    traffic depends on the model's activation footprint — so it
+    deliberately gets no GB/s number rather than a made-up one.)
+
+Restrictions: ``local_steps == 1`` only (H > 1 interleaves H
+estimate+update pairs inside one ``lax.scan`` — there is no three-call
+decomposition of that round; callers should skip sampling).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.trace import host_annotation
+
+PyTree = Any
+
+
+class PhaseFns(NamedTuple):
+    """The three separately-jittable phase calls of one HDO round.
+
+    ``estimate(state, batches) -> (losses, g)``;
+    ``update(state, g) -> (new_params, new_opt_state)``;
+    ``mix(state, new_params) -> (mixed_params, new_comm)``.
+    All three read the round index from ``state.step``, deriving the
+    same folded keys / schedule values the fused step derives.
+    """
+
+    estimate: Callable[..., Tuple[jnp.ndarray, PyTree]]
+    update: Callable[..., Tuple[PyTree, PyTree]]
+    mix: Callable[..., Tuple[PyTree, PyTree]]
+    mixer_diagnostics: Dict[str, float]
+
+
+def build_phase_fns(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    cfg,
+    *,
+    param_dim: Optional[int] = None,
+    mesh=None,
+    population_axes: Tuple[str, ...] = (),
+    params_template: Optional[PyTree] = None,
+    jit: bool = True,
+) -> PhaseFns:
+    """The fused step's phases as standalone calls (same builders, same
+    key stream — see module docstring).  ``jit=True`` returns each
+    phase already jitted (the fenced-timing shape)."""
+    from repro.configs.base import HDOConfig  # noqa: F401  (type anchor)
+    from repro.core import hdo, localupdate, population, schedules
+    from repro.core import plane as planelib
+    from repro.topology.mixer import make_mixer
+
+    if cfg.local_steps != 1:
+        raise ValueError(
+            f"per-phase decomposition needs local_steps == 1 (H="
+            f"{cfg.local_steps} interleaves H estimate+update pairs in "
+            f"one scan — there is no three-call split of that round)"
+        )
+
+    n = cfg.n_agents
+    pop = population.resolve_population(cfg)
+    manifest = None
+    if cfg.param_layout == "plane":
+        if params_template is None:
+            raise ValueError("param_layout='plane' needs params_template")
+        manifest = planelib.build_manifest(params_template)
+    sched = schedules.warmup_cosine(
+        pop.lr0 if pop.homogeneous else cfg.lr,
+        cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine,
+    )
+    mixer = make_mixer(cfg, mesh=mesh, population_axes=population_axes,
+                       param_dim=param_dim)
+    estimate_phase = hdo.build_estimate_phase(
+        loss_fn, cfg, mesh=mesh, population_axes=population_axes,
+        manifest=manifest,
+    )
+    local_update = localupdate.make_local_update(cfg)
+
+    if pop.homogeneous:
+        lr_rel = sigma_tab = None
+    else:
+        lr_rel = jnp.asarray(pop.lr_array() / np.float32(cfg.lr))
+        sigma_tab = jnp.asarray(pop.sigma_array())
+
+    # the exact scalar derivations of hdo.build_hdo_step.step — one
+    # helper shared by all three phases so the decomposition cannot
+    # drift from the fused step's schedule / smoothing values
+    def _round_scalars(t):
+        lr = sched(t)
+        nu = (
+            lr / jnp.sqrt(jnp.float32(param_dim))
+            if (cfg.nu_from_lr and param_dim)
+            else jnp.float32(pop.sigma0)
+        )
+        lr_vec = None if pop.homogeneous else lr * lr_rel
+        n0 = cfg.n_zeroth
+        if pop.homogeneous:
+            nu_vec = None
+        elif cfg.nu_from_lr and param_dim:
+            nu_vec = lr_vec[:n0] / jnp.sqrt(jnp.float32(param_dim))
+        else:
+            nu_vec = sigma_tab
+        return lr, nu, lr_vec, nu_vec
+
+    def estimate(state, batches):
+        t = state.step
+        _, nu, _, nu_vec = _round_scalars(t)
+        skey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
+        agent_keys = jax.random.split(skey, n)
+        return estimate_phase(state.params, batches, agent_keys, nu, nu_vec)
+
+    def update(state, g):
+        lr, _, lr_vec, _ = _round_scalars(state.step)
+        return local_update.apply(state.params, g, state.opt_state, lr, lr_vec)
+
+    def mix(state, new_params):
+        t = state.step
+        gkey = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t), 7)
+        return mixer.mix(new_params, key=gkey, step=t, comm=state.comm)
+
+    if jit:
+        estimate, update, mix = jax.jit(estimate), jax.jit(update), jax.jit(mix)
+    return PhaseFns(estimate, update, mix, dict(mixer.diagnostics()))
+
+
+def phase_round(fns: PhaseFns, state, batches, *, annotate: bool = False):
+    """One full HDO round through the three phase calls; returns
+    ``(new_state, losses)``.  Bit-identical to the fused step on the
+    same state (tests/test_obs.py) — the honesty contract behind the
+    fenced numbers.  ``annotate=True`` wraps each dispatch in a
+    ``jax.profiler.TraceAnnotation`` (the ``--trace-phases`` view)."""
+    from repro.core.hdo import HDOState
+
+    with host_annotation("hdo/estimate", annotate):
+        losses, g = fns.estimate(state, batches)
+    with host_annotation("hdo/update", annotate):
+        new_params, new_opt = fns.update(state, g)
+    with host_annotation("hdo/mix", annotate):
+        mixed, new_comm = fns.mix(state, new_params)
+    return HDOState(params=mixed, opt_state=new_opt, step=state.step + 1,
+                    comm=new_comm), losses
+
+
+def analytic_phase_bytes(cfg, param_dim: Optional[int]) -> Dict[str, int]:
+    """Analytic HBM traffic of the update/mix phases for one round of
+    the whole population — the ``benchmarks/kernel_bench.py`` model
+    (``msz`` = momentum element width):
+
+      * update, sgd+momentum: the fused apply streams
+        ``(12 + 2*msz) * d`` per agent (read p, g; write p; read+write
+        m); momentum=0 drops the momentum stream (``12 * d``); adamw
+        reads p, g, mu, nu and writes p, mu, nu:
+        ``(20 + 2*msz) * d``.
+      * mix, static-graph gossip: ``gossip_mix`` reads x + k neighbor
+        rows and writes x: ``(k + 2) * d * 4``; the compressed fresh
+        round (``compress_mix``) additionally reads the send basis and
+        writes the residual: ``(k + 4) * d * 4``.
+
+    Phases without a clean model (dense random pairing, all_reduce,
+    time-varying graphs, the estimate phase) are omitted rather than
+    priced wrongly.  Empty dict when ``param_dim`` is unknown.
+    """
+    if not param_dim:
+        return {}
+    out: Dict[str, int] = {}
+    n, d = cfg.n_agents, int(param_dim)
+    msz = 2 if cfg.momentum_dtype == "bfloat16" else 4
+    if cfg.optimizer == "adamw":
+        out["hbm_bytes_update"] = n * (20 + 2 * msz) * d
+    elif cfg.momentum > 0.0:
+        out["hbm_bytes_update"] = n * (12 + 2 * msz) * d
+    else:
+        out["hbm_bytes_update"] = n * 12 * d
+    if cfg.gossip in ("graph", "graph_ppermute") and cfg.topology in (
+            "ring", "torus", "hypercube", "erdos_renyi"):
+        from repro.topology.graphs import make_topology
+
+        topo = make_topology(cfg.topology, n, p=cfg.topology_p,
+                             seed=cfg.topology_seed,
+                             rounds=cfg.topology_rounds)
+        k = topo.k
+        per_agent = ((k + 4) if cfg.compression != "none" else (k + 2)) * d * 4
+        out["hbm_bytes_mix"] = n * per_agent
+    return out
+
+
+def default_sample_rounds(steps: int) -> Tuple[int, ...]:
+    """The rounds a driver samples fenced timing at: one early
+    steady-state round (past compile + allocator warmup) plus mid- and
+    late-run samples — deterministic, a handful per run regardless of
+    length."""
+    if steps <= 1:
+        return ()
+    cand = {min(3, steps - 1), steps // 2, steps - 2}
+    return tuple(sorted(t for t in cand if 0 < t < steps))
+
+
+def _fence(tree) -> None:
+    for leaf in jax.tree.leaves(tree):
+        jax.block_until_ready(leaf)
+
+
+class PhaseTimer:
+    """Fenced wall-clock over the three phase calls.
+
+    ``measure(state, batches)`` runs estimate/update/mix on the given
+    (pre-round) state with a ``block_until_ready`` fence after each,
+    discarding outputs — the trajectory is untouched.  The FIRST call
+    also reports each phase's compile time (``phase_compile_ms_*``:
+    first dispatch minus a steady re-dispatch); later calls are pure
+    steady-state.  Pass ``fused_fn`` (the driver's jitted step, already
+    warm) to record ``step_ms_fused`` for the same round — the number
+    the per-phase sum is validated against (acceptance: within 20%).
+    """
+
+    def __init__(self, fns: PhaseFns,
+                 analytic_bytes: Optional[Dict[str, int]] = None,
+                 *, reps: int = 5):
+        if reps < 1:
+            raise ValueError(f"reps must be >= 1, got {reps}")
+        self.fns = fns
+        self.analytic_bytes = dict(analytic_bytes or {})
+        self.reps = reps
+        self._compiled = False
+
+    def _timed(self, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _fence(out)
+        return out, (time.perf_counter() - t0) * 1e3
+
+    def measure(self, state, batches,
+                fused_fn: Optional[Callable] = None) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        if not self._compiled:
+            # first dispatch per phase = trace + compile + run
+            (_, g), c_est = self._timed(self.fns.estimate, state, batches)
+            (new_p, _), c_upd = self._timed(self.fns.update, state, g)
+            _, c_mix = self._timed(self.fns.mix, state, new_p)
+            self._compiled = True
+            firsts = {"estimate": c_est, "update": c_upd, "mix": c_mix}
+        else:
+            firsts = None
+
+        # best-of-reps per phase (min = the standard robust wall-clock
+        # estimator against scheduler noise; same idiom as
+        # benchmarks/kernel_bench._time) — phases re-run on the SAME
+        # pre-round state, so repetition changes nothing downstream
+        t_est = t_upd = t_mix = float("inf")
+        for _ in range(self.reps):
+            (losses, g), ms = self._timed(self.fns.estimate, state, batches)
+            t_est = min(t_est, ms)
+            (new_p, new_o), ms = self._timed(self.fns.update, state, g)
+            t_upd = min(t_upd, ms)
+            _, ms = self._timed(self.fns.mix, state, new_p)
+            t_mix = min(t_mix, ms)
+        del losses, new_o
+        out["phase_ms_estimate"] = t_est
+        out["phase_ms_update"] = t_upd
+        out["phase_ms_mix"] = t_mix
+        out["phase_ms_total"] = t_est + t_upd + t_mix
+        if firsts is not None:
+            steady = {"estimate": t_est, "update": t_upd, "mix": t_mix}
+            for name, ms in firsts.items():
+                out[f"phase_compile_ms_{name}"] = max(0.0, ms - steady[name])
+        if fused_fn is not None:
+            t_fused = float("inf")
+            for _ in range(self.reps):
+                _, ms = self._timed(fused_fn, state, batches)
+                t_fused = min(t_fused, ms)
+            out["step_ms_fused"] = t_fused
+        for phase, t_ms in (("update", t_upd), ("mix", t_mix)):
+            b = self.analytic_bytes.get(f"hbm_bytes_{phase}")
+            if b and t_ms > 0:
+                out[f"hbm_bytes_{phase}"] = float(b)
+                # bytes / (ms * 1e6) == GB/s
+                out[f"hbm_gbps_{phase}"] = b / (t_ms * 1e6)
+        return out

@@ -1,0 +1,135 @@
+"""Phase-scoped tracing for the HDO round.
+
+Two annotation layers, one per observer:
+
+  * **Trace-time scopes** (``phase_scope`` / ``op_scope``) wrap
+    ``jax.named_scope`` around code *inside* a jitted computation —
+    the scope name lands in the HLO op metadata, so an xprof / Perfetto
+    trace of the compiled step resolves its ops to HDO phases
+    (``hdo/estimate``, ``hdo/update``, ``hdo/mix``) and to the fused
+    Pallas kernels (``zo_combine``, ``opt_apply``, ``gossip_mix``, ...)
+    instead of a flat soup of fusions.  Scopes annotate metadata only:
+    the lowered program's numerics are bit-identical with or without
+    them (pinned by tests/test_obs.py).
+
+  * **Run-time annotations** (``host_annotation``) wrap
+    ``jax.profiler.TraceAnnotation`` around *host-side* dispatch — used
+    by ``launch/train.py --trace-phases``, which runs the round as
+    three separately-jitted phase calls so the host timeline shows the
+    estimate/update/mix boundary too.
+
+``profile_window`` is the capture surface for ``--profile-dir``: it
+brackets N steady-state rounds with ``jax.profiler.start_trace`` /
+``stop_trace`` so the artifact holds warm-step traces, not compile
+noise.  This module depends on ``jax`` only — ``core`` and ``kernels``
+import it without cycling through the rest of ``repro.obs``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+import jax
+
+__all__ = [
+    "PHASES",
+    "phase_scope",
+    "op_scope",
+    "host_annotation",
+    "profile_window",
+    "ProfileSchedule",
+]
+
+# the three phases of one HDO round (paper Algorithm 1 pipeline order)
+PHASES = ("estimate", "update", "mix")
+
+
+@contextlib.contextmanager
+def phase_scope(phase: str) -> Iterator[None]:
+    """Trace-time scope for one HDO phase: ops traced inside carry
+    ``hdo/<phase>`` in their metadata (visible in HLO dumps and xprof).
+    Valid phases are ``PHASES``; anything else is a programming error
+    caught here rather than a silent mislabel in the trace."""
+    if phase not in PHASES:
+        raise ValueError(f"unknown HDO phase {phase!r}; expected one of {PHASES}")
+    with jax.named_scope(f"hdo/{phase}"):
+        yield
+
+
+@contextlib.contextmanager
+def op_scope(name: str) -> Iterator[None]:
+    """Trace-time scope for one fused kernel call site (``zo_combine``,
+    ``opt_apply``, ``gossip_mix``, ...): the Pallas custom-call and its
+    operand plumbing group under ``op/<name>`` in the trace."""
+    with jax.named_scope(f"op/{name}"):
+        yield
+
+
+@contextlib.contextmanager
+def host_annotation(name: str, enabled: bool = True) -> Iterator[None]:
+    """Run-time ``jax.profiler.TraceAnnotation`` around host-side
+    dispatch (a no-op when ``enabled`` is False, so call sites don't
+    need two code paths)."""
+    if not enabled:
+        yield
+        return
+    with jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def profile_window(profile_dir: Optional[str]) -> Iterator[None]:
+    """Bracket a block with ``jax.profiler.start_trace``/``stop_trace``
+    into ``profile_dir`` (no-op when None) — the xprof capture window."""
+    if not profile_dir:
+        yield
+        return
+    jax.profiler.start_trace(profile_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+class ProfileSchedule:
+    """Round-indexed capture window for a training loop.
+
+    ``--profile-dir`` wants *steady-state* rounds: round 0 is compile
+    and the first couple of rounds still shake allocator behavior, so
+    the default window opens at round ``start`` and captures ``rounds``
+    rounds.  Drive it with ``maybe_start(t)`` before the round's
+    dispatch and ``maybe_stop(t)`` after; ``stop()`` (idempotent) in a
+    ``finally`` guarantees the trace file is finalized even when the
+    loop raises mid-window.
+    """
+
+    def __init__(self, profile_dir: Optional[str], *, start: int = 3,
+                 rounds: int = 3):
+        if rounds <= 0:
+            raise ValueError(f"profile window needs rounds >= 1, got {rounds}")
+        self.profile_dir = profile_dir
+        self.start = start
+        self.rounds = rounds
+        self._active = False
+        self._done = False
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.profile_dir)
+
+    def maybe_start(self, t: int) -> None:
+        if not self.enabled or self._active or self._done:
+            return
+        if t >= self.start:
+            jax.profiler.start_trace(self.profile_dir)
+            self._active = True
+
+    def maybe_stop(self, t: int) -> None:
+        if self._active and t >= self.start + self.rounds - 1:
+            self.stop()
+
+    def stop(self) -> None:
+        if self._active:
+            jax.profiler.stop_trace()
+            self._active = False
+            self._done = True

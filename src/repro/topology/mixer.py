@@ -95,6 +95,16 @@ class Mixer:
     def diagnostics(self) -> Dict[str, float]:
         return {}
 
+    def wire_bytes_per_agent(self, d: Optional[int]) -> Optional[int]:
+        """Nominal payload bytes ONE broadcasting agent puts on the
+        wire per round for a flat parameter dim ``d`` — dense f32
+        (``4*d``) for every uncompressed exchange; the compressed
+        mixers override with ``Compressor.bytes_on_wire``.  None when
+        ``d`` is unknown.  Extended metrics multiply this by the
+        round's measured broadcasting-agent count (staleness/faults
+        reduce it) to get ``gossip_wire_bytes``."""
+        return None if d is None else 4 * int(d)
+
 
 class IdentityMixer(Mixer):
     """No communication (``none`` / single-agent populations)."""
@@ -105,6 +115,9 @@ class IdentityMixer(Mixer):
     def diagnostics(self):
         return {"gossip_lambda2": 1.0, "gossip_spectral_gap": 0.0,
                 "gossip_gamma_contraction": 1.0}
+
+    def wire_bytes_per_agent(self, d):
+        return 0 if d is not None else None
 
 
 class AllReduceMixer(Mixer):
@@ -357,6 +370,13 @@ class CompressedGraphMixer(GraphMixer):
                  if self.compressor is not None and self.param_dim else 1.0)
         return spectral.compressed_diagnostics(
             self.topo, delta=delta, staleness=self.staleness)
+
+    def wire_bytes_per_agent(self, d):
+        if d is None:
+            return None
+        if self.compressor is None:  # faults/staleness only: dense f32
+            return 4 * int(d)
+        return self.compressor.bytes_on_wire(int(d))
 
 
 class TimeVaryingGraphMixer(Mixer):
@@ -648,6 +668,9 @@ class CompressedGraphPpermuteMixer(GraphPpermuteMixer):
         delta = (self.compressor.delta(self.param_dim)
                  if self.param_dim else 1.0)
         return spectral.compressed_diagnostics(self.topo, delta=delta)
+
+    def wire_bytes_per_agent(self, d):
+        return None if d is None else self.compressor.bytes_on_wire(int(d))
 
 
 def make_mixer(cfg: HDOConfig, *, mesh=None, population_axes: Tuple[str, ...] = (),

@@ -1,0 +1,458 @@
+"""Observability layer (repro.obs): schema-drift gate across the step
+variants, JSONL artifact round-trip + manifest integrity, the fenced
+per-phase decomposition's bit-identity honesty contract, the
+logger-off/extended-metrics-off no-op guarantee, wire accounting, and
+the generated docs table's --write/--check CLI.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HDOConfig
+from repro.core import build_hdo_step, init_state
+from repro.core.hdo import HDOState
+from repro.obs import metrics as metricslib
+from repro.obs import timing as timinglib
+from repro.obs import trace as tracelib
+from repro.obs.metrics import (
+    SCHEMA_VERSION,
+    JSONLSink,
+    MetricsLogger,
+    run_manifest,
+    spec_for,
+    undeclared,
+    validate_jsonl,
+)
+
+D = 16
+W_TRUE = jax.random.normal(jax.random.PRNGKey(42), (D,))
+
+
+def loss_fn(params, batch):
+    return jnp.mean((batch["X"] @ params["w"] - batch["y"]) ** 2)
+
+
+def make_batches(key, n_agents, bsz=4):
+    X = jax.random.normal(key, (n_agents, bsz, D))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+BASE = dict(lr=0.05, momentum=0.0, warmup_steps=0, use_cosine=False,
+            nu=1e-3, rv=1)
+
+
+def _params():
+    return {"w": jnp.zeros((D,))}
+
+
+def _one_step(cfg, *, extended=True, steps=1):
+    step = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D,
+                                  params_template=_params(),
+                                  extended_metrics=extended))
+    state = init_state(_params(), cfg)
+    mets = None
+    for t in range(steps):
+        state, mets = step(state, make_batches(
+            jax.random.fold_in(jax.random.PRNGKey(9), t), cfg.n_agents))
+    return state, mets
+
+
+# ---------------------------------------------------------------------------
+# schema registry + drift gate
+# ---------------------------------------------------------------------------
+
+
+def test_spec_lookup_exact_and_pattern():
+    assert spec_for("loss_mean").phase == "estimate"
+    assert spec_for("grad_var_zo_multi_rv").key == "grad_var_zo_*"
+    assert spec_for("phase_compile_ms_mix").phase == "system"
+    assert spec_for("definitely_not_declared") is None
+    assert undeclared(["loss_mean", "nope", "lr"]) == ["nope"]
+
+
+# one config per axis value (dispatch x zo_impl x param_layout x
+# compression) plus the heterogeneous / fault / staleness key families —
+# every metric key build_hdo_step can emit must be declared in REGISTRY
+DRIFT_CFGS = [
+    ("select_tree", dict(n_agents=4, n_zeroth=2, gossip="dense",
+                         dispatch="select", **BASE)),
+    ("split_fused", dict(n_agents=4, n_zeroth=2, gossip="dense",
+                         dispatch="split", zo_impl="fused", **BASE)),
+    ("plane_adamw", dict(n_agents=4, n_zeroth=2, gossip="dense",
+                         param_layout="plane", optimizer="adamw", **BASE)),
+    ("graph_ring", dict(n_agents=4, n_zeroth=2, gossip="graph",
+                        topology="ring", **BASE)),
+    ("graph_topk_stale_faults",
+     dict(n_agents=4, n_zeroth=2, gossip="graph", topology="ring",
+          compression="topk", compress_k=4, staleness=1,
+          fault_drop_rate=0.2, fault_straggler_rate=0.2,
+          fault_byzantine_rate=0.2, **BASE)),
+    ("graph_qsgd_plane",
+     dict(n_agents=4, n_zeroth=2, gossip="graph", topology="ring",
+          compression="qsgd", compress_bits=4, param_layout="plane", **BASE)),
+    ("het_mixed_estimators",
+     dict(n_agents=4, n_zeroth=2, gossip="dense",
+          sigmas=(1e-3, 1e-2), estimators_zo=("multi_rv", "fwd_grad"),
+          lrs=(0.05, 0.04, 0.05, 0.04), **BASE)),
+]
+
+
+@pytest.mark.parametrize("name,kw", DRIFT_CFGS, ids=[n for n, _ in DRIFT_CFGS])
+def test_step_metrics_all_declared(name, kw):
+    """The runtime half of the drift gate: every key the step emits
+    (extended metrics on) is declared in the registry."""
+    _, mets = _one_step(HDOConfig(**kw))
+    bad = undeclared(mets.keys())
+    assert not bad, f"{name}: undeclared metric keys {bad}"
+    # and the coercion layer accepts each value under its declared type
+    logger = MetricsLogger([_ListSink()])
+    logger.log_round(0, mets)
+
+
+class _ListSink:
+    def __init__(self):
+        self.records = []
+
+    def write(self, record):
+        self.records.append(record)
+
+    def close(self):
+        self.closed = True
+
+
+def test_extended_metrics_do_not_change_the_state():
+    """extended_metrics is observe-only: the returned state is
+    bit-identical with it on or off (the logger only ever reads)."""
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="graph", topology="ring",
+                    compression="topk", compress_k=4, momentum=0.9,
+                    **{k: v for k, v in BASE.items() if k != "momentum"})
+    s_off, m_off = _one_step(cfg, extended=False, steps=3)
+    s_on, m_on = _one_step(cfg, extended=True, steps=3)
+    for a, b in zip(jax.tree.leaves(s_off), jax.tree.leaves(s_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # extended adds keys, never changes shared ones
+    for k in m_off:
+        np.testing.assert_allclose(np.asarray(m_off[k]), np.asarray(m_on[k]),
+                                   rtol=0, atol=0)
+    assert {"loss_agent", "consensus_gamma", "consensus_agent",
+            "gossip_wire_bytes"} <= set(m_on)
+
+
+def test_extended_wire_and_fault_metrics_values():
+    """gossip_wire_bytes = broadcasting agents x bytes_on_wire; the
+    fault counters match the replayable schedule."""
+    from repro.topology.compress import make_compressor
+    from repro.topology.faults import FaultSpec, fault_masks
+
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="graph", topology="ring",
+                    compression="topk", compress_k=4,
+                    fault_drop_rate=0.3, fault_seed=5, **BASE)
+    _, mets = _one_step(cfg)
+    comp = make_compressor(cfg)
+    per_agent = comp.bytes_on_wire(D)
+    masks = fault_masks(FaultSpec.from_config(cfg), 0, cfg.n_agents)
+    alive = np.asarray(masks["alive"])
+    n_bcast = int(alive.sum())  # staleness=0: everyone alive broadcasts
+    assert float(mets["gossip_wire_bytes"]) == pytest.approx(
+        n_bcast * per_agent)
+    assert float(mets["fault_drop_count"]) == pytest.approx(
+        cfg.n_agents - alive.sum())
+
+
+# ---------------------------------------------------------------------------
+# logger + sinks + artifact round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_logger_strict_rejects_undeclared_keys():
+    logger = MetricsLogger([_ListSink()])
+    with pytest.raises(KeyError, match="undeclared"):
+        logger.log_round(0, {"loss_mean": 1.0, "made_up_key": 2.0})
+    # strict=False lets exploratory keys through
+    MetricsLogger([_ListSink()], strict=False).log_round(
+        0, {"made_up_key": 2.0})
+
+
+def test_logger_without_sinks_is_inert():
+    logger = MetricsLogger([])
+    assert not logger.enabled
+    logger.start_run({"record": "manifest"})
+    logger.log_round(0, {"bad key that would raise": 1.0})  # no-op, no check
+    logger.finish({"x": 1})
+
+
+def test_wire_mib_accumulates_across_rounds():
+    sink = _ListSink()
+    logger = MetricsLogger([sink])
+    logger.log_round(0, {"gossip_wire_bytes": float(1 << 20)})
+    logger.log_round(1, {"gossip_wire_bytes": float(1 << 20)})
+    totals = [r["wire_mib_total"] for r in sink.records]
+    assert totals == [1.0, 2.0]
+
+
+def test_vector_and_scalar_type_enforcement():
+    logger = MetricsLogger([_ListSink()])
+    with pytest.raises(TypeError):
+        logger.log_round(0, {"loss_agent": 1.0})  # declared vec_f32
+    with pytest.raises(TypeError):
+        logger.log_round(0, {"loss_mean": [1.0, 2.0]})  # declared scalar
+    logger.log_round(0, {"loss_agent": jnp.ones((3,)), "step": jnp.int32(0)})
+
+
+def test_jsonl_round_trip_and_validator(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="dense", **BASE)
+    logger = MetricsLogger([JSONLSink(path)])
+    logger.start_run(run_manifest(cfg, manifest_hash="ab12", arch="toy"))
+    logger.log_round(0, {"loss_mean": 1.5, "lr": 0.05,
+                         "loss_agent": [1.0, 2.0, 1.0, 2.0]})
+    logger.log_timing(3, {"phase_ms_estimate": 1.0, "phase_ms_update": 0.5,
+                          "phase_ms_mix": 0.25, "phase_ms_total": 1.75})
+    logger.log_round(5, {"loss_mean": 1.25, "lr": 0.04})
+    logger.finish({"rounds": 6})
+    assert validate_jsonl(path) == []
+
+    records = [json.loads(l) for l in open(path)]
+    kinds = [r["record"] for r in records]
+    assert kinds == ["manifest", "metrics", "phase_timing", "metrics", "final"]
+    head = records[0]
+    assert head["schema_version"] == SCHEMA_VERSION
+    assert head["manifest_hash"] == "ab12"
+    assert head["config_hash"] == metricslib.config_hash(cfg)
+    # json round-trip of the config hash input is stable (tuples/lists)
+    assert metricslib.config_hash(dataclasses.asdict(cfg)) == head["config_hash"]
+
+
+def test_validator_catches_broken_artifacts(tmp_path):
+    # no manifest header
+    p1 = tmp_path / "no_manifest.jsonl"
+    p1.write_text('{"record": "metrics", "step": 0, "loss_mean": 1.0}\n')
+    assert any("manifest" in s for s in validate_jsonl(str(p1)))
+    # undeclared key (written around the strict logger)
+    p2 = tmp_path / "undeclared.jsonl"
+    p2.write_text(
+        json.dumps({"record": "manifest", "schema_version": SCHEMA_VERSION,
+                    "config_hash": "x", "jax_version": "0", "backend": "cpu"})
+        + "\n" + json.dumps({"record": "metrics", "step": 0, "mystery": 1.0})
+        + "\n")
+    assert any("undeclared" in s for s in validate_jsonl(str(p2)))
+    # non-monotone step
+    p3 = tmp_path / "steps.jsonl"
+    p3.write_text(
+        json.dumps({"record": "manifest", "schema_version": SCHEMA_VERSION,
+                    "config_hash": "x", "jax_version": "0", "backend": "cpu"})
+        + "\n" + json.dumps({"record": "metrics", "step": 5, "loss_mean": 1.0})
+        + "\n" + json.dumps({"record": "metrics", "step": 5, "loss_mean": 1.0})
+        + "\n")
+    assert any("monotone" in s for s in validate_jsonl(str(p3)))
+
+
+def test_csv_sink_flattens_metrics_only(tmp_path):
+    path = str(tmp_path / "run.csv")
+    logger = MetricsLogger([metricslib.CSVSink(path)])
+    logger.start_run(run_manifest(arch="toy"))
+    logger.log_round(0, {"loss_mean": 1.5, "loss_agent": [1.0, 2.0]})
+    logger.log_round(1, {"loss_mean": 1.25, "loss_agent": [1.0, 2.0]})
+    logger.finish({"rounds": 2})
+    lines = open(path).read().strip().splitlines()
+    assert lines[0].split(",")[:2] == ["step", "loss_mean"]
+    assert len(lines) == 3  # header + 2 metrics rows; manifest/final dropped
+
+
+def test_make_sink_dispatch(tmp_path):
+    assert isinstance(metricslib.make_sink("-"), metricslib.StdoutSink)
+    assert isinstance(metricslib.make_sink(str(tmp_path / "a.csv")),
+                      metricslib.CSVSink)
+    assert isinstance(metricslib.make_sink(str(tmp_path / "a.jsonl")),
+                      metricslib.JSONLSink)
+
+
+# ---------------------------------------------------------------------------
+# fenced per-phase decomposition: honesty contracts
+# ---------------------------------------------------------------------------
+
+PHASE_CFGS = [
+    ("dense_sgd", dict(n_agents=4, n_zeroth=2, gossip="dense",
+                       momentum=0.9,
+                       **{k: v for k, v in BASE.items() if k != "momentum"})),
+    ("graph_topk_ef", dict(n_agents=4, n_zeroth=2, gossip="graph",
+                           topology="ring", compression="topk", compress_k=4,
+                           staleness=1, **BASE)),
+    ("plane_adamw", dict(n_agents=4, n_zeroth=2, gossip="dense",
+                         param_layout="plane", optimizer="adamw", **BASE)),
+    ("het_sigmas", dict(n_agents=4, n_zeroth=2, gossip="dense",
+                        sigmas=(1e-3, 1e-2), lrs=(0.05, 0.04, 0.05, 0.04),
+                        **BASE)),
+]
+
+
+@pytest.mark.parametrize("name,kw", PHASE_CFGS, ids=[n for n, _ in PHASE_CFGS])
+def test_phase_round_bit_identical_to_fused_step(name, kw):
+    """The three separately-jitted phase calls ARE the fused round:
+    same params, opt state, comm state and losses, bit for bit, over
+    several rounds — the honesty contract behind the fenced numbers."""
+    cfg = HDOConfig(**kw)
+    fused = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D,
+                                   params_template=_params()))
+    fns = timinglib.build_phase_fns(loss_fn, cfg, param_dim=D,
+                                    params_template=_params())
+    s_f = init_state(_params(), cfg)
+    s_p = jax.tree.map(lambda x: x, s_f)
+    for t in range(3):
+        b = make_batches(jax.random.fold_in(jax.random.PRNGKey(9), t),
+                         cfg.n_agents)
+        s_f, mets = fused(s_f, b)
+        s_p, losses = timinglib.phase_round(fns, s_p, b)
+        np.testing.assert_array_equal(np.asarray(mets["loss_mean"]),
+                                      np.asarray(losses.mean()))
+        for a, c in zip(jax.tree.leaves(s_f), jax.tree.leaves(s_p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c),
+                                          err_msg=f"{name} round {t}")
+
+
+def test_phase_timer_measure_schema_and_compile_split():
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="graph", topology="ring",
+                    momentum=0.9,
+                    **{k: v for k, v in BASE.items() if k != "momentum"})
+    fns = timinglib.build_phase_fns(loss_fn, cfg, param_dim=D,
+                                    params_template=_params())
+    fused = jax.jit(build_hdo_step(loss_fn, cfg, param_dim=D,
+                                   params_template=_params()))
+    timer = timinglib.PhaseTimer(
+        fns, timinglib.analytic_phase_bytes(cfg, D))
+    state = init_state(_params(), cfg)
+    b = make_batches(jax.random.PRNGKey(9), cfg.n_agents)
+    first = timer.measure(state, b, fused_fn=fused)
+    second = timer.measure(state, b, fused_fn=fused)
+    # compile split only on the first sample
+    assert {k for k in first if k.startswith("phase_compile_ms_")} == {
+        "phase_compile_ms_estimate", "phase_compile_ms_update",
+        "phase_compile_ms_mix"}
+    assert not any(k.startswith("phase_compile_ms_") for k in second)
+    for rec in (first, second):
+        assert undeclared(rec.keys()) == []
+        assert rec["phase_ms_total"] == pytest.approx(
+            rec["phase_ms_estimate"] + rec["phase_ms_update"]
+            + rec["phase_ms_mix"])
+        assert rec["step_ms_fused"] > 0
+        # ring: both phases priced by the analytic model
+        assert rec["hbm_bytes_update"] == cfg.n_agents * (12 + 2 * 4) * D
+        assert rec["hbm_bytes_mix"] == cfg.n_agents * (2 + 2) * D * 4
+        assert rec["hbm_gbps_update"] > 0
+    # measuring never advanced the state
+    assert int(state.step) == 0
+
+
+def test_build_phase_fns_rejects_local_steps():
+    cfg = HDOConfig(n_agents=4, n_zeroth=2, gossip="dense", local_steps=2,
+                    **BASE)
+    with pytest.raises(ValueError, match="local_steps"):
+        timinglib.build_phase_fns(loss_fn, cfg, param_dim=D)
+
+
+def test_analytic_phase_bytes_model():
+    mk = lambda **kw: HDOConfig(n_agents=4, n_zeroth=2, **{**BASE, **kw})
+    d = 100
+    # momentum=0 sgd: no momentum stream
+    assert timinglib.analytic_phase_bytes(
+        mk(gossip="dense"), d)["hbm_bytes_update"] == 4 * 12 * d
+    # momentum sgd: + read+write momentum
+    assert timinglib.analytic_phase_bytes(
+        mk(gossip="dense", momentum=0.9), d)["hbm_bytes_update"] == 4 * 20 * d
+    # adamw reads/writes mu and nu
+    assert timinglib.analytic_phase_bytes(
+        mk(gossip="dense", optimizer="adamw"),
+        d)["hbm_bytes_update"] == 4 * 28 * d
+    # bfloat16 momentum halves the momentum stream
+    assert timinglib.analytic_phase_bytes(
+        mk(gossip="dense", momentum=0.9, momentum_dtype="bfloat16"),
+        d)["hbm_bytes_update"] == 4 * 16 * d
+    # mix priced only for static graphs; compression adds 2 streams
+    assert "hbm_bytes_mix" not in timinglib.analytic_phase_bytes(
+        mk(gossip="dense"), d)
+    ring = timinglib.analytic_phase_bytes(mk(gossip="graph"), d)
+    assert ring["hbm_bytes_mix"] == 4 * (2 + 2) * d * 4
+    ringc = timinglib.analytic_phase_bytes(
+        mk(gossip="graph", compression="topk", compress_k=8), d)
+    assert ringc["hbm_bytes_mix"] == 4 * (2 + 4) * d * 4
+    assert timinglib.analytic_phase_bytes(mk(gossip="dense"), None) == {}
+
+
+def test_default_sample_rounds():
+    assert timinglib.default_sample_rounds(0) == ()
+    assert timinglib.default_sample_rounds(1) == ()
+    assert timinglib.default_sample_rounds(2) == (1,)
+    assert timinglib.default_sample_rounds(20) == (3, 10, 18)
+    for steps in (2, 3, 5, 7, 100):
+        for t in timinglib.default_sample_rounds(steps):
+            assert 0 < t < steps
+
+
+# ---------------------------------------------------------------------------
+# tracing wrappers
+# ---------------------------------------------------------------------------
+
+
+def test_phase_scope_names_and_numerics():
+    with pytest.raises(ValueError):
+        with tracelib.phase_scope("not_a_phase"):
+            pass
+    # named_scope annotates HLO metadata only — numerics are untouched
+    x = jnp.arange(8.0)
+
+    @jax.jit
+    def f(x):
+        with tracelib.phase_scope("estimate"):
+            y = x * 2
+        with tracelib.op_scope("gossip_mix"):
+            return y + 1
+
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x * 2 + 1))
+
+
+def test_host_annotation_disabled_is_nullcontext():
+    with tracelib.host_annotation("x", False):
+        pass
+    with tracelib.host_annotation("x", True):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# generated docs table CLI
+# ---------------------------------------------------------------------------
+
+
+def test_schema_table_write_and_check(tmp_path, capsys):
+    doc = tmp_path / "obs.md"
+    doc.write_text(f"# Title\n\n{metricslib.BEGIN}\nstale\n{metricslib.END}\n")
+    assert metricslib.main(["--check", str(doc)]) == 1
+    assert metricslib.main(["--write", str(doc)]) == 0
+    assert metricslib.main(["--check", str(doc)]) == 0
+    text = doc.read_text()
+    assert "| `loss_mean` |" in text
+    assert f"**{SCHEMA_VERSION}**" in text
+    # idempotent
+    before = doc.read_text()
+    assert metricslib.main(["--write", str(doc)]) == 0
+    assert doc.read_text() == before
+
+
+def test_schema_table_missing_markers_fails(tmp_path):
+    doc = tmp_path / "no_markers.md"
+    doc.write_text("# Title\n")
+    with pytest.raises(SystemExit):
+        metricslib.main(["--write", str(doc)])
+
+
+def test_docs_observability_table_is_current():
+    """The committed docs table matches the registry (the docs half of
+    the drift gate; CI also runs --check)."""
+    import os
+
+    doc = os.path.join(os.path.dirname(__file__), "..", "docs",
+                       "observability.md")
+    assert metricslib.main(["--check", doc]) == 0
