@@ -1,8 +1,12 @@
-"""End-to-end driver: serve a small model with batched requests.
+"""End-to-end driver: train an HDO population, then serve it through
+the continuous-batching engine with per-agent ensemble routing.
 
 Trains a reduced Mamba2 with an HDO population for a few hundred steps
-on a synthetic LM stream, then serves batched generation requests from
-the population-mean model through the KV/SSM-cache decode path.
+on a synthetic LM stream, then serves an offered-load stream of
+generation requests (Poisson-ish arrival spacing) through
+``repro.serve``: requests are routed round-robin across cohort members
+(``population="ensemble"``), admitted into the fixed slot pool as
+arrivals come due, and evicted at token granularity.
 
   PYTHONPATH=src python examples/serve_batched.py [--train-steps 200]
 """
@@ -18,15 +22,24 @@ from repro.configs import get_smoke_config
 from repro.configs.base import HDOConfig
 from repro.core import build_hdo_step, init_state
 from repro.data import synthetic
-from repro.launch.serve import generate
 from repro.models import build_model
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    Request,
+    Scheduler,
+    percentile,
+    population_params,
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--train-steps", type=int, default=200)
-    ap.add_argument("--batch-requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--offered-rps", type=float, default=20.0)
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_smoke_config("mamba2-780m"), dtype="float32")
@@ -49,20 +62,38 @@ def main():
             print(f"train step {t:4d} loss={float(metrics['loss_mean']):.4f} "
                   f"({time.time()-t0:.0f}s)")
 
-    params = jax.tree.map(lambda x: x[0], state.params)  # any agent (consensus)
-
-    # ---- serve batched requests ----------------------------------------
-    prompts = jnp.asarray(sample(rng, args.batch_requests, 16))
+    # ---- serve the population as an ensemble ---------------------------
+    # the cohort IS an ensemble: keep the stacked (n_agents, ...) params
+    # and route each request to one member inside the shared slot pool
+    stacked = population_params(state.params, mode="ensemble")
+    prompt_len, total = 16, 16 + args.gen
+    engine = Engine(model, stacked, ensemble=True,
+                    config=EngineConfig(n_slots=args.n_slots, cache_seq=total,
+                                        max_total=total, chunk=8))
+    sched = Scheduler(engine)
+    prompts = sample(rng, args.requests, prompt_len)
+    spacing = rng.exponential(1.0 / args.offered_rps, args.requests)
+    arrivals = np.cumsum(spacing)
+    for i in range(args.requests):
+        sched.submit(Request(request_id=i, prompt=prompts[i],
+                             max_gen=args.gen, agent=i % hcfg.n_agents,
+                             arrival_s=float(arrivals[i])))
     t0 = time.time()
-    out = generate(model, params, prompts, 16 + args.gen, args.gen)
+    results = sched.run()
     dt = time.time() - t0
-    print(f"\nserved {args.batch_requests} requests x {args.gen} new tokens "
-          f"in {dt:.2f}s ({args.batch_requests*args.gen/dt:.0f} tok/s)")
+    gen_total = sum(r.gen_tokens for r in results)
+    print(f"\nserved {args.requests} requests x {args.gen} new tokens "
+          f"across {hcfg.n_agents} cohort members in {dt:.2f}s "
+          f"({gen_total/dt:.0f} tok/s at ~{args.offered_rps:g} req/s offered)")
+    print(f"latency p50={percentile([r.latency_ms for r in results], 50):.0f}ms "
+          f"p99={percentile([r.latency_ms for r in results], 99):.0f}ms "
+          f"queue p99={percentile([r.queue_ms for r in results], 99):.0f}ms")
 
     # the synthetic stream is a sparse Markov chain — a trained model's
     # greedy continuations should stay inside each token's 4-successor set
-    table_sample = synthetic.lm_token_stream(cfg.vocab_size, seed=0)
-    print("sample continuation:", np.asarray(out[0, 16:16+12]).tolist())
+    first = next(r for r in results if r.request_id == 0)
+    print(f"sample continuation (agent {first.agent}):",
+          first.tokens[prompt_len : prompt_len + 12].tolist())
 
 
 if __name__ == "__main__":

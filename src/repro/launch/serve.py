@@ -1,14 +1,21 @@
-"""Batched serving driver: prefill (teacher-forced) + greedy decode.
+"""Serving driver over the continuous-batching engine (repro.serve).
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
-      --smoke --batch 8 --prompt-len 32 --gen 32
+      --smoke --requests 8 --n-slots 4 --prompt-len 32 --gen 32
 
-``--metrics-out run.jsonl`` additionally writes a run manifest plus one
-``serve_request`` record per sequence (prompt/generated token counts,
-end-to-end latency, per-request decode throughput) through the
-structured metrics pipeline (repro.obs).  Compile time (the first
-dispatch of the jitted serve step) is split out of the reported wall
-clock so steady-state tok/s is not polluted by tracing.
+The default path builds the jitted scan-decode :class:`repro.serve.Engine`
+(one ``lax.scan`` program per chunk — no host round-trip per token),
+admits ``--requests`` generation requests through the continuous-batching
+:class:`~repro.serve.Scheduler` (``--offered-rps`` spaces arrivals for an
+offered-load run; 0 = all at once), and serves either the population-mean
+snapshot or per-agent ensemble-routed requests (``--population``,
+``--ckpt`` to serve a trained cohort).  ``--engine loop`` keeps the old
+per-token Python loop as the measured baseline.
+
+``--metrics-out run.jsonl`` writes a run manifest, per-chunk engine
+metrics (queue depth, slot occupancy, prefill-vs-decode token split) and
+one ``serve_request`` record per request with honest queue / prefill /
+decode timing through the structured metrics pipeline (repro.obs).
 """
 from __future__ import annotations
 
@@ -26,10 +33,15 @@ from repro.models import build_model
 
 
 def generate(model, params, prompts: jnp.ndarray, max_seq: int, gen: int):
-    """prompts: (B, P). Returns ((B, P+gen) greedy tokens, timing dict).
+    """The per-token-loop baseline: prompts (B, P) -> ((B, P+gen) greedy
+    tokens, timing dict).  One jitted ``serve_step`` dispatch per token.
 
-    timing: ``compile_s`` (first fenced dispatch of the jitted step) and
-    ``decode_s`` (fenced wall clock of the remaining steps)."""
+    timing splits the wall clock honestly: ``compile_s`` (first fenced
+    dispatch), ``prefill_s`` (the remaining teacher-forced prompt steps,
+    through the one producing the first new token), and ``decode_s``
+    (the ``gen - 1`` decode steps ONLY — the old code lumped prefill
+    into ``decode_s``, overstating per-token decode cost and
+    undercounting tok/s)."""
     B, Plen = prompts.shape
     cache = model.init_cache(B, max_seq)
     step = jax.jit(model.serve_step)
@@ -40,30 +52,104 @@ def generate(model, params, prompts: jnp.ndarray, max_seq: int, gen: int):
     jax.block_until_ready(logits)
     compile_s = time.perf_counter() - t0
     t1 = time.perf_counter()
+    prefill_s = 0.0
+    t_dec = t1
     for t in range(Plen + gen - 1):
         if t > 0:
             logits, cache = step(params, cache, tok, jnp.int32(t))
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         tok = prompts[:, t + 1] if t + 1 < Plen else nxt
         out.append(tok)
+        if t == Plen - 1:
+            # fence: steps 0..P-1 consumed the prompt (and produced the
+            # first new token); everything after is pure decode
+            jax.block_until_ready(tok)
+            prefill_s = time.perf_counter() - t1
+            t_dec = time.perf_counter()
     toks = jnp.stack(out, axis=1)
     jax.block_until_ready(toks)
-    decode_s = time.perf_counter() - t1
-    return toks, {"compile_s": compile_s, "decode_s": decode_s}
+    decode_s = time.perf_counter() - t_dec
+    return toks, {"compile_s": compile_s, "prefill_s": prefill_s,
+                  "decode_s": decode_s}
+
+
+def _build_requests(args, cfg):
+    from repro.serve import Request
+
+    sample = synthetic.lm_token_stream(cfg.vocab_size, seed=args.seed)
+    rng = np.random.default_rng(args.seed + 1)
+    prompts = sample(rng, args.requests, args.prompt_len)
+    reqs = []
+    for i in range(args.requests):
+        reqs.append(Request(
+            request_id=i, prompt=prompts[i], max_gen=args.gen,
+            agent=(i % args.agents) if args.population == "ensemble" else 0,
+            arrival_s=(i / args.offered_rps) if args.offered_rps > 0 else None,
+        ))
+    return prompts, reqs
+
+
+def _resolve_params(args, cfg, model):
+    """(servable params, stacked?, n_agents) for --population/--ckpt."""
+    from repro.serve import load_population, population_params
+
+    if args.ckpt:
+        state, hcfg = load_population(args.ckpt, model)
+        template = (model.init(jax.random.PRNGKey(args.seed))
+                    if hcfg.param_layout == "plane" else None)
+        params = population_params(
+            state.params, mode=args.population,
+            param_layout=hcfg.param_layout, template=template)
+        return params, args.population == "ensemble", hcfg.n_agents
+    if args.population == "ensemble":
+        # no trained cohort on disk: an ensemble of independent inits
+        # (each slot routed to a distinct member) still exercises the
+        # routing path end to end
+        keys = jax.random.split(jax.random.PRNGKey(args.seed), args.agents)
+        stacked = jax.vmap(model.init)(keys)
+        return stacked, True, args.agents
+    return model.init(jax.random.PRNGKey(args.seed)), False, 1
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-780m")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", "--batch", type=int, default=8,
+                    dest="requests", metavar="N",
+                    help="number of generation requests (--batch kept as "
+                         "an alias for the pre-engine CLI)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="decode-slot pool size (continuous batching)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="scan steps per jitted dispatch (1 = token-"
+                         "granular scheduling)")
+    ap.add_argument("--cache-seq", type=int, default=0,
+                    help="per-slot cache capacity (0: prompt+gen)")
+    ap.add_argument("--population", choices=("mean", "ensemble"),
+                    default="mean",
+                    help="serve the gossip-mean snapshot, or route each "
+                         "request to a cohort member (ensemble)")
+    ap.add_argument("--ckpt", default=None, metavar="PATH",
+                    help="serve a trained population from a train.py "
+                         "checkpoint (restored through the read_meta "
+                         "guards)")
+    ap.add_argument("--agents", type=int, default=4,
+                    help="ensemble size when no --ckpt is given")
+    ap.add_argument("--offered-rps", type=float, default=0.0,
+                    help="request arrival rate (0: all arrive at once)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="generated token id that terminates a request")
+    ap.add_argument("--engine", choices=("scan", "loop"), default="scan",
+                    help="scan: the jitted continuous-batching engine; "
+                         "loop: the per-token Python-loop baseline")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
-                    help="write a run manifest + per-request serve_request "
-                         "records (latency, token counts, tok/s) to this "
+                    help="write a run manifest + per-chunk engine metrics "
+                         "+ per-request serve_request records to this "
                          "metrics sink (repro.obs)")
     args = ap.parse_args()
 
@@ -72,46 +158,105 @@ def main() -> None:
     if cfg.family in ("vlm", "audio"):
         raise SystemExit("serve driver supports text decoders; use dryrun for vlm/audio decode shapes")
     model = build_model(cfg)
+    prompts, reqs = _build_requests(args, cfg)
+
+    from repro.obs import MetricsLogger, make_sink, run_manifest
+
+    logger = MetricsLogger([make_sink(args.metrics_out)]
+                           if args.metrics_out else [])
+    logger.start_run(run_manifest(
+        {"arch": cfg.name, "requests": args.requests,
+         "prompt_len": args.prompt_len, "gen": args.gen,
+         "n_slots": args.n_slots, "chunk": args.chunk,
+         "population": args.population, "engine": args.engine,
+         "offered_rps": args.offered_rps, "dtype": args.dtype,
+         "seed": args.seed},
+        arch=cfg.name, engine=args.engine, population=args.population))
+
+    if args.engine == "loop":
+        _run_loop(args, cfg, model, prompts, logger)
+        return
+
+    from repro.serve import Engine, EngineConfig, Scheduler, percentile
+
+    params, stacked, n_agents = _resolve_params(args, cfg, model)
+    total = args.prompt_len + args.gen
+    ecfg = EngineConfig(
+        n_slots=args.n_slots,
+        cache_seq=args.cache_seq or total,
+        max_total=total,
+        chunk=args.chunk,
+        eos_id=args.eos_id,
+    )
+    t0 = time.perf_counter()
+    engine = Engine(model, params, config=ecfg, ensemble=stacked)
+    sched = Scheduler(engine, logger=logger)
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    wall = time.perf_counter() - t0
+
+    gen_total = sum(r.gen_tokens for r in results)
+    lat = [r.latency_ms for r in results]
+    dec_tps = [r.tokens_per_s for r in results if r.tokens_per_s > 0]
+    print(f"# arch={cfg.name} engine=scan population={args.population}"
+          f"{f'/{n_agents} agents' if stacked else ''} "
+          f"slots={args.n_slots} chunk={args.chunk} "
+          f"requests={args.requests} prompt={args.prompt_len} gen={args.gen}")
+    print(f"# wall={wall:.2f}s {gen_total} new tokens "
+          f"({gen_total / wall:.1f} tok/s offered-load wall clock; "
+          f"per-request decode median "
+          f"{percentile(dec_tps, 50):.1f} tok/s)")
+    print(f"# latency p50={percentile(lat, 50):.0f}ms "
+          f"p99={percentile(lat, 99):.0f}ms "
+          f"queue p99={percentile([r.queue_ms for r in results], 99):.0f}ms")
+    for r in results[: min(2, len(results))]:
+        print(f"seq[{r.request_id}]"
+              + (f" agent={r.agent}" if stacked else "")
+              + ":", r.tokens.tolist())
+    logger.finish({
+        "completed": len(results),
+        "wall_s": round(wall, 6),
+        "batch_tokens_per_s": round(gen_total / wall, 6),
+        "p50_latency_ms": round(percentile(lat, 50), 3),
+        "p99_latency_ms": round(percentile(lat, 99), 3),
+    })
+
+
+def _run_loop(args, cfg, model, prompts, logger) -> None:
+    """The pre-engine static-batch baseline (per-token dispatches)."""
     params = model.init(jax.random.PRNGKey(args.seed))
-
-    sample = synthetic.lm_token_stream(cfg.vocab_size, seed=args.seed)
-    rng = np.random.default_rng(args.seed + 1)
-    prompts = jnp.asarray(sample(rng, args.batch, args.prompt_len))
-
     max_seq = args.prompt_len + args.gen
-    toks, timing = generate(model, params, prompts, max_seq, args.gen)
-    dt = timing["compile_s"] + timing["decode_s"]
-    total_new = args.batch * args.gen
-    print(f"# arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
-    print(f"# wall={dt:.2f}s compile={timing['compile_s']:.2f}s "
-          f"({total_new/timing['decode_s']:.1f} tok/s batched greedy decode, "
+    toks, timing = generate(model, params, jnp.asarray(prompts), max_seq,
+                            args.gen)
+    total_new = args.requests * args.gen
+    serve_s = timing["prefill_s"] + timing["decode_s"]
+    dec_steps = max(args.gen - 1, 0)
+    print(f"# arch={cfg.name} engine=loop batch={args.requests} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+    print(f"# compile={timing['compile_s']:.2f}s "
+          f"prefill={timing['prefill_s']:.2f}s decode={timing['decode_s']:.2f}s "
+          f"({total_new / serve_s:.1f} tok/s batched greedy decode, "
           f"steady-state)")
-    for i in range(min(2, args.batch)):
+    for i in range(min(2, args.requests)):
         print(f"seq[{i}]:", np.asarray(toks[i]).tolist())
-
-    if args.metrics_out:
-        from repro.obs import MetricsLogger, make_sink, run_manifest
-
-        logger = MetricsLogger([make_sink(args.metrics_out)])
-        logger.start_run(run_manifest(
-            {"arch": cfg.name, "batch": args.batch,
-             "prompt_len": args.prompt_len, "gen": args.gen,
-             "dtype": args.dtype, "seed": args.seed},
-            arch=cfg.name, compile_s=round(timing["compile_s"], 6)))
-        # batched greedy decode: every sequence shares the batch's wall
-        # clock, so per-request latency is the honest end-to-end figure
-        # and tokens_per_s is the per-sequence share of decode throughput
-        latency_ms = timing["decode_s"] * 1e3
-        for i in range(args.batch):
-            logger.log_request({
-                "request_id": i,
-                "prompt_tokens": args.prompt_len,
-                "gen_tokens": args.gen,
-                "latency_ms": latency_ms,
-                "tokens_per_s": args.gen / timing["decode_s"],
-            })
-        logger.finish({"batch_tokens_per_s": round(
-            total_new / timing["decode_s"], 6)})
+    # every sequence shares the batch's wall clock; prefill/decode are
+    # split per the timing-honesty fix (decode_ms excludes prompt steps)
+    for i in range(args.requests):
+        logger.log_request({
+            "request_id": i,
+            "agent_id": -1,
+            "prompt_tokens": args.prompt_len,
+            "gen_tokens": args.gen,
+            "queue_ms": 0.0,
+            "prefill_ms": timing["prefill_s"] * 1e3,
+            "decode_ms": timing["decode_s"] * 1e3,
+            "latency_ms": serve_s * 1e3,
+            "tokens_per_s": (dec_steps / timing["decode_s"]
+                             if dec_steps and timing["decode_s"] > 0 else 0.0),
+        })
+    logger.finish({"completed": args.requests,
+                   "batch_tokens_per_s": round(total_new / serve_s, 6)})
 
 
 if __name__ == "__main__":

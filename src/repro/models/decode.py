@@ -29,9 +29,11 @@ from repro.models.transformer import _head_weight
 PyTree = Any
 
 
-def _use_ring(cfg, max_seq: int) -> bool:
+def use_ring(cfg, max_seq: int) -> bool:
     """Ring-buffer KV cache: O(window) storage for pure sliding-window
-    serving (the long_500k optimized variant — EXPERIMENTS.md §Perf C)."""
+    serving (the long_500k optimized variant — EXPERIMENTS.md §Perf C).
+    Public: the serve engine uses this to decide whether decode
+    positions are bounded by the cache allocation."""
     return bool(
         cfg.decode_window_slice
         and cfg.sliding_window
@@ -41,8 +43,27 @@ def _use_ring(cfg, max_seq: int) -> bool:
 
 
 def _kv_shape(cfg, batch, max_seq):
-    seq = cfg.sliding_window if _use_ring(cfg, max_seq) else max_seq
+    seq = cfg.sliding_window if use_ring(cfg, max_seq) else max_seq
     return (batch, seq, cfg.num_kv_heads, cfg.resolved_head_dim)
+
+
+def cache_max_seq(cfg, cache: Dict) -> int:
+    """The cache's sequence capacity, derived per family from its
+    canonical leaf — NOT from ``"k" in cache`` chains, which returned 0
+    for pure-SSM caches and silently depended on dict key order for
+    hybrids (regression-pinned in tests/test_serve.py).  Pure SSM has
+    no positional cache: the recurrent state is O(1), so 0 (nothing in
+    the SSM path consumes it)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        return cache["k"].shape[2]
+    if fam == "moe":
+        return cache["k_moe"].shape[2]
+    if fam == "hybrid":
+        return cache["k"].shape[2]
+    if fam == "ssm":
+        return 0
+    raise ValueError(fam)
 
 
 def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> PyTree:
@@ -192,11 +213,7 @@ def _embed_token(params, cfg, tokens):
 def serve_step(params, cfg, cache: Dict, tokens, pos):
     """tokens: (B,) int32; pos: scalar int32 — returns (logits (B,V), cache)."""
     fam = cfg.family
-    max_seq = (
-        cache["k"].shape[2]
-        if "k" in cache
-        else (cache["k_moe"].shape[2] if "k_moe" in cache else 0)
-    )
+    max_seq = cache_max_seq(cfg, cache)
     if fam != "audio":
         x = _embed_token(params, cfg, tokens)
 
@@ -255,7 +272,6 @@ def serve_step(params, cfg, cache: Dict, tokens, pos):
         shared = params["shared_attn"]
         k_every = cfg.shared_attn_every
         n_groups = cfg.num_layers // k_every
-        max_seq = cache["k"].shape[2]
         grouped_p = jax.tree.map(
             lambda a: a.reshape((n_groups, k_every) + a.shape[1:]), params["blocks"]
         )

@@ -64,7 +64,7 @@ __all__ = [
 ]
 
 # bump when a key is added/removed/retyped; recorded in every manifest
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 SINK_KINDS = ("jsonl", "csv", "stdout", "tensorboard")
 
@@ -166,12 +166,35 @@ REGISTRY: Tuple[MetricSpec, ...] = (
        "achieved HBM bandwidth: analytic bytes / fenced phase time"),
     _S("hbm_gbps_mix", "f32", "GB/s", "mix",
        "achieved HBM bandwidth: analytic bytes / fenced phase time"),
-    # ---- serve ------------------------------------------------------------
+    # ---- serve: per-request records ---------------------------------------
     _S("request_id", "i32", "1", "serve", "request (sequence) index in the batch"),
+    _S("agent_id", "i32", "1", "serve",
+       "cohort member that served the request (-1: population-mean snapshot)"),
     _S("prompt_tokens", "i32", "tokens", "serve", "prompt length"),
     _S("gen_tokens", "i32", "tokens", "serve", "generated tokens"),
+    _S("queue_ms", "f32", "ms", "serve",
+       "arrival -> slot admission wait (continuous-batching queue time)"),
+    _S("prefill_ms", "f32", "ms", "serve",
+       "wall time attributed to the request's teacher-forced prompt steps "
+       "(includes producing the first new token)"),
+    _S("decode_ms", "f32", "ms", "serve",
+       "wall time attributed to the request's decode steps after the first "
+       "new token (excludes prefill — the timing-honesty split)"),
     _S("latency_ms", "f32", "ms", "serve", "end-to-end request latency"),
-    _S("tokens_per_s", "f32", "tokens/s", "serve", "per-request decode throughput"),
+    _S("tokens_per_s", "f32", "tokens/s", "serve",
+       "per-request decode-only throughput (gen tokens after the first / "
+       "decode_ms)"),
+    # ---- serve: engine metrics (one record per logged chunk fence) --------
+    _S("queue_depth", "i32", "requests", "serve",
+       "requests waiting for a free slot at the chunk fence"),
+    _S("slots_active", "i32", "slots", "serve", "occupied decode slots"),
+    _S("slots_free", "i32", "slots", "serve", "free decode slots"),
+    _S("prefill_tokens", "i32", "tokens", "serve",
+       "prompt tokens consumed this chunk across all slots"),
+    _S("decode_tokens", "i32", "tokens", "serve",
+       "new tokens generated this chunk across all slots"),
+    _S("chunk_ms", "f32", "ms", "serve",
+       "fenced wall time of one jitted decode chunk"),
 )
 
 _EXACT = {s.key: s for s in REGISTRY if "*" not in s.key}

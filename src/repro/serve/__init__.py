@@ -1,0 +1,27 @@
+"""Continuous-batching serving engine over the HDO population.
+
+See ``docs/serving.md``: ``Engine`` (jitted scan decode over a fixed
+slot pool), ``Scheduler`` (host-side continuous batching at token
+granularity), and the population layer (``population_params`` /
+``load_population``: gossip-mean snapshot vs per-agent ensemble
+routing, both param layouts).
+"""
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.population import (
+    POPULATIONS,
+    load_population,
+    population_params,
+)
+from repro.serve.scheduler import Request, RequestResult, Scheduler, percentile
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "Request",
+    "RequestResult",
+    "Scheduler",
+    "percentile",
+    "POPULATIONS",
+    "population_params",
+    "load_population",
+]

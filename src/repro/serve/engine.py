@@ -1,0 +1,289 @@
+"""The continuous-batching decode engine: a fixed pool of decode slots
+driven by ONE jitted ``lax.scan`` program — no host round-trip per
+token.
+
+Design
+------
+* **Slot pool.**  ``n_slots`` independent decode lanes.  Each slot owns
+  a per-slot KV/SSM cache slice, a position counter, an active flag,
+  and an output-token row.  The caches are allocated ONCE at
+  ``(n_slots, cache_seq)`` via ``model.init_cache`` and never resized;
+  ``cache_seq`` is sized independently of the longest request (for
+  ring-eligible configs — ``decode.use_ring`` — the KV storage is the
+  sliding window, so positions are unbounded).
+
+* **Per-slot positions via vmap.**  ``models/decode.serve_step``
+  decodes a *lockstep* batch (one scalar ``pos`` for every sequence).
+  Continuous batching needs per-slot positions, so the engine stores
+  every cache leaf with an explicit singleton batch axis —
+  ``(lead, n_slots, 1, ...)`` — and vmaps a batch-of-1 ``serve_step``
+  over the slot axis.  Each lane is then an independent B=1 decode at
+  its own position; the per-lane math is identical to the batched
+  step, and the engine's greedy token streams are pinned BIT-IDENTICAL
+  to the per-token loop (``launch.serve.generate``) for all four text
+  families in ``tests/test_serve.py``.
+
+* **Jitted chunk scan.**  ``run_chunk`` dispatches one jitted
+  ``lax.scan`` of ``chunk`` decode steps.  Inside the scan every slot
+  teacher-forces its own prompt (prefill) and then feeds back its
+  greedy argmax (decode); slots flip inactive ON DEVICE the step their
+  budget (``total_len``) or ``eos_id`` is hit, so eviction is
+  token-granular even with ``chunk > 1``.  Admission happens at chunk
+  fences (``chunk=1`` gives full token-granularity scheduling; larger
+  chunks amortize dispatch overhead).
+
+* **Population-aware serving.**  ``ensemble=True`` accepts stacked
+  ``(n_agents, ...)`` params plus a per-slot routing table: the chunk
+  program gathers each slot's cohort member and vmaps params over the
+  slot axis, so different requests decode against different agents *in
+  the same batch*.  ``ensemble=False`` serves one snapshot (e.g. the
+  gossip-averaged population mean — see ``serve.population``).
+
+Inactive slots keep computing (vmap lanes are uniform) but their
+per-slot state is frozen by masks and their cache garbage is
+unobservable: admission zeroes the slot's cache slice and resets its
+position, and attention masks only ever read positions ``<= pos``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as decodelib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine geometry (fixed at build; shapes never change)."""
+
+    n_slots: int = 8
+    # per-slot cache sequence capacity.  Non-ring attention families
+    # need prompt+gen <= cache_seq per request; ring-eligible configs
+    # store only the window and are position-unbounded; SSM state is
+    # O(1) and ignores it.
+    cache_seq: int = 256
+    # output-buffer width per slot: every request needs
+    # prompt+gen <= max_total (this bounds host memory, not the cache)
+    max_total: int = 256
+    # decode steps per jitted dispatch (1 = token-granular scheduling)
+    chunk: int = 8
+    # generated token that terminates a request early (None: budget only)
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.cache_seq < 1 or self.max_total < 1:
+            raise ValueError("cache_seq and max_total must be >= 1")
+
+
+class Engine:
+    """Device half of the serving engine: slot-pool state + the two
+    jitted programs (``admit``: reset one slot; ``run_chunk``: scan
+    ``chunk`` decode steps over all slots)."""
+
+    def __init__(self, model, params: PyTree, *, config: EngineConfig,
+                 ensemble: bool = False):
+        self.model = model
+        self.cfg = model.cfg
+        self.config = config
+        self.ensemble = ensemble
+        self._params = params
+        if ensemble:
+            lead = {int(x.shape[0]) for x in jax.tree.leaves(params)}
+            if len(lead) != 1:
+                raise ValueError(
+                    "ensemble=True needs stacked (n_agents, ...) params with "
+                    f"a uniform leading axis, got leading dims {sorted(lead)}"
+                )
+            self.n_agents = lead.pop()
+        else:
+            self.n_agents = 1
+        if self.cfg.family in ("vlm", "audio"):
+            raise ValueError(
+                "the serve engine covers the text decoders "
+                "(dense/moe/ssm/hybrid); vlm/audio decode shapes go through "
+                "dryrun"
+            )
+        # position bound: non-ring attention caches hold cache_seq
+        # positions; ring caches and pure-SSM state are unbounded
+        ring = decodelib.use_ring(self.cfg, config.cache_seq)
+        self._pos_bound = (
+            None if ring or self.cfg.family == "ssm" else config.cache_seq
+        )
+        self._st = self._init_state()
+        self._chunk_fn = jax.jit(self._build_chunk_fn())
+        self._admit_fn = jax.jit(self._build_admit_fn())
+        # host mirror of the small per-slot state, refreshed at fences
+        self.pos = np.zeros(config.n_slots, np.int32)
+        self.active = np.zeros(config.n_slots, bool)
+
+    # -- state construction -------------------------------------------------
+    def _init_state(self) -> Dict[str, Any]:
+        c = self.config
+        cache = self.model.init_cache(c.n_slots, c.cache_seq)
+        # (lead, n_slots, ...) -> (lead, n_slots, 1, ...): the singleton
+        # is the B=1 batch axis each vmap lane sees
+        cache = jax.tree.map(lambda a: jnp.expand_dims(a, 2), cache)
+        n = c.n_slots
+        return {
+            "cache": cache,
+            "cur_tok": jnp.zeros((n,), jnp.int32),
+            "pos": jnp.zeros((n,), jnp.int32),
+            "active": jnp.zeros((n,), bool),
+            "prompt_len": jnp.zeros((n,), jnp.int32),
+            "total_len": jnp.zeros((n,), jnp.int32),
+            "prompt_buf": jnp.zeros((n, c.max_total), jnp.int32),
+            "out_tok": jnp.zeros((n, c.max_total), jnp.int32),
+            "route": jnp.zeros((n,), jnp.int32),
+        }
+
+    # -- jitted programs ----------------------------------------------------
+    def _build_chunk_fn(self):
+        cfg, c = self.cfg, self.config
+        n, eos = c.n_slots, c.eos_id
+
+        def one(p, cache1, tok, pos):
+            logits, cache1 = decodelib.serve_step(p, cfg, cache1, tok[None], pos)
+            return logits[0], cache1
+
+        vstep = jax.vmap(one, in_axes=(0 if self.ensemble else None, 1, 0, 0),
+                         out_axes=(0, 1))
+
+        def chunk_fn(params, st):
+            if self.ensemble:
+                # slot -> cohort member: gather once per chunk (routing
+                # is fixed between admission fences)
+                params = jax.tree.map(lambda a: a[st["route"]], params)
+            plen, tlen = st["prompt_len"], st["total_len"]
+            pbuf = st["prompt_buf"]
+
+            def body(carry, _):
+                cache, tok, pos, active, out, n_pf, n_dc = carry
+                logits, cache = vstep(params, cache, tok, pos)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                # a step consuming stream position pos < prompt_len is
+                # prefill work; everything after is decode
+                step_pref = pos < plen
+                n_pf = n_pf + jnp.sum((active & step_pref).astype(jnp.int32))
+                n_dc = n_dc + jnp.sum((active & ~step_pref).astype(jnp.int32))
+                t1 = pos + 1
+                t1c = jnp.minimum(t1, c.max_total - 1)
+                p_tok = jnp.take_along_axis(pbuf, t1c[:, None], 1)[:, 0]
+                emit = jnp.where(t1 < plen, p_tok, nxt)
+                cur = jnp.take_along_axis(out, t1c[:, None], 1)[:, 0]
+                out = out.at[jnp.arange(n), t1c].set(
+                    jnp.where(active, emit, cur))
+                done = t1 >= tlen - 1
+                if eos is not None:
+                    done = done | ((t1 >= plen) & (emit == eos))
+                pos = jnp.where(active, t1, pos)
+                tok = jnp.where(active, emit, tok)
+                active = active & ~done
+                return (cache, tok, pos, active, out, n_pf, n_dc), None
+
+            carry = (st["cache"], st["cur_tok"], st["pos"], st["active"],
+                     st["out_tok"], jnp.int32(0), jnp.int32(0))
+            carry, _ = jax.lax.scan(body, carry, None, length=c.chunk)
+            cache, tok, pos, active, out, n_pf, n_dc = carry
+            new = dict(st, cache=cache, cur_tok=tok, pos=pos, active=active,
+                       out_tok=out)
+            return new, (n_pf, n_dc)
+
+        return chunk_fn
+
+    def _build_admit_fn(self):
+        def admit_fn(st, slot, prompt_row, p_len, t_len, agent):
+            # zero the slot's cache slice: attention masks make stale
+            # positions unobservable, but SSM state is recurrent and
+            # MUST reset with the request
+            cache = jax.tree.map(lambda a: a.at[:, slot].set(0), st["cache"])
+            return dict(
+                st,
+                cache=cache,
+                cur_tok=st["cur_tok"].at[slot].set(prompt_row[0]),
+                pos=st["pos"].at[slot].set(0),
+                active=st["active"].at[slot].set(True),
+                prompt_len=st["prompt_len"].at[slot].set(p_len),
+                total_len=st["total_len"].at[slot].set(t_len),
+                prompt_buf=st["prompt_buf"].at[slot].set(prompt_row),
+                out_tok=st["out_tok"].at[slot].set(
+                    jnp.zeros_like(prompt_row).at[0].set(prompt_row[0])),
+                route=st["route"].at[slot].set(agent),
+            )
+
+        return admit_fn
+
+    # -- host API -----------------------------------------------------------
+    def validate(self, prompt_len: int, max_gen: int, agent: int = 0) -> None:
+        """Raise ValueError when a request cannot fit this engine."""
+        c = self.config
+        total = prompt_len + max_gen
+        if prompt_len < 1 or max_gen < 1:
+            raise ValueError(
+                f"need prompt_len >= 1 and max_gen >= 1, got "
+                f"({prompt_len}, {max_gen})"
+            )
+        if total > c.max_total:
+            raise ValueError(
+                f"request needs {total} output positions but the engine's "
+                f"max_total is {c.max_total}"
+            )
+        if self._pos_bound is not None and total > self._pos_bound:
+            raise ValueError(
+                f"request needs {total} cache positions but cache_seq is "
+                f"{self._pos_bound} (non-ring attention cache; use a "
+                f"ring-eligible config or a larger cache_seq)"
+            )
+        if not 0 <= agent < self.n_agents:
+            raise ValueError(
+                f"agent {agent} out of range for a population of "
+                f"{self.n_agents}"
+            )
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.config.n_slots) if not self.active[i]]
+
+    def admit(self, slot: int, prompt: np.ndarray, max_gen: int,
+              agent: int = 0) -> None:
+        """Reset ``slot`` and start decoding ``prompt`` (teacher-forced)
+        followed by up to ``max_gen`` greedy tokens."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.validate(len(prompt), max_gen, agent)
+        row = np.zeros((self.config.max_total,), np.int32)
+        row[: len(prompt)] = prompt
+        self._st = self._admit_fn(
+            self._st, jnp.int32(slot), jnp.asarray(row),
+            jnp.int32(len(prompt)), jnp.int32(len(prompt) + max_gen),
+            jnp.int32(agent),
+        )
+        self.pos[slot] = 0
+        self.active[slot] = True
+
+    def run_chunk(self):
+        """Dispatch one jitted chunk; sync the small per-slot state back
+        to the host (this read is the scheduler's timing fence).
+        Returns ``(prefill_tokens, decode_tokens)`` for the chunk."""
+        self._st, (n_pf, n_dc) = self._chunk_fn(self._params, self._st)
+        # np.array copies: asarray would alias read-only device buffers
+        # and break the in-place writes admit() does to these mirrors
+        self.pos = np.array(self._st["pos"])
+        self.active = np.array(self._st["active"])
+        return int(n_pf), int(n_dc)
+
+    def collect(self, slot: int) -> np.ndarray:
+        """The slot's emitted stream (prompt echo + generated tokens):
+        positions ``0..pos`` of its output row."""
+        row = np.asarray(self._st["out_tok"][slot])
+        return row[: int(self.pos[slot]) + 1].copy()
+
+
+__all__ = ["Engine", "EngineConfig"]

@@ -1,0 +1,102 @@
+"""Population-aware serving: resolve an HDO cohort into servable
+params.
+
+An HDO cohort is naturally an ensemble — the paper trains ``n_agents``
+models that gossip toward consensus — so the engine serves either
+
+* ``population="mean"`` — one snapshot of the gossip-averaged
+  population (the consensus estimate x̄), or
+* ``population="ensemble"`` — the stacked per-agent params, with a
+  slot→agent routing table so different requests decode against
+  different cohort members in the same batch.
+
+Both work for BOTH persistent parameter layouts: ``"tree"`` (stacked
+pytree) and ``"plane"`` (one contiguous ``(n_agents, dim)`` buffer —
+``core/plane.py``); the plane unpacks ONLY here, at the serving
+boundary.  ``load_population`` restores a training checkpoint through
+the existing ``checkpoint.read_meta`` guards (param_layout +
+manifest_hash checked BEFORE any array load).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.configs.base import HDOConfig
+from repro.core import plane as planelib
+
+PyTree = Any
+
+POPULATIONS = ("mean", "ensemble")
+
+
+def _plane_manifest(template: PyTree) -> planelib.PlaneManifest:
+    return planelib.build_manifest(template)
+
+
+def population_params(params: PyTree, *, mode: str,
+                      param_layout: str = "tree",
+                      template: Optional[PyTree] = None) -> PyTree:
+    """Servable params from an ``HDOState.params`` population.
+
+    ``mode="mean"`` returns one model pytree (the population mean);
+    ``mode="ensemble"`` returns the stacked ``(n_agents, ...)`` pytree
+    for per-slot routing.  ``param_layout="plane"`` needs ``template``
+    (any single-model pytree of the architecture) to rebuild the leaf
+    manifest.
+    """
+    if mode not in POPULATIONS:
+        raise ValueError(f"population must be one of {POPULATIONS}, got {mode!r}")
+    if param_layout == "plane":
+        if template is None:
+            raise ValueError(
+                "param_layout='plane' needs a template pytree to rebuild "
+                "the leaf manifest (pass e.g. model.init(key))"
+            )
+        man = _plane_manifest(template)
+        if mode == "mean":
+            return planelib.unpack(man, jnp.mean(params, axis=0))
+        return planelib.unpack_stacked(man, params)
+    if mode == "mean":
+        return jax.tree.map(lambda a: jnp.mean(a, axis=0), params)
+    return params
+
+
+def load_population(path: str, model, *,
+                    hcfg: Optional[HDOConfig] = None,
+                    seed: int = 0) -> Tuple[Any, HDOConfig]:
+    """Restore a trained population for serving.
+
+    Reads the sidecar meta first and runs the pre-restore guards
+    (``checkpoint.check_meta_compat``: param_layout + manifest_hash), so
+    serving a checkpoint from a drifted model or layout fails with a
+    clear message before any array load.  The ``HDOConfig`` is rebuilt
+    from the checkpoint meta when not passed (train.py records it).
+
+    Returns ``(HDOState, HDOConfig)``.
+    """
+    from repro.core import init_state  # deferred: core imports are heavy
+
+    meta = checkpoint.read_meta(path)
+    if hcfg is None:
+        saved = meta.get("hdo")
+        if saved is None:
+            raise ValueError(
+                f"checkpoint {path!r} carries no HDOConfig in its meta — "
+                "pass hcfg= matching the training run"
+            )
+        hcfg = HDOConfig(**saved)
+    template = model.init(jax.random.PRNGKey(seed))
+    man_hash = planelib.manifest_hash(_plane_manifest(template))
+    checkpoint.check_meta_compat(
+        meta, param_layout=hcfg.param_layout, manifest_hash=man_hash
+    )
+    like = init_state(template, hcfg)
+    state, _ = checkpoint.restore_state(path, like)
+    return state, hcfg
+
+
+__all__ = ["POPULATIONS", "population_params", "load_population"]

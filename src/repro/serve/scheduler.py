@@ -1,0 +1,250 @@
+"""Host half of the serving engine: request queue + continuous-batching
+scheduler.
+
+The scheduler owns everything the device program cannot: the pending
+queue, arrival times (wall-clock for offered-load benches, or
+deterministic *decode ticks* for replayable tests), slot assignment,
+request routing (ensemble mode), per-request timing attribution, and
+the engine metrics stream.
+
+Timing honesty
+--------------
+Every request record splits **queue / prefill / decode** instead of
+lumping teacher-forced prefill steps into decode throughput (the bug
+the per-token loop had): the scheduler fences at chunk boundaries
+(reading the engine's per-slot state forces the sync) and attributes
+each chunk's wall time to a slot's prefill vs decode phases by its
+exact step counts inside the chunk (known from ``pos`` before/after vs
+``prompt_len``).  With ``chunk=1`` the attribution is per-token exact;
+larger chunks are exact up to intra-chunk step-time variance.
+``tokens_per_s`` is decode-only: generated tokens after the first,
+divided by decode wall time (the first new token is priced into
+prefill, where its latency actually lives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``arrival_tick`` schedules the request in *decode ticks* (engine
+    scan steps) — fully deterministic, wall-clock free (the parity /
+    invariant tests).  ``arrival_s`` (seconds after ``run()`` starts)
+    overrides it for offered-load benchmarking.  ``agent`` routes the
+    request to one cohort member on an ensemble engine.
+    """
+
+    request_id: int
+    prompt: np.ndarray
+    max_gen: int
+    agent: int = 0
+    arrival_tick: int = 0
+    arrival_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    agent: int
+    tokens: np.ndarray  # prompt echo + generated tokens
+    prompt_tokens: int
+    gen_tokens: int
+    finish_reason: str  # "budget" | "eos"
+    queue_ms: float
+    prefill_ms: float
+    decode_ms: float
+    latency_ms: float
+    tokens_per_s: float  # decode-only throughput (see module docstring)
+
+
+@dataclasses.dataclass
+class _Running:
+    req: Request
+    slot: int
+    eligible_t: float
+    admit_t: float
+    prefill_ms: float = 0.0
+    decode_ms: float = 0.0
+    decode_steps: int = 0
+    pos_before: int = 0
+
+
+class Scheduler:
+    """Continuous batching over an :class:`Engine`: admit queued
+    requests into freed slots and evict finished ones at token
+    granularity, emitting ``serve_request`` records plus per-chunk
+    engine metrics (queue depth, slot occupancy, prefill-vs-decode
+    split) through the ``repro.obs`` logger."""
+
+    def __init__(self, engine: Engine, *, logger=None, log_every: int = 1,
+                 time_fn=time.perf_counter):
+        self.engine = engine
+        self.logger = logger
+        self.log_every = max(1, log_every)
+        self._time = time_fn
+        self.pending: List[Request] = []
+        self.results: List[RequestResult] = []
+        self.ticks = 0  # total decode steps dispatched
+        self._chunks = 0
+        self._seen: set = set()
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.request_id in self._seen:
+            raise ValueError(f"duplicate request_id {req.request_id}")
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        self.engine.validate(len(prompt), req.max_gen, req.agent)
+        self._seen.add(req.request_id)
+        self.pending.append(dataclasses.replace(req, prompt=prompt))
+
+    def _due(self, now_s: float) -> List[Request]:
+        out = []
+        for r in self.pending:
+            if r.arrival_s is not None:
+                if now_s >= r.arrival_s:
+                    out.append(r)
+            elif self.ticks >= r.arrival_tick:
+                out.append(r)
+        return out
+
+    # -- the loop -----------------------------------------------------------
+    def run(self) -> List[RequestResult]:
+        """Drive the engine until every submitted request completes.
+        FIFO admission (submission order) among due requests."""
+        eng = self.engine
+        t0 = self._time()
+        running: Dict[int, _Running] = {}  # slot -> running record
+        eligible_at: Dict[int, float] = {}
+
+        while self.pending or running:
+            now = self._time() - t0
+            due = self._due(now)
+            for r in due:
+                eligible_at.setdefault(r.request_id, self._time())
+            free = [s for s in eng.free_slots() if s not in running]
+            while due and free:
+                r, due = due[0], due[1:]
+                slot = free.pop(0)
+                self.pending.remove(r)
+                t_adm = self._time()
+                eng.admit(slot, r.prompt, r.max_gen, agent=r.agent)
+                running[slot] = _Running(
+                    req=r, slot=slot,
+                    eligible_t=eligible_at.get(r.request_id, t_adm),
+                    admit_t=t_adm, pos_before=0,
+                )
+            if not running:
+                self._advance_idle(t0)
+                continue
+
+            t_c0 = self._time()
+            n_pf, n_dc = eng.run_chunk()  # fenced: syncs pos/active
+            chunk_ms = (self._time() - t_c0) * 1e3
+            self.ticks += eng.config.chunk
+            self._chunks += 1
+            self._attribute(running, chunk_ms)
+            self._log_chunk(n_pf, n_dc, chunk_ms, len(running))
+            t_fence = self._time()
+            for slot in [s for s, rr in running.items()
+                         if not eng.active[s]]:
+                self._finish(running.pop(slot), t_fence)
+        return self.results
+
+    def _advance_idle(self, t0: float) -> None:
+        """Nothing active: jump the clock to the next arrival instead of
+        spinning (ticks fast-forward; wall arrivals sleep)."""
+        tick_next = [r.arrival_tick for r in self.pending
+                     if r.arrival_s is None]
+        wall_next = [r.arrival_s for r in self.pending
+                     if r.arrival_s is not None]
+        if tick_next and (not wall_next):
+            self.ticks = max(self.ticks, min(tick_next))
+            return
+        if wall_next:
+            wait = min(wall_next) - (self._time() - t0)
+            if wait > 0:
+                time.sleep(min(wait, 0.05))
+            if tick_next:
+                self.ticks = max(self.ticks, min(tick_next))
+
+    def _attribute(self, running: Dict[int, _Running], chunk_ms: float) -> None:
+        chunk = self.engine.config.chunk
+        for rr in running.values():
+            pos_after = int(self.engine.pos[rr.slot])
+            steps = pos_after - rr.pos_before
+            plen = len(rr.req.prompt)
+            pf = min(max(plen - rr.pos_before, 0), steps)
+            dc = steps - pf
+            rr.prefill_ms += chunk_ms * pf / chunk
+            rr.decode_ms += chunk_ms * dc / chunk
+            rr.decode_steps += dc
+            rr.pos_before = pos_after
+
+    def _finish(self, rr: _Running, t_fence: float) -> None:
+        eng = self.engine
+        toks = eng.collect(rr.slot)
+        plen = len(rr.req.prompt)
+        gen = len(toks) - plen
+        reason = "budget" if gen >= rr.req.max_gen else "eos"
+        dec_s = rr.decode_ms / 1e3
+        res = RequestResult(
+            request_id=rr.req.request_id,
+            agent=rr.req.agent if eng.ensemble else -1,
+            tokens=toks,
+            prompt_tokens=plen,
+            gen_tokens=gen,
+            finish_reason=reason,
+            queue_ms=(rr.admit_t - rr.eligible_t) * 1e3,
+            prefill_ms=rr.prefill_ms,
+            decode_ms=rr.decode_ms,
+            latency_ms=(t_fence - rr.eligible_t) * 1e3,
+            tokens_per_s=(rr.decode_steps / dec_s) if dec_s > 0 else 0.0,
+        )
+        self.results.append(res)
+        if self.logger is not None and self.logger.enabled:
+            self.logger.log_request({
+                "request_id": res.request_id,
+                "agent_id": res.agent,
+                "prompt_tokens": res.prompt_tokens,
+                "gen_tokens": res.gen_tokens,
+                "queue_ms": res.queue_ms,
+                "prefill_ms": res.prefill_ms,
+                "decode_ms": res.decode_ms,
+                "latency_ms": res.latency_ms,
+                "tokens_per_s": res.tokens_per_s,
+            })
+
+    def _log_chunk(self, n_pf: int, n_dc: int, chunk_ms: float,
+                   n_running: int) -> None:
+        if self.logger is None or not self.logger.enabled:
+            return
+        if (self._chunks - 1) % self.log_every:
+            return
+        n_slots = self.engine.config.n_slots
+        self.logger.log_round(self._chunks - 1, {
+            "queue_depth": len(self.pending),
+            "slots_active": n_running,
+            "slots_free": n_slots - n_running,
+            "prefill_tokens": n_pf,
+            "decode_tokens": n_dc,
+            "chunk_ms": chunk_ms,
+        })
+
+
+def percentile(values, q) -> float:
+    """p50/p99 helper over a list of floats (empty -> 0.0)."""
+    if not values:
+        return 0.0
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+__all__ = ["Request", "RequestResult", "Scheduler", "percentile"]

@@ -48,5 +48,6 @@ def test_readme_quickstart_snippet_compiles():
 def test_required_docs_exist():
     for rel in ("README.md", os.path.join("docs", "paper_map.md"),
                 os.path.join("docs", "observability.md"),
+                os.path.join("docs", "serving.md"),
                 os.path.join("benchmarks", "README.md")):
         assert os.path.exists(os.path.join(REPO, rel)), rel
