@@ -39,6 +39,14 @@ subsystem exists to expose: bytes-on-wire per agent per round
 per-round Gamma contraction under that compressor
 (``topology.spectral.effective_slem`` squared) and wall time; ``--json``
 writes ``BENCH_compress.json`` (schema in ``benchmarks/README.md``).
+
+The ``shard_*`` section prices the sharded HDO round
+(``core/shardround.py``): analytic cross-device wire bytes of the
+ppermute-decomposed gossip vs the all-gather alternative per topology
+and shard count, plus fenced per-phase wall time of the sharded round
+at a few ``agents x model`` mesh shapes on 8 forced host devices;
+``--json`` writes ``BENCH_shard.json`` (schema in
+``benchmarks/README.md``).
 """
 from __future__ import annotations
 
@@ -108,6 +116,7 @@ def main(json_path: str | None = None) -> None:
     optim_bench(json_path=side("BENCH_optim.json"))
     plane_bench(json_path=side("BENCH_plane.json"))
     compress_bench(json_path=side("BENCH_compress.json"))
+    shard_bench(json_path=side("BENCH_shard.json"))
 
 
 def gossip_bench(d: int = 1 << 20, json_path: str | None = None):
@@ -465,6 +474,139 @@ def estimator_bench(d: int = 1 << 20, rv: int = 8, json_path: str | None = None)
             json.dump(payload, f, indent=2)
             f.write("\n")
     return entries
+
+
+def shard_bench(n: int = 8, d: int = 1 << 20, json_path: str | None = None):
+    """The sharded HDO round (core/shardround.py) over the
+    ``agents x model`` mesh: analytic cross-device wire traffic of the
+    ppermute-decomposed gossip, plus fenced per-phase wall time at a
+    few mesh shapes.
+
+    ``wire`` entries are device-free (``topology.shardmix`` plan):
+    the round-decomposed ppermute schedule moves
+    ``n_edges * n_local * d * 4`` bytes per mix — for a k-regular
+    graph fully split (one agent per shard) that is ``k * n * d * 4``
+    regardless of the shard count A (scales with neighbor degree),
+    while the all-gather alternative moves ``(A - 1) * n * d * 4``
+    (scales with A).  Both figures are carried so the perf trajectory
+    can assert the ratio.
+
+    ``phases`` entries time the sharded round at shapes
+    ``(A, M) in {(8,1), (4,1), (4,2)}`` in a subprocess with 8 forced
+    host devices (one process hosting every shard — a structural
+    number like the interpret-mode kernels, not TPU perf); the
+    attached analytic HBM bytes are PER SHARD
+    (``obs.timing.analytic_phase_bytes(..., n_shards=A*M)``).
+    """
+    from repro.topology import shardmix
+    from repro.topology.graphs import make_topology
+
+    wire = []
+    for name in ("ring", "torus", "hypercube", "erdos_renyi"):
+        kw = {"p": 0.5, "seed": 3} if name == "erdos_renyi" else {}
+        topo = make_topology(name, n, **kw)
+        for A in (2, 4, 8):
+            if n % A:
+                continue
+            plan = shardmix.plan_shard_mix(topo, A)
+            pb = plan.ppermute_bytes(d)
+            ab = plan.allgather_bytes(d)
+            if name != "erdos_renyi" and A == n:
+                # fully split, k-regular: the degree-vs-population claim
+                # is exact, not approximate
+                assert pb == topo.k * n * d * 4, (name, pb)
+                assert ab == (A - 1) * n * d * 4, (name, ab)
+            wire.append({
+                "topology": name, "k": int(topo.k), "shards": A,
+                "n_local": n // A, "rounds": plan.n_rounds,
+                "edges": plan.n_edges,
+                "ppermute_bytes": pb, "allgather_bytes": ab,
+            })
+            print(csv_line(
+                f"shard_wire_{name}_A{A}", 0.0,
+                f"ppermute_mb={pb / 1e6:.1f} allgather_mb={ab / 1e6:.1f}"))
+
+    # per-phase wall time needs 8 devices; force host devices in a
+    # fresh interpreter (XLA_FLAGS is read once at jax import)
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os, json
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                                   + os.environ.get("XLA_FLAGS", ""))
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import HDOConfig
+        from repro.core import init_state
+        from repro.core import plane as planelib
+        from repro.launch.mesh import make_hdo_mesh
+        from repro.obs import timing as obstiming
+
+        k = jax.random.PRNGKey(7)
+        ks = jax.random.split(k, 3)
+        params = {
+            "emb": jax.random.normal(ks[0], (96, 90)) * 0.1,
+            "blk": {"w": jax.random.normal(ks[1], (40, 40)) * 0.1,
+                    "b": jnp.zeros((40,)), "ln": jnp.ones((40,))},
+            "head": jax.random.normal(ks[2], (90,)) * 0.1,
+        }
+        D = planelib.build_manifest(params).size
+
+        def loss_fn(p, batch):
+            w = jnp.concatenate([l.reshape(-1)
+                                 for l in jax.tree_util.tree_leaves(p)])
+            return jnp.mean((batch["X"] @ w - batch["y"]) ** 2)
+
+        cfg = HDOConfig(n_agents=8, n_zeroth=4, lr=0.05, rv=2,
+                        topology="ring", gossip="graph",
+                        param_layout="plane", zo_impl="fused")
+        X = jax.random.normal(jax.random.PRNGKey(3), (8, 4, D)) / np.sqrt(D)
+        batches = {"X": X, "y": X @ jnp.zeros((D,))}
+        state = init_state(params, cfg)
+        entries = []
+        for (A, M) in ((8, 1), (4, 1), (4, 2)):
+            mesh = make_hdo_mesh(8, M, agent_shards=A)
+            fns = obstiming.build_phase_fns(
+                loss_fn, cfg, param_dim=D, params_template=params,
+                shard=True, mesh=mesh, population_axes=("agents",),
+                model_axes=("model",))
+            timer = obstiming.PhaseTimer(
+                fns, obstiming.analytic_phase_bytes(cfg, D, n_shards=A * M),
+                reps=2)
+            timer.measure(state, batches)  # compile pass
+            t = timer.measure(state, batches)
+            entries.append({"mesh": [A, M],
+                            "metrics": {k: round(float(v), 4)
+                                        for k, v in t.items()}})
+        print("SHARD_PHASES_JSON " + json.dumps({"d": D, "entries": entries}))
+    """)
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=600, env=env)
+    phases = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("SHARD_PHASES_JSON "):
+            phases = json.loads(line[len("SHARD_PHASES_JSON "):])
+    if phases is None:
+        print(csv_line("shard_phases_skipped", 0.0,
+                       f"rc={proc.returncode}"))
+    else:
+        for e in phases["entries"]:
+            m = e["metrics"]
+            print(csv_line(
+                f"shard_round_A{e['mesh'][0]}_M{e['mesh'][1]}",
+                sum(m.get(f"phase_ms_{p}", 0.0)
+                    for p in ("estimate", "update", "mix")) * 1e3,
+                f"mix_ms={m.get('phase_ms_mix', 0.0):.3f}"))
+    if json_path:
+        payload = {"n": n, "d": d, "backend": jax.default_backend(),
+                   "wire": wire, "phases": phases}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return wire, phases
 
 
 if __name__ == "__main__":

@@ -32,8 +32,11 @@ def fmt_s(x) -> str:
 
 
 def render(rows: List[Dict], markdown: bool = True, multi_pod=False) -> str:
-    hdr = ["arch", "shape", "t_comp", "t_mem", "t_coll", "bottleneck",
-           "useful", "peak_mem/dev", "note"]
+    # every t_* / bandwidth / peak-mem figure is PER SHARD (one device's
+    # slice of the mesh; "shards" shows how many the estimate divides
+    # the round over) — whole-population numbers are shards x per-shard
+    hdr = ["arch", "shape", "shards", "t_comp", "t_mem", "t_coll",
+           "bottleneck", "useful", "peak_mem/dev", "note"]
     lines = []
     if markdown:
         lines.append("| " + " | ".join(hdr) + " |")
@@ -41,16 +44,18 @@ def render(rows: List[Dict], markdown: bool = True, multi_pod=False) -> str:
     for r in rows:
         if r.get("multi_pod") != multi_pod:
             continue
+        chips = r.get("chips", "-")
         if "error" in r:
-            row = [r["arch"], r["shape"], "-", "-", "-", "-", "-", "-", "ERROR"]
+            row = [r["arch"], r["shape"], chips, "-", "-", "-", "-", "-", "-",
+                   "ERROR"]
         elif "skipped" in r:
-            row = [r["arch"], r["shape"], "-", "-", "-", "-", "-", "-",
+            row = [r["arch"], r["shape"], chips, "-", "-", "-", "-", "-", "-",
                    "skipped (full attention; DESIGN.md §4)"]
         else:
             mem = r.get("memory", {}).get("peak_memory_in_bytes")
             useful = r.get("useful_ratio")
             row = [
-                r["arch"], r["shape"],
+                r["arch"], r["shape"], chips,
                 fmt_s(r.get("t_compute_s")), fmt_s(r.get("t_memory_s")),
                 fmt_s(r.get("t_collective_s")), r.get("bottleneck", "-"),
                 f"{useful:.2f}" if useful else "-",

@@ -191,6 +191,9 @@ TOPOLOGIES = (
     "ring", "torus", "hypercube", "erdos_renyi",
     "tv_round_robin", "tv_erdos_renyi",
 )
+# gossip modes the sharded (mesh) round supports; "graph" and
+# "graph_ppermute" are the same ppermute lowering under shard_map
+SHARD_GOSSIP_MODES = ("none", "all_reduce", "graph", "graph_ppermute")
 MOMENTUM_DTYPES = ("float32", "bfloat16")
 PARAM_LAYOUTS = ("tree", "plane")
 COMPRESSIONS = ("none", "topk", "qsgd")

@@ -170,6 +170,8 @@ def plane_zo_estimate(
     nu: float = 1e-4,
     rv_actual=None,
     interpret: Optional[bool] = None,
+    tables=None,
+    assemble=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``flat_zo_estimate`` over the persistent plane: (loss_at_x, g).
 
@@ -180,13 +182,22 @@ def plane_zo_estimate(
     draw on the *compact* counter stream (``plane.rng_tables``), so
     every u_r is bit-identical to the tree-layout fused engine's over
     ``ravel_pytree`` of the same model; pad lanes stay zero.
+
+    Under FSDP sharding of the dim axis, ``x`` is the shard-local slice:
+    pass this shard's ``(delta, nvalid)`` via ``tables`` (see
+    ``plane.rng_tables_sharded``) and a gather-to-full-row callable via
+    ``assemble`` (e.g. a tiled ``all_gather`` over the model axis) so
+    perturb/combine run on local lanes while the loss sees full rows.
     """
     if kind not in FUSED_KINDS:
         raise ValueError(f"fused ZO engine supports {FUSED_KINDS}, got {kind!r}")
     if kind == "fwd_grad":
         return plane_fwd_grad(loss_fn, x, key, manifest=manifest, rv=rv,
-                              rv_actual=rv_actual, interpret=interpret)
-    delta, nvalid = planelib.rng_tables(manifest)
+                              rv_actual=rv_actual, interpret=interpret,
+                              tables=tables, assemble=assemble)
+    delta, nvalid = tables if tables is not None else planelib.rng_tables(manifest)
+    full = assemble if assemble is not None else (lambda v: v)
+    d_local = x.shape[0]
     seed = seed_from_key(key)
     nu = jnp.asarray(nu, jnp.float32)
     two_point = kind in ("biased_2pt", "multi_rv")
@@ -194,8 +205,8 @@ def plane_zo_estimate(
     if kind != "multi_rv":
         rv_actual = None  # single-draw kinds have nothing to mask
 
-    loss0 = loss_fn(planelib.unpack(manifest, x))
-    plane_loss = lambda v: loss_fn(planelib.unpack(manifest, v))
+    loss0 = loss_fn(planelib.unpack(manifest, full(x)))
+    plane_loss = lambda v: loss_fn(planelib.unpack(manifest, full(v)))
 
     def coeff(_, r):
         lp = plane_loss(ops.zo_perturb_plane(x, seed, r, nu, delta, nvalid,
@@ -210,7 +221,7 @@ def plane_zo_estimate(
 
     _, coeffs = jax.lax.scan(coeff, None, jnp.arange(n_draws))
     coeffs, n_active = _mask_coeffs(coeffs, rv_actual)
-    g = ops.zo_combine_plane(coeffs, seed, delta, nvalid, manifest.dim,
+    g = ops.zo_combine_plane(coeffs, seed, delta, nvalid, d_local,
                              n_active=n_active, out_dtype=x.dtype,
                              interpret=interpret)
     return loss0, g
@@ -225,25 +236,30 @@ def plane_fwd_grad(
     rv: int = 4,
     rv_actual=None,
     interpret: Optional[bool] = None,
+    tables=None,
+    assemble=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``flat_fwd_grad`` over the persistent plane (see
-    ``plane_zo_estimate`` for the layout/stream contract).  The f32
-    tangent is unpacked at the jvp boundary — the same per-leaf
-    rounding the tree-layout path applies via ``unravel``."""
-    delta, nvalid = planelib.rng_tables(manifest)
+    ``plane_zo_estimate`` for the layout/stream contract, including the
+    sharded ``tables``/``assemble`` hooks).  The f32 tangent is unpacked
+    at the jvp boundary — the same per-leaf rounding the tree-layout
+    path applies via ``unravel``."""
+    delta, nvalid = tables if tables is not None else planelib.rng_tables(manifest)
+    full = assemble if assemble is not None else (lambda v: v)
+    d_local = x.shape[0]
     seed = seed_from_key(key)
-    unpacked = planelib.unpack(manifest, x)
+    unpacked = planelib.unpack(manifest, full(x))
 
     def draw(_, r):
-        u = ops.zo_tangent_plane(seed, r, delta, nvalid, manifest.dim,
+        u = ops.zo_tangent_plane(seed, r, delta, nvalid, d_local,
                                  interpret=interpret)
         primal, jvp = jax.jvp(loss_fn, (unpacked,),
-                              (planelib.unpack(manifest, u),))
+                              (planelib.unpack(manifest, full(u)),))
         return None, (primal, jvp.astype(jnp.float32))
 
     _, (primals, coeffs) = jax.lax.scan(draw, None, jnp.arange(rv))
     coeffs, n_active = _mask_coeffs(coeffs, rv_actual)
-    g = ops.zo_combine_plane(coeffs, seed, delta, nvalid, manifest.dim,
+    g = ops.zo_combine_plane(coeffs, seed, delta, nvalid, d_local,
                              n_active=n_active, out_dtype=x.dtype,
                              interpret=interpret)
     return primals[0], g

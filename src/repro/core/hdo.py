@@ -434,6 +434,8 @@ def build_hdo_step(
     population_axes: Tuple[str, ...] = (),
     params_template: Optional[PyTree] = None,
     extended_metrics: bool = False,
+    shard: bool = False,
+    model_axes: Tuple[str, ...] = (),
 ) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
     """Returns step(state, batches) -> (state, metrics).
 
@@ -510,7 +512,36 @@ def build_hdo_step(
     pytree is rebuilt only at the loss/jvp boundary.  Single-step
     output is pinned bit-identical to the tree layout for sgd and
     allclose for adamw (tests/test_plane.py).
+
+    ``shard=True`` routes the WHOLE round (estimate -> update -> mix)
+    through one ``shard_map`` over ``mesh``: ``population_axes`` shard
+    the agent axis and ``model_axes`` FSDP-shard the plane's dim axis
+    (``core/shardround.py``; metrics and the returned state are pinned
+    against this unsharded path in tests/test_shard.py).  ``mesh=None``
+    with ``shard=False`` (the default) is byte-for-byte this function's
+    pre-existing single-host path.
     """
+    if shard:
+        if mesh is None:
+            raise ValueError("shard=True needs a mesh (see launch/mesh."
+                             "make_hdo_mesh)")
+        # deferred: shardround imports this module for HDOState and the
+        # select-mask helper
+        from repro.core import shardround
+
+        step = shardround.build_sharded_step(
+            loss_fn, cfg,
+            mesh=mesh,
+            population_axes=population_axes or ("agents",),
+            model_axes=model_axes or ("model",),
+            param_dim=param_dim,
+            params_template=params_template,
+            extended_metrics=extended_metrics,
+        )
+        if donate:
+            return jax.jit(step, donate_argnums=(0,))
+        return step
+
     # deferred: topology depends on core.gossip's primitives, so a
     # module-level import here would cycle through repro.core.__init__
     from repro.topology import faults as faultlib

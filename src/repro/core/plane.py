@@ -216,6 +216,33 @@ def rng_tables(manifest: PlaneManifest):
     )
 
 
+def rng_tables_sharded(manifest: PlaneManifest, n_shards: int):
+    """Stacked per-shard ``(n_shards, n_blocks/n_shards)`` RNG tables.
+
+    When the plane's dim axis is FSDP-sharded into ``n_shards``
+    contiguous BLOCK-aligned chunks, shard ``s`` holds plane positions
+    ``[s*dim_local, (s+1)*dim_local)`` at *local* indices; shifting
+    delta by the shard offset keeps the kernels drawing the GLOBAL
+    compact counter stream from local positions::
+
+        counter = local_idx - delta'[b] = global_idx - delta[block]
+
+    so sharded perturb/combine are bit-identical to slices of the
+    unsharded pass.  Select a shard's row at runtime with
+    ``lax.dynamic_slice`` on the model-axis index.
+    """
+    delta, nvalid = rng_tables(manifest)
+    if n_shards < 1 or manifest.n_blocks % n_shards != 0:
+        raise ValueError(
+            f"plane has {manifest.n_blocks} BLOCKs; model-axis sharding "
+            f"needs n_blocks % n_shards == 0 (got n_shards={n_shards})")
+    b_local = manifest.n_blocks // n_shards
+    dim_local = manifest.dim // n_shards
+    shift = np.arange(n_shards, dtype=np.int64)[:, None] * dim_local
+    delta_s = (delta.reshape(n_shards, b_local).astype(np.int64) - shift)
+    return delta_s.astype(np.int32), nvalid.reshape(n_shards, b_local)
+
+
 def dispatch_counts(manifest: PlaneManifest, n_agents: int) -> dict:
     """Analytic per-phase kernel dispatch counts, plane vs tree layout.
 

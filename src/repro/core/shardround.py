@@ -1,0 +1,613 @@
+"""The sharded HDO round: one ``shard_map`` over an ``agents x model``
+mesh covering the full estimate -> update -> mix pipeline.
+
+Placement (see docs/sharding.md):
+
+  * the population axis (``"agents"``) splits the cohort into
+    contiguous blocks of ``n_local = n_agents / A`` agents — every
+    per-agent stream (params, opt state, EF residuals, batches) shards
+    its leading axis;
+  * under ``param_layout="plane"`` the model axis (``"model"``)
+    FSDP-shards the flat ``(n_agents, dim)`` buffer's dim axis into
+    BLOCK-aligned chunks: the O(d) phases (perturb, combine, update,
+    mix) run on local ``dim_local`` slices, and only the loss/backprop
+    boundary reconstructs full rows via a tiled ``all_gather``;
+  * cross-device traffic in the mix phase is the round-decomposed
+    ppermute exchange of ``topology.shardmix`` — O(neighbor degree)
+    blocks per shard, never an O(n_agents) all-gather.
+
+Bit-identity contract: every in-shard expression mirrors the unsharded
+builders term for term (the estimate dispatch masks, ``LocalUpdate`` on
+local rows, ``GraphMixer``'s combine via ``shardmix.combine_local``,
+``CompressedGraphMixer``'s fresh difference-form round), all scalar/
+metric math runs OUTSIDE the shard_map on globally-assembled values
+with the unsharded step's literal expressions, and threefry-derived
+operands are pinned replicated (``compat.replicate_operand``).  The
+8-device subprocess tests in tests/test_shard.py pin sharded ==
+unsharded bitwise across dispatch x zo_impl x layout; ``all_reduce``
+is the one allclose-only mode (a psum reduces in a different order
+than ``mean(axis=0)``).
+
+v1 scope (clear ValueErrors otherwise): homogeneous cohorts,
+``local_steps == 1``, ``dispatch in {"select", "shard_cond"}``,
+``gossip in SHARD_GOSSIP_MODES``, static topologies, no staleness /
+faults; compression (fresh + EF) needs ``model_parallel == 1``;
+``model_parallel > 1`` needs the plane layout with
+``manifest.n_blocks % M == 0`` and no gradient clipping (the
+per-agent global norm would need a cross-shard reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.configs.base import HDOConfig, SHARD_GOSSIP_MODES
+from repro.core import estimators, flatzo, localupdate, population, schedules
+from repro.core import plane as planelib
+from repro.core.hdo import HDOState, _select_tree, consensus_per_agent
+from repro.obs.trace import phase_scope
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardGeometry:
+    """Resolved mesh geometry of one sharded round build."""
+    pop_axes: Tuple[str, ...]
+    mdl_axes: Tuple[str, ...]
+    agent_shards: int   # A
+    n_local: int
+    model_shards: int   # M
+    dim_local: Optional[int]  # plane only; manifest.dim for M == 1
+
+
+def _axes_entry(axes: Tuple[str, ...]):
+    """PartitionSpec entry for an axis tuple (None when empty)."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _resolve_geometry(cfg: HDOConfig, mesh, population_axes, model_axes,
+                      manifest) -> ShardGeometry:
+    pop_axes = tuple(a for a in population_axes if a in mesh.shape)
+    mdl_axes = tuple(a for a in model_axes if a in mesh.shape)
+    if not pop_axes and not mdl_axes:
+        raise ValueError(
+            f"mesh {dict(mesh.shape)} has none of the requested population "
+            f"axes {population_axes} or model axes {model_axes}")
+    A = int(np.prod([mesh.shape[a] for a in pop_axes])) if pop_axes else 1
+    M = int(np.prod([mesh.shape[a] for a in mdl_axes])) if mdl_axes else 1
+    n = cfg.n_agents
+    if n % A != 0:
+        raise ValueError(
+            f"population axes {pop_axes} have {A} shards, which must "
+            f"divide n_agents={n}")
+    dim_local = None
+    if manifest is not None:
+        if manifest.n_blocks % M != 0:
+            raise ValueError(
+                f"model axes {mdl_axes} have {M} shards; the plane's "
+                f"{manifest.n_blocks} BLOCKs must split evenly "
+                f"(n_blocks % M == 0)")
+        dim_local = manifest.dim // M
+    if M > 1:
+        mdl_use = mdl_axes
+    else:
+        mdl_use = ()  # size-1 model axes add nothing; keep specs minimal
+    return ShardGeometry(pop_axes=pop_axes, mdl_axes=mdl_use,
+                         agent_shards=A, n_local=n // A,
+                         model_shards=M, dim_local=dim_local)
+
+
+def _check_supported(cfg: HDOConfig, pop, geom: ShardGeometry) -> None:
+    def bail(msg):
+        raise ValueError(f"sharded HDO round (shard=True): {msg}")
+
+    if not pop.homogeneous:
+        bail("heterogeneous cohorts are not supported yet — use the "
+             "unsharded step (mesh-aware dispatch='shard_cond' covers "
+             "the heterogeneous case there)")
+    if cfg.local_steps != 1:
+        bail(f"local_steps must be 1, got {cfg.local_steps}")
+    if cfg.dispatch not in ("select", "shard_cond"):
+        bail(f"dispatch={cfg.dispatch!r}: static 'split' slicing cannot "
+             "cross shard boundaries — use 'select' or 'shard_cond'")
+    if cfg.gossip not in SHARD_GOSSIP_MODES:
+        bail(f"gossip={cfg.gossip!r} is not shardable; supported: "
+             f"{SHARD_GOSSIP_MODES}")
+    if cfg.topology.startswith("tv_") and cfg.gossip in ("graph",
+                                                         "graph_ppermute"):
+        bail(f"time-varying topology {cfg.topology!r}: the ppermute plan "
+             "needs a static neighbor table")
+    if cfg.staleness > 0 or cfg.fault_drop_rate > 0 \
+            or cfg.fault_straggler_rate > 0 or cfg.fault_byzantine_rate > 0:
+        bail("staleness/fault injection need the buffered gather path — "
+             "run them unsharded")
+    M = geom.model_shards
+    if M > 1:
+        if cfg.param_layout != "plane":
+            bail("model-axis sharding needs param_layout='plane' (the "
+                 "tree layout has no per-leaf FSDP rule in the round)")
+        if cfg.compression != "none":
+            bail("compression + model-axis sharding is not supported "
+                 "(thresholds are row-global); use model_parallel=1")
+        if cfg.clip_norm > 0.0:
+            bail("clip_norm > 0 with model-axis sharding would need a "
+                 "cross-shard norm reduction; use model_parallel=1")
+    if cfg.dispatch == "shard_cond" and 0 < cfg.n_zeroth < cfg.n_agents:
+        if cfg.n_zeroth % geom.n_local != 0:
+            bail(f"dispatch='shard_cond' needs the ZO/FO boundary aligned "
+                 f"with shards: n_zeroth={cfg.n_zeroth} % n_local="
+                 f"{geom.n_local} != 0")
+
+
+def _diag_mixer(cfg: HDOConfig, param_dim):
+    """A gather-path mixer object used ONLY for diagnostics() and
+    wire_bytes_per_agent() — never called on arrays.  graph_ppermute
+    maps onto 'graph' (same topology, same spectral numbers)."""
+    from repro.topology.mixer import make_mixer
+
+    diag_cfg = cfg
+    if cfg.gossip == "graph_ppermute":
+        diag_cfg = dataclasses.replace(cfg, gossip="graph")
+    return make_mixer(diag_cfg, mesh=None, param_dim=param_dim)
+
+
+def _build_round(loss_fn, cfg: HDOConfig, *, mesh, population_axes,
+                 model_axes, param_dim, params_template):
+    """Everything the fused sharded step and the sharded phase fns
+    share: geometry, pspec trees, and the three in-shard phase bodies."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.topology import compress as compresslib
+    from repro.topology import shardmix
+    from repro.topology.graphs import make_topology
+    from repro.topology.mixer import shard_agent_index
+
+    n = cfg.n_agents
+    pop = population.resolve_population(cfg)
+    manifest = None
+    if cfg.param_layout == "plane":
+        if params_template is None:
+            raise ValueError(
+                "param_layout='plane' needs params_template (the "
+                "single-agent model pytree, or its jax.eval_shape structs)")
+        manifest = planelib.build_manifest(params_template)
+    geom = _resolve_geometry(cfg, mesh, population_axes, model_axes, manifest)
+    _check_supported(cfg, pop, geom)
+    A, M, n_local = geom.agent_shards, geom.model_shards, geom.n_local
+    pop_axes, mdl_axes = geom.pop_axes, geom.mdl_axes
+    pop_s = _axes_entry(pop_axes)
+    mdl_s = _axes_entry(mdl_axes)
+    axis_names = set(pop_axes) | set(mdl_axes)
+    use_plane = manifest is not None
+
+    # --- pspec trees -----------------------------------------------------
+    if use_plane:
+        pspec_params_leaf = P(pop_s, mdl_s) if (pop_s or mdl_s) else P()
+        params_pspecs = pspec_params_leaf
+    else:
+        pspec_params_leaf = P(pop_s) if pop_s else P()
+        params_pspecs = None  # built per-state (tree structure unknown here)
+
+    def tree_pspecs(tree):
+        return jax.tree.map(lambda _: pspec_params_leaf, tree)
+
+    def state_pspecs(state):
+        p_psp = (params_pspecs if use_plane else tree_pspecs(state.params))
+        return dict(
+            params=p_psp,
+            opt_state=localupdate.opt_state_pspecs(cfg, p_psp),
+            comm=compresslib.comm_pspecs(cfg, p_psp),
+        )
+
+    batch_leaf_pspec = P(pop_s) if pop_s else P()
+
+    # --- scalars (identical to hdo.build_hdo_step.step) ------------------
+    sched = schedules.warmup_cosine(
+        pop.lr0, cfg.warmup_steps, cfg.cosine_steps, cfg.use_cosine)
+
+    def round_scalars(t):
+        lr = sched(t)
+        nu = (lr / jnp.sqrt(jnp.float32(param_dim))
+              if (cfg.nu_from_lr and param_dim)
+              else jnp.float32(pop.sigma0))
+        return lr, nu
+
+    # --- per-shard agent/model indices -----------------------------------
+    def indices():
+        gidx = shard_agent_index(mesh, pop_axes, n_local)
+        midx = (shard_agent_index(mesh, mdl_axes, 1) if M > 1
+                else jnp.int32(0))
+        return gidx, midx
+
+    # --- estimate bodies -------------------------------------------------
+    dim_local = geom.dim_local
+    if use_plane and M > 1:
+        tables_s = planelib.rng_tables_sharded(manifest, M)
+        mdl_name = mdl_s
+
+        def assemble(v):
+            # (dim_local,) local chunk -> (dim,) full row; identical
+            # bits on every model shard (deterministic concat)
+            return jax.lax.all_gather(v, mdl_name, axis=0, tiled=True)
+
+        def local_tables(midx):
+            b_local = manifest.n_blocks // M
+            dl = jax.lax.dynamic_slice(
+                jnp.asarray(tables_s[0]), (midx, 0), (1, b_local))[0]
+            nv = jax.lax.dynamic_slice(
+                jnp.asarray(tables_s[1]), (midx, 0), (1, b_local))[0]
+            return dl, nv
+    else:
+        assemble = local_tables = None
+
+    unpack = (lambda v: planelib.unpack(manifest, v)) if use_plane else None
+
+    def make_per_agent(midx):
+        """(per_agent_fo, per_agent_zo) closures for this shard — the
+        unsharded ``build_estimate_phase`` bodies, plus the local-slice
+        boundary when the plane's dim axis is sharded."""
+        if use_plane and M > 1:
+            def slice_local(g_plane):
+                return jax.lax.dynamic_slice(
+                    g_plane, (midx * dim_local,), (dim_local,))
+
+            def per_agent_fo(x_i, batch_i):
+                l_i, g_tree = estimators.fo_estimate(
+                    lambda p: loss_fn(p, batch_i), unpack(assemble(x_i)))
+                return l_i, slice_local(planelib.pack(manifest, g_tree))
+
+            dl_nv = local_tables(midx)
+            if cfg.zo_impl == "fused":
+                def zo_engine(loss, x_i, key_i, **kw):
+                    return flatzo.plane_zo_estimate(
+                        loss, x_i, key_i, manifest=manifest,
+                        tables=dl_nv, assemble=assemble, **kw)
+            else:
+                def zo_engine(loss, x_i, key_i, **kw):
+                    l_i, g_tree = estimators.zo_estimate(
+                        loss, unpack(assemble(x_i)), key_i, **kw)
+                    return l_i, slice_local(planelib.pack(manifest, g_tree))
+        elif use_plane:
+            def per_agent_fo(x_i, batch_i):
+                l_i, g_tree = estimators.fo_estimate(
+                    lambda p: loss_fn(p, batch_i), unpack(x_i))
+                return l_i, planelib.pack(manifest, g_tree)
+
+            if cfg.zo_impl == "fused":
+                def zo_engine(loss, x_i, key_i, **kw):
+                    return flatzo.plane_zo_estimate(
+                        loss, x_i, key_i, manifest=manifest, **kw)
+            else:
+                def zo_engine(loss, x_i, key_i, **kw):
+                    l_i, g_tree = estimators.zo_estimate(
+                        loss, unpack(x_i), key_i, **kw)
+                    return l_i, planelib.pack(manifest, g_tree)
+        else:
+            def per_agent_fo(params_i, batch_i):
+                return estimators.fo_estimate(
+                    lambda p: loss_fn(p, batch_i), params_i)
+
+            zo_engine = (flatzo.flat_zo_estimate if cfg.zo_impl == "fused"
+                         else estimators.zo_estimate)
+
+        def per_agent_zo(params_i, batch_i, key_i, nu):
+            return zo_engine(lambda p: loss_fn(p, batch_i), params_i, key_i,
+                             kind=pop.kind0, rv=pop.rv0, nu=nu)
+
+        return per_agent_fo, per_agent_zo
+
+    n0 = cfg.n_zeroth
+    use_cond = (cfg.dispatch == "shard_cond" and 0 < n0 < n)
+
+    def estimate_local(p_l, b_l, k_l, nu, gidx, midx):
+        """(losses_l, g_l) for this shard's ``n_local`` agents —
+        mirrors the unsharded select / shard_cond paths per row."""
+        per_agent_fo, per_agent_zo = make_per_agent(midx)
+        if use_cond:
+            def zo_branch(_):
+                return jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
+                    p_l, b_l, k_l)
+
+            def fo_branch(_):
+                return jax.vmap(per_agent_fo)(p_l, b_l)
+
+            return jax.lax.cond(gidx < n0, zo_branch, fo_branch, None)
+        # select: the SPMD-uniform masked baseline on local rows
+        if cfg.n_first > 0:
+            loss_fo, g_fo = jax.vmap(per_agent_fo)(p_l, b_l)
+        else:
+            loss_fo = jnp.zeros((n_local,), jnp.float32)
+            g_fo = jax.tree.map(jnp.zeros_like, p_l)
+        if cfg.n_zeroth > 0:
+            loss_zo, g_zo = jax.vmap(lambda p, b, k: per_agent_zo(p, b, k, nu))(
+                p_l, b_l, k_l)
+        else:
+            loss_zo = jnp.zeros((n_local,), jnp.float32)
+            g_zo = jax.tree.map(jnp.zeros_like, p_l)
+        is_zo_l = (gidx + jnp.arange(n_local, dtype=jnp.int32)) < n0
+        g = _select_tree(is_zo_l, g_zo, g_fo)
+        losses = jnp.where(is_zo_l, loss_zo, loss_fo)
+        return losses, g
+
+    # --- update body -----------------------------------------------------
+    # the LocalUpdate rule is row-wise, so rebuilding it at the local
+    # cohort size applies the identical per-row arithmetic
+    cfg_local = dataclasses.replace(
+        cfg, n_agents=n_local, n_zeroth=min(cfg.n_zeroth, n_local))
+    local_update = localupdate.make_local_update(cfg_local)
+
+    def update_local(p_l, g_l, o_l, lr):
+        return local_update.apply(p_l, g_l, o_l, lr, None)
+
+    # --- mix body --------------------------------------------------------
+    compressor = compresslib.make_compressor(cfg)
+    graph_gossip = cfg.gossip in ("graph", "graph_ppermute") and n > 1
+    if graph_gossip:
+        topo = make_topology(cfg.topology, n, p=cfg.topology_p,
+                             seed=cfg.topology_seed,
+                             rounds=cfg.topology_rounds)
+        plan = shardmix.plan_shard_mix(topo, A)
+    else:
+        topo = plan = None
+    has_residual, _ = compresslib.comm_stream_flags(cfg)
+
+    def mix_local_fn(p_l, c_l, seeds_l, gidx):
+        """(new_params_l, new_comm_l); mirrors the gather-path mixers."""
+        if cfg.gossip == "none" or n == 1:
+            return p_l, c_l
+        if cfg.gossip == "all_reduce":
+            def ar(x):
+                s = x.astype(jnp.float32).sum(axis=0)
+                if pop_axes:
+                    s = jax.lax.psum(s, pop_s)
+                m = s / jnp.float32(n)
+                return jnp.broadcast_to(m[None], x.shape).astype(x.dtype)
+
+            return jax.tree.map(ar, p_l), c_l
+        # static-graph gossip over the ppermute plan; the plan tables
+        # are indexed by SHARD (gidx is the shard's first global agent)
+        sidx = gidx // n_local
+        sb, sr, w, w_self = shardmix.gather_tables(plan, topo, sidx)
+        if compressor is None:
+            def mix_leaf(x):
+                bufs = shardmix.exchange_blocks(plan, x, pop_s)
+                return shardmix.combine_local(x, bufs, sb, sr, w, w_self)
+
+            return jax.tree.map(mix_leaf, p_l), c_l
+        # compressed fresh round (M == 1): difference-form combine with
+        # locally-computed payloads, exchanging only the decompressed
+        # send payload m — CompressedGraphMixer's jnp path per row
+        resid = c_l.get("residual") if isinstance(c_l, dict) else None
+        p_leaves, tdef = jax.tree.flatten(p_l)
+        r_leaves = (jax.tree.leaves(resid) if resid is not None
+                    else [None] * len(p_leaves))
+        outs = []
+        for x, e in zip(p_leaves, r_leaves):
+            shape = x.shape
+            x2 = x.reshape(n_local, -1)
+            d = x2.shape[1]
+            xf = x2.astype(jnp.float32)
+            u = xf + e.reshape(n_local, d) if e is not None else xf
+            thr = compressor.thresholds(u)
+            m = compressor.apply(u, thr, seeds_l)
+            bufs = shardmix.exchange_blocks(plan, m, pop_s)
+            m_nbr = bufs[sb, sr]  # (n_local, k, d)
+            acc = (w[:, :, None] * (m_nbr - m[:, None, :])).sum(axis=1)
+            out = (xf + acc).astype(x.dtype)
+            new_e = (u - m).reshape(shape) if has_residual else None
+            outs.append((out.reshape(shape), new_e))
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        if resid is not None:
+            new_c = dict(c_l)
+            new_c["residual"] = jax.tree.unflatten(
+                jax.tree.structure(resid), [o[1] for o in outs])
+            return new_p, new_c
+        return new_p, c_l
+
+    wire_dim = manifest.size if manifest is not None else param_dim
+    diag = _diag_mixer(cfg, wire_dim)
+
+    def payload_seeds(t):
+        if compressor is None:
+            return jnp.zeros((n,), jnp.uint32)  # unused placeholder
+        return compresslib.payload_seeds(cfg.seed, t, n)
+
+    return dict(
+        geom=geom, manifest=manifest, pop=pop, n=n,
+        pop_s=pop_s, axis_names=axis_names,
+        pspec_params_leaf=pspec_params_leaf, tree_pspecs=tree_pspecs,
+        state_pspecs=state_pspecs, batch_leaf_pspec=batch_leaf_pspec,
+        round_scalars=round_scalars, indices=indices,
+        estimate_local=estimate_local, update_local=update_local,
+        mix_local_fn=mix_local_fn, payload_seeds=payload_seeds,
+        diag_mixer=diag, wire_dim=wire_dim, P=P,
+    )
+
+
+def build_sharded_step(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    cfg: HDOConfig,
+    *,
+    mesh,
+    population_axes: Tuple[str, ...] = ("agents",),
+    model_axes: Tuple[str, ...] = ("model",),
+    param_dim: Optional[int] = None,
+    params_template: Optional[PyTree] = None,
+    extended_metrics: bool = False,
+) -> Callable[[HDOState, Any], Tuple[HDOState, Dict[str, jnp.ndarray]]]:
+    """``step(state, batches) -> (state, metrics)`` with the whole
+    round under one shard_map (see module docstring).  The metric set
+    matches ``build_hdo_step`` exactly (homogeneous subset) — metric
+    math runs outside the shard_map on the assembled global values."""
+    parts = _build_round(loss_fn, cfg, mesh=mesh,
+                         population_axes=population_axes,
+                         model_axes=model_axes, param_dim=param_dim,
+                         params_template=params_template)
+    P = parts["P"]
+    n = parts["n"]
+    n0 = cfg.n_zeroth
+    mixer_metrics = {
+        k: jnp.float32(v) for k, v in parts["diag_mixer"].diagnostics().items()
+    }
+    payload_bytes = (parts["diag_mixer"].wire_bytes_per_agent(parts["wire_dim"])
+                     if extended_metrics and parts["wire_dim"] else None)
+    pop_s = parts["pop_s"]
+    losses_spec = P(pop_s) if pop_s else P()
+
+    def step(state: HDOState, batches):
+        t = state.step
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
+        lr, nu = parts["round_scalars"](t)
+        skey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
+        agent_keys = jax.random.split(skey, n)
+        # threefry producers must stay replicated under the 0.4.x SPMD
+        # partitioner (see compat) — then shard_map slices them
+        agent_keys = compat.replicate_operand(agent_keys, mesh)
+        seeds_pay = parts["payload_seeds"](t)
+        st_psp = parts["state_pspecs"](state)
+        b_psp = jax.tree.map(lambda _: parts["batch_leaf_pspec"], batches)
+
+        def shard_fn(p_l, o_l, c_l, b_l, keys_l, seeds_full, lr_s, nu_s):
+            gidx, midx = parts["indices"]()
+            with phase_scope("estimate"):
+                losses_l, g_l = parts["estimate_local"](
+                    p_l, b_l, keys_l, nu_s, gidx, midx)
+            with phase_scope("update"):
+                new_p, new_o = parts["update_local"](p_l, g_l, o_l, lr_s)
+            seeds_l = jax.lax.dynamic_slice(
+                seeds_full, (gidx,), (parts["geom"].n_local,))
+            with phase_scope("mix"):
+                new_p, new_c = parts["mix_local_fn"](new_p, c_l, seeds_l, gidx)
+            return new_p, new_o, new_c, losses_l
+
+        new_params, new_opt, new_comm, losses = compat.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(st_psp["params"], st_psp["opt_state"], st_psp["comm"],
+                      b_psp, P(pop_s) if pop_s else P(), P(), P(), P()),
+            out_specs=(st_psp["params"], st_psp["opt_state"], st_psp["comm"],
+                       losses_spec),
+            axis_names=parts["axis_names"],
+            check_vma=False,
+        )(state.params, state.opt_state, state.comm, batches, agent_keys,
+          seeds_pay, lr, nu)
+
+        # ---- metrics: the unsharded step's literal expressions -------
+        mets = {
+            "loss_mean": losses.mean(),
+            "loss_std": losses.std(),
+        }
+        if extended_metrics:
+            mets["loss_agent"] = losses
+        if cfg.n_first:
+            mets["loss_fo_mean"] = losses[n0:].mean()
+        if cfg.n_zeroth:
+            mets["loss_zo_mean"] = losses[:n0].mean()
+        metrics = {**mets, "lr": lr, **mixer_metrics}
+        if extended_metrics:
+            per_agent = consensus_per_agent(new_params)
+            metrics["consensus_agent"] = per_agent
+            metrics["consensus_gamma"] = per_agent.mean()
+            if payload_bytes is not None:
+                metrics["gossip_wire_bytes"] = jnp.float32(n) * jnp.float32(
+                    payload_bytes)
+        return HDOState(params=new_params, opt_state=new_opt, step=t + 1,
+                        comm=new_comm), metrics
+
+    return step
+
+
+def build_sharded_phase_fns(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    cfg: HDOConfig,
+    *,
+    mesh,
+    population_axes: Tuple[str, ...] = ("agents",),
+    model_axes: Tuple[str, ...] = ("model",),
+    param_dim: Optional[int] = None,
+    params_template: Optional[PyTree] = None,
+    jit: bool = True,
+):
+    """The sharded round's three phases as standalone calls with the
+    ``obs.timing.PhaseFns`` contract — each phase is its own shard_map,
+    composing bit-identically with ``build_sharded_step`` (same bodies,
+    same key/schedule derivations)."""
+    from repro.obs.timing import PhaseFns
+
+    parts = _build_round(loss_fn, cfg, mesh=mesh,
+                         population_axes=population_axes,
+                         model_axes=model_axes, param_dim=param_dim,
+                         params_template=params_template)
+    P = parts["P"]
+    n = parts["n"]
+    pop_s = parts["pop_s"]
+    losses_spec = P(pop_s) if pop_s else P()
+
+    def estimate(state, batches):
+        t = state.step
+        _, nu = parts["round_scalars"](t)
+        skey = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), t)
+        agent_keys = compat.replicate_operand(
+            jax.random.split(skey, n), mesh)
+        p_psp = parts["state_pspecs"](state)["params"]
+        b_psp = jax.tree.map(lambda _: parts["batch_leaf_pspec"], batches)
+
+        def shard_fn(p_l, b_l, keys_l, nu_s):
+            gidx, midx = parts["indices"]()
+            return parts["estimate_local"](p_l, b_l, keys_l, nu_s, gidx, midx)
+
+        return compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(p_psp, b_psp, P(pop_s) if pop_s else P(), P()),
+            out_specs=(losses_spec, p_psp),
+            axis_names=parts["axis_names"], check_vma=False,
+        )(state.params, batches, agent_keys, nu)
+
+    def update(state, g):
+        lr, _ = parts["round_scalars"](state.step)
+        st_psp = parts["state_pspecs"](state)
+
+        def shard_fn(p_l, g_l, o_l, lr_s):
+            return parts["update_local"](p_l, g_l, o_l, lr_s)
+
+        return compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(st_psp["params"], st_psp["params"],
+                      st_psp["opt_state"], P()),
+            out_specs=(st_psp["params"], st_psp["opt_state"]),
+            axis_names=parts["axis_names"], check_vma=False,
+        )(state.params, g, state.opt_state, lr)
+
+    # mix() receives (state, new_params) and mixes new_params against
+    # state.comm — the PhaseFns contract
+    def mix_fn(state, new_params):
+        t = state.step
+        seeds_pay = parts["payload_seeds"](t)
+        st_psp = parts["state_pspecs"](state)
+
+        def shard_fn(p_l, c_l, seeds_full):
+            gidx, _ = parts["indices"]()
+            seeds_l = jax.lax.dynamic_slice(
+                seeds_full, (gidx,), (parts["geom"].n_local,))
+            return parts["mix_local_fn"](p_l, c_l, seeds_l, gidx)
+
+        return compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(st_psp["params"], st_psp["comm"], P()),
+            out_specs=(st_psp["params"], st_psp["comm"]),
+            axis_names=parts["axis_names"], check_vma=False,
+        )(new_params, state.comm, seeds_pay)
+
+    if jit:
+        estimate, update, mix_fn = (jax.jit(estimate), jax.jit(update),
+                                    jax.jit(mix_fn))
+    return PhaseFns(estimate, update, mix_fn,
+                    dict(parts["diag_mixer"].diagnostics()))

@@ -36,6 +36,7 @@ from repro.configs.base import (
 )
 from repro.core import hdo as hdolib
 from repro.core import localupdate
+from repro.core import plane as planelib
 from repro.launch import hlo_analysis, specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
@@ -159,11 +160,13 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool, gossip: str,
 
         if hcfg.param_layout == "plane":
             # the plane is one bare (n_agents, dim) buffer — the
-            # leaf-NAME-based pspec machinery cannot apply, so shard the
-            # agent axis over the population axes and replicate the
-            # (BLOCK-aligned, contiguous) plane dim
-            pop_axes = shardlib._maybe(mcfg.population_axes, n_agents, mesh)
-            pspec_params = P(pop_axes) if pop_axes else P()
+            # leaf-NAME-based pspec machinery cannot apply; the plane
+            # rule shards the agent axis over the population axes and
+            # FSDP-shards the dim axis over the model axes when every
+            # model shard gets whole BLOCKs (replicated otherwise)
+            manifest = planelib.build_manifest(params_sds)
+            pspec_params = shardlib.plane_pspec(
+                n_agents, manifest.dim, mcfg, mesh)
         else:
             pspec_params = shardlib.params_pspecs(
                 state_sds.params, mcfg, mesh, population=True)

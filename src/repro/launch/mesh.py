@@ -6,6 +6,7 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,4 +18,40 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model_parallel: int = 1):
     """1-device-friendly mesh for CPU smoke paths."""
     n = len(jax.devices())
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"model_parallel={model_parallel} must divide the device count "
+            f"({n} devices visible)")
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_hdo_mesh(n_agents: int, model_parallel: int = 1, *,
+                  agent_shards: int | None = None):
+    """2-D ``agents x model`` mesh for the sharded HDO round.
+
+    The population axis must evenly split the cohort, so the agent-shard
+    count is the largest divisor of ``n_agents`` that fits the devices
+    left after ``model_parallel`` (or exactly ``agent_shards`` when
+    given).  The mesh may use a leading subset of the visible devices —
+    a cohort of 6 on an 8-device host gets a (6, 1) mesh, not a crash.
+    """
+    devices = jax.devices()
+    n_dev = len(devices)
+    if model_parallel < 1 or n_dev % model_parallel != 0:
+        raise ValueError(
+            f"model_parallel={model_parallel} must divide the device count "
+            f"({n_dev} devices visible)")
+    avail = n_dev // model_parallel
+    if agent_shards is None:
+        agent_shards = max(a for a in range(1, min(n_agents, avail) + 1)
+                           if n_agents % a == 0)
+    if agent_shards < 1 or n_agents % agent_shards != 0:
+        raise ValueError(
+            f"agent_shards={agent_shards} must divide n_agents={n_agents}")
+    if agent_shards * model_parallel > n_dev:
+        raise ValueError(
+            f"mesh shape ({agent_shards} agents x {model_parallel} model) "
+            f"needs {agent_shards * model_parallel} devices; only {n_dev} visible")
+    grid = np.asarray(devices[: agent_shards * model_parallel], dtype=object)
+    return jax.sharding.Mesh(grid.reshape(agent_shards, model_parallel),
+                             ("agents", "model"))

@@ -118,13 +118,24 @@ def main() -> None:
                          f"each one of {ZO_ESTIMATORS}")
     # choices derive from configs.base so the CLI can never drift from
     # what HDOConfig.__post_init__ accepts (single-source rule); the
-    # ppermute lowerings are excluded because this driver builds no
-    # mesh — they are dryrun/TPU surfaces and would fail at step build
+    # ppermute lowerings additionally need a mesh (--mesh-agents),
+    # validated after parse
     ap.add_argument("--gossip", default="dense",
-                    choices=[g for g in GOSSIP_MODES if not g.endswith("_ppermute")],
+                    choices=list(GOSSIP_MODES),
                     help="interaction step: paper's random pairing (dense), "
                          "round-robin tournament, graph-topology weighted "
-                         "mixing, all_reduce, or none")
+                         "mixing (or its ppermute lowering under "
+                         "--mesh-agents), all_reduce, or none")
+    ap.add_argument("--mesh-agents", type=int, default=0,
+                    help="shard the WHOLE round over an agents x model "
+                         "device mesh with this many population shards "
+                         "(must divide --agents; 0 = single-host step, "
+                         "no mesh).  See docs/sharding.md")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-parallel shards of the mesh: under "
+                         "--param-layout plane the flat dim axis "
+                         "FSDP-shards into BLOCK-aligned chunks "
+                         "(needs --mesh-agents)")
     ap.add_argument("--topology", default="ring", choices=list(TOPOLOGIES),
                     help="neighbor graph for --gossip graph/graph_ppermute "
                          "(Metropolis–Hastings doubly-stochastic weights)")
@@ -221,6 +232,12 @@ def main() -> None:
     args = ap.parse_args()
     if args.save_every and not args.ckpt:
         ap.error("--save-every needs --ckpt (there is no path to save to)")
+    if args.mesh_model > 1 and not args.mesh_agents:
+        ap.error("--mesh-model needs --mesh-agents (the 2-D mesh is built "
+                 "only for the sharded round)")
+    if args.gossip.endswith("_ppermute") and not args.mesh_agents:
+        ap.error(f"--gossip {args.gossip} is a shard_map lowering — it "
+                 "needs --mesh-agents")
 
     hcfg = HDOConfig(
         n_agents=args.agents,
@@ -319,9 +336,23 @@ def main() -> None:
     # the extended per-agent/wire metrics ride only structured-sink runs
     # (observe-only: the returned state is bit-identical either way)
     extended = bool(args.metrics_out)
+    mesh = None
+    n_shards = 1
+    if args.mesh_agents:
+        from repro.launch.mesh import make_hdo_mesh
+
+        mesh = make_hdo_mesh(args.agents, args.mesh_model,
+                             agent_shards=args.mesh_agents)
+        n_shards = args.mesh_agents * args.mesh_model
+        print(f"# mesh: {args.mesh_agents} agent shards x "
+              f"{args.mesh_model} model shards over "
+              f"{n_shards} devices (sharded round)")
     step_fn = jax.jit(build_hdo_step(model.loss, hcfg, param_dim=n_params,
                                      params_template=params,
-                                     extended_metrics=extended))
+                                     extended_metrics=extended,
+                                     shard=mesh is not None, mesh=mesh,
+                                     population_axes=("agents",),
+                                     model_axes=("model",)))
     # the manifest hash fingerprints the model's leaf set/shapes/dtypes
     # for BOTH layouts, so --resume across a model change fails loudly
     man_hash = planelib.manifest_hash(planelib.build_manifest(params))
@@ -382,11 +413,15 @@ def main() -> None:
         if hcfg.local_steps == 1:
             sample_set = frozenset(obstiming.default_sample_rounds(args.steps))
             phase_fns = obstiming.build_phase_fns(
-                model.loss, hcfg, param_dim=n_params, params_template=params)
+                model.loss, hcfg, param_dim=n_params, params_template=params,
+                shard=mesh is not None, mesh=mesh,
+                population_axes=("agents",) if mesh is not None else (),
+                model_axes=("model",) if mesh is not None else ())
             if extended:
                 timer = obstiming.PhaseTimer(
                     phase_fns,
-                    obstiming.analytic_phase_bytes(hcfg, n_params))
+                    obstiming.analytic_phase_bytes(hcfg, n_params,
+                                                   n_shards=n_shards))
         else:
             print("# per-phase timing/tracing skipped: local_steps > 1 has "
                   "no three-call phase decomposition")

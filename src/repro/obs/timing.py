@@ -73,14 +73,29 @@ def build_phase_fns(
     population_axes: Tuple[str, ...] = (),
     params_template: Optional[PyTree] = None,
     jit: bool = True,
+    shard: bool = False,
+    model_axes: Tuple[str, ...] = (),
 ) -> PhaseFns:
     """The fused step's phases as standalone calls (same builders, same
     key stream — see module docstring).  ``jit=True`` returns each
-    phase already jitted (the fenced-timing shape)."""
+    phase already jitted (the fenced-timing shape).  ``shard=True``
+    routes each phase through its own ``shard_map`` over ``mesh``
+    (core/shardround.py), matching ``build_hdo_step(shard=True)`` — so
+    per-phase numbers time the same sharded programs the fused sharded
+    round runs."""
     from repro.configs.base import HDOConfig  # noqa: F401  (type anchor)
     from repro.core import hdo, localupdate, population, schedules
     from repro.core import plane as planelib
     from repro.topology.mixer import make_mixer
+
+    if shard:
+        from repro.core import shardround
+
+        return shardround.build_sharded_phase_fns(
+            loss_fn, cfg, mesh=mesh,
+            population_axes=population_axes or ("agents",),
+            model_axes=model_axes or ("model",),
+            param_dim=param_dim, params_template=params_template, jit=jit)
 
     if cfg.local_steps != 1:
         raise ValueError(
@@ -174,7 +189,8 @@ def phase_round(fns: PhaseFns, state, batches, *, annotate: bool = False):
                     comm=new_comm), losses
 
 
-def analytic_phase_bytes(cfg, param_dim: Optional[int]) -> Dict[str, int]:
+def analytic_phase_bytes(cfg, param_dim: Optional[int], *,
+                         n_shards: int = 1) -> Dict[str, int]:
     """Analytic HBM traffic of the update/mix phases for one round of
     the whole population — the ``benchmarks/kernel_bench.py`` model
     (``msz`` = momentum element width):
@@ -192,9 +208,19 @@ def analytic_phase_bytes(cfg, param_dim: Optional[int]) -> Dict[str, int]:
     Phases without a clean model (dense random pairing, all_reduce,
     time-varying graphs, the estimate phase) are omitted rather than
     priced wrongly.  Empty dict when ``param_dim`` is unknown.
+
+    ``n_shards`` divides the totals: under the sharded round the
+    population's O(n * d) streams split evenly over the mesh, so the
+    fenced per-phase timings (which measure ONE process hosting all
+    shards on forced host devices, or one real device's shard on
+    hardware) pair with per-shard bytes — ``hbm_gbps_*`` then reports
+    per-device achieved bandwidth.  The default (1) is the whole-
+    population accounting of the unsharded step.
     """
     if not param_dim:
         return {}
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     out: Dict[str, int] = {}
     n, d = cfg.n_agents, int(param_dim)
     msz = 2 if cfg.momentum_dtype == "bfloat16" else 4
@@ -214,6 +240,8 @@ def analytic_phase_bytes(cfg, param_dim: Optional[int]) -> Dict[str, int]:
         k = topo.k
         per_agent = ((k + 4) if cfg.compression != "none" else (k + 2)) * d * 4
         out["hbm_bytes_mix"] = n * per_agent
+    if n_shards > 1:
+        out = {k: v // n_shards for k, v in out.items()}
     return out
 
 

@@ -123,6 +123,28 @@ def params_pspecs(params_shapes: PyTree, mcfg: MeshConfig, mesh: Mesh, *, popula
     )
 
 
+def plane_pspec(n_agents: int, dim: int, mcfg: MeshConfig, mesh: Mesh) -> P:
+    """Partition rule for the bare ``(n_agents, dim)`` parameter plane
+    (``HDOConfig.param_layout="plane"``, core/plane.py).
+
+    The agent axis shards over ``population_axes`` and the flat dim
+    axis FSDP-shards over ``model_axes`` — but only when every model
+    shard gets a whole number of BLOCK-aligned chunks (the plane ZO
+    kernels address whole BLOCKs; ``plane.rng_tables_sharded`` carries
+    the same constraint), falling back to replicating the dim axis
+    otherwise.  Used by ``launch/dryrun.py`` and mirrored by the
+    sharded round's in-shard layout (core/shardround.py).
+    """
+    from repro.kernels.zo_combine import BLOCK
+
+    pop = _maybe(mcfg.population_axes, n_agents, mesh)
+    mdl = tuple(a for a in mcfg.model_axes if a in mesh.shape)
+    m = _axes_size(mesh, mdl)
+    if m > 1 and dim % (m * BLOCK) == 0:
+        return P(pop, mdl if len(mdl) > 1 else mdl[0])
+    return P(pop)
+
+
 def batch_pspecs(batch_shapes: PyTree, mcfg: MeshConfig, mesh: Mesh, *, population: bool) -> PyTree:
     """Training batches: (n_agents, per_batch, ...) leaves."""
 

@@ -479,31 +479,36 @@ class RRPpermuteMixer(Mixer):
 
 
 class GraphPpermuteMixer(Mixer):
-    """shard_map/ppermute lowering of ``GraphMixer`` for topologies
-    whose neighbor-table columns are permutations (ring / torus /
-    hypercube): one point-to-point exchange per neighbor slot, then the
-    per-agent weighted combine — through the ``gossip_mix`` kernel when
-    ``use_kernel`` is set."""
+    """shard_map/ppermute lowering of ``GraphMixer``.
+
+    Permutation-column topologies (ring / torus / hypercube) keep the
+    original schedule: one point-to-point exchange per neighbor slot,
+    then the per-agent weighted combine — through the ``gossip_mix``
+    kernel when ``use_kernel`` is set.  Irregular topologies (ER) are
+    decomposed into partial-permutation rounds
+    (``topology.shardmix.plan_shard_mix`` — at most ``2*Delta - 1``
+    exchanges), so *every* static topology mixes over point-to-point
+    ppermute instead of an all-gather."""
 
     def __init__(self, topo: Topology, mesh, population_axes, *,
                  use_kernel: bool = False):
         if mesh is None:
             raise ValueError("graph_ppermute needs a mesh")
-        if not topo.columns_are_permutations():
-            raise ValueError(
-                f"graph_ppermute needs permutation neighbor columns; "
-                f"topology {topo.name!r} is irregular — use gossip='graph'"
-            )
         pop_axes, pop_size = _pop_axes_size(mesh, population_axes)
         if topo.n != pop_size:
             raise ValueError(
                 f"graph_ppermute needs one agent per population shard "
                 f"(n={topo.n}, shards={pop_size})"
             )
+        # deferred to dodge a topology.__init__ import cycle
+        from repro.topology import shardmix
+
         self.topo = topo
         self.mesh = mesh
         self.pop_axes = pop_axes
         self.use_kernel = use_kernel
+        self._plan = (None if topo.columns_are_permutations()
+                      else shardmix.plan_shard_mix(topo, topo.n))
 
     def __call__(self, params, *, key, step):
         topo = self.topo
@@ -513,8 +518,19 @@ class GraphPpermuteMixer(Mixer):
         w_self = jnp.asarray(topo.self_weight)
         from jax.sharding import PartitionSpec as P
 
+        from repro.topology import shardmix
+
         def gossip_shard(p_l):
             idx = shard_agent_index(self.mesh, self.pop_axes)
+            if self._plan is not None:
+                # irregular topology: round-decomposed exchange; each
+                # leaf is locally (1, ...) = this agent's row
+                return jax.tree.map(
+                    lambda x: shardmix.mix_local(
+                        self._plan, topo, x, axis, idx,
+                        use_kernel=self.use_kernel),
+                    p_l,
+                )
             w_i = w[idx]  # (k,)
             ws_i = w_self[idx]
             recvs = []
@@ -597,6 +613,8 @@ class CompressedGraphPpermuteMixer(GraphPpermuteMixer):
 
         def gossip_shard(p_l, e_l, seeds_l):
             # every leaf is locally (1, ...); seeds_l is the shard's (1,)
+            from repro.topology import shardmix
+
             idx = shard_agent_index(self.mesh, self.pop_axes)
             w_i = weights[idx]  # (k,)
             p_leaves, tdef = jax.tree.flatten(p_l)
@@ -609,23 +627,43 @@ class CompressedGraphPpermuteMixer(GraphPpermuteMixer):
                     u = u + e.reshape(-1)
                 us.append(u)
                 thrs.append(comp.thresholds(u[None, :]))  # (1,)
-            recvs = []
-            for s in range(k):
-                perm = [(int(topo.neighbors[j, s]), j) for j in range(n)]
+            if self._plan is not None:
+                # irregular topology: exchange the (send basis,
+                # threshold, seed) triple through the plan's rounds and
+                # gather each slot's payload from its receive buffer
+                plan = self._plan
+                sb = jax.lax.dynamic_slice(
+                    jnp.asarray(plan.src_buf), (idx, 0, 0), (1, 1, k))[0, 0]
+                bufs_us = [shardmix.exchange_blocks(plan, u, axis)
+                           for u in us]
+                bufs_th = [shardmix.exchange_blocks(plan, t, axis)
+                           for t in thrs]
+                bufs_se = shardmix.exchange_blocks(plan, seeds_l, axis)
+            else:
+                recvs = []
+                for s in range(k):
+                    perm = [(int(topo.neighbors[j, s]), j) for j in range(n)]
 
-                def pp(z, _perm=perm):
-                    return jax.lax.ppermute(z, axis_name=axis, perm=_perm)
+                    def pp(z, _perm=perm):
+                        return jax.lax.ppermute(z, axis_name=axis, perm=_perm)
 
-                recvs.append(([pp(u) for u in us],
-                              [pp(t) for t in thrs],
-                              pp(seeds_l)))
+                    recvs.append(([pp(u) for u in us],
+                                  [pp(t) for t in thrs],
+                                  pp(seeds_l)))
             outs_p, outs_e = [], []
             for li, (x, u) in enumerate(zip(p_leaves, us)):
-                nbrs = jnp.stack([recvs[s][0][li] for s in range(k)])
-                thr_vec = jnp.concatenate(
-                    [thrs[li]] + [recvs[s][1][li] for s in range(k)])
-                seed_vec = jnp.concatenate(
-                    [seeds_l] + [recvs[s][2] for s in range(k)])
+                if self._plan is not None:
+                    nbrs = bufs_us[li][sb]  # (k, d)
+                    thr_vec = jnp.concatenate(
+                        [thrs[li], bufs_th[li][sb][:, 0]])
+                    seed_vec = jnp.concatenate(
+                        [seeds_l, bufs_se[sb][:, 0]])
+                else:
+                    nbrs = jnp.stack([recvs[s][0][li] for s in range(k)])
+                    thr_vec = jnp.concatenate(
+                        [thrs[li]] + [recvs[s][1][li] for s in range(k)])
+                    seed_vec = jnp.concatenate(
+                        [seeds_l] + [recvs[s][2] for s in range(k)])
                 flat = x.reshape(-1)
                 if self.use_kernel:
                     out, new_e = ops.compress_mix(

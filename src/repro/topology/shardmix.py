@@ -1,0 +1,238 @@
+"""Round-decomposed ppermute lowering of static-graph gossip.
+
+The static topologies (``topology/graphs.py``) carry slot-structured
+neighbor tables ``neighbors: (n, k)``.  When the cohort is split into
+``n_shards`` contiguous blocks of ``n_local`` agents (one block per
+mesh shard), every cross-shard neighbor edge becomes a directed
+shard-to-shard transfer of one ``(n_local, d)`` block.  This module
+plans those transfers as a sequence of *partial permutations* — each
+round is a set of ``(src_shard, dst_shard)`` pairs with distinct
+sources and distinct destinations, exactly the contract of
+``lax.ppermute`` — so the mix phase moves ``O(degree)`` blocks per
+shard instead of the ``O(n_shards)`` blocks an all-gather pays.
+
+Greedy edge coloring in slot-major discovery order needs at most
+``2*Delta - 1`` rounds (Delta = max directed shard degree); for
+permutation-column topologies with one agent per shard it reproduces
+the slot structure exactly (one round per slot).
+
+The combine mirrors ``GraphMixer._mix_leaf``'s jnp expression term for
+term, so plan-based mixing is bit-identical to the dense gather —
+``tests/test_shard.py`` pins both the numpy simulation against
+``topo.mixing_matrix() @ X`` and the sharded round against the
+unsharded one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.topology.graphs import Topology
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMixPlan:
+    """Static exchange plan for one topology at one shard count.
+
+    ``rounds[r]`` is the partial permutation of round ``r``; buffer 0 is
+    the shard's own block and buffer ``r + 1`` holds what round ``r``
+    delivered.  ``src_buf``/``src_row`` are ``(n_shards, n_local, k)``
+    gather tables: agent ``(s, i)``'s slot-``c`` neighbor lives at row
+    ``src_row[s, i, c]`` of buffer ``src_buf[s, i, c]``.
+    """
+    n: int
+    n_shards: int
+    n_local: int
+    rounds: Tuple[Tuple[Tuple[int, int], ...], ...]
+    src_buf: np.ndarray
+    src_row: np.ndarray
+    n_edges: int  # directed cross-shard block edges (sum over rounds)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def ppermute_bytes(self, d_local: int, itemsize: int = 4) -> int:
+        """Cross-device bytes ONE mix moves, summed over shards: every
+        directed shard edge carries one ``(n_local, d_local)`` block."""
+        return self.n_edges * self.n_local * int(d_local) * itemsize
+
+    def allgather_bytes(self, d_local: int, itemsize: int = 4) -> int:
+        """What the dense fallback pays: every shard receives the other
+        ``n_shards - 1`` blocks."""
+        return (self.n_shards * (self.n_shards - 1)
+                * self.n_local * int(d_local) * itemsize)
+
+
+def plan_shard_mix(topo: Topology, n_shards: int) -> ShardMixPlan:
+    """Decompose ``topo``'s neighbor table into ppermute rounds over
+    ``n_shards`` contiguous agent blocks."""
+    n, k = topo.n, topo.k
+    if n_shards < 1 or n % n_shards != 0:
+        raise ValueError(
+            f"n_shards={n_shards} must divide the cohort (n={n})")
+    n_local = n // n_shards
+    nbr = np.asarray(topo.neighbors)
+
+    # discover directed cross-shard edges in slot-major order so that
+    # permutation-column topologies at n_shards == n color to exactly
+    # one round per slot (the legacy per-slot ppermute schedule)
+    edges: List[Tuple[int, int]] = []
+    seen = set()
+    for c in range(k):
+        for i in range(n):
+            src = int(nbr[i, c]) // n_local
+            dst = i // n_local
+            if src == dst or (src, dst) in seen:
+                continue
+            seen.add((src, dst))
+            edges.append((src, dst))
+
+    # greedy edge coloring: first round where both endpoints are free
+    rounds: List[List[Tuple[int, int]]] = []
+    round_src: List[set] = []
+    round_dst: List[set] = []
+    edge_round = {}
+    for (src, dst) in edges:
+        for r in range(len(rounds)):
+            if src not in round_src[r] and dst not in round_dst[r]:
+                break
+        else:
+            rounds.append([])
+            round_src.append(set())
+            round_dst.append(set())
+            r = len(rounds) - 1
+        rounds[r].append((src, dst))
+        round_src[r].add(src)
+        round_dst[r].add(dst)
+        edge_round[(src, dst)] = r
+
+    src_buf = np.zeros((n_shards, n_local, k), np.int32)
+    src_row = np.zeros((n_shards, n_local, k), np.int32)
+    for i in range(n):
+        s, il = divmod(i, n_local)
+        for c in range(k):
+            j = int(nbr[i, c])
+            src_row[s, il, c] = j % n_local
+            t = j // n_local
+            src_buf[s, il, c] = 0 if t == s else 1 + edge_round[(t, s)]
+
+    return ShardMixPlan(
+        n=n, n_shards=n_shards, n_local=n_local,
+        rounds=tuple(tuple(r) for r in rounds),
+        src_buf=src_buf, src_row=src_row, n_edges=len(edges))
+
+
+def simulate_mix(plan: ShardMixPlan, topo: Topology, x: np.ndarray) -> np.ndarray:
+    """Pure-numpy reference of the round-decomposed exchange + combine.
+
+    Float64; must equal ``topo.mixing_matrix() @ x`` — the device-free
+    correctness oracle for the plan (a shard not addressed in a round
+    receives zeros, exactly like ``lax.ppermute``).
+    """
+    x = np.asarray(x, np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    n_local, d = plan.n_local, x.shape[-1]
+    blocks = x.reshape(plan.n_shards, n_local, d)
+    bufs = np.zeros((plan.n_shards, plan.n_rounds + 1, n_local, d))
+    bufs[:, 0] = blocks
+    for r, perm in enumerate(plan.rounds):
+        for (src, dst) in perm:
+            bufs[dst, r + 1] = blocks[src]
+    w = np.asarray(topo.weights, np.float64)
+    w_self = np.asarray(topo.self_weight, np.float64)
+    out = np.zeros_like(x)
+    for i in range(plan.n):
+        s, il = divmod(i, n_local)
+        acc = w_self[i] * x[i]
+        for c in range(topo.k):
+            acc = acc + w[i, c] * bufs[s, plan.src_buf[s, il, c],
+                                       plan.src_row[s, il, c]]
+        out[i] = acc
+    return out
+
+
+# ---------------------------------------------------------------------------
+# jax side: exchange + combine on one shard's local block
+
+
+def exchange_blocks(plan: ShardMixPlan, x_local, axis_name):
+    """ppermute the local block through the plan's rounds.
+
+    Returns the stacked ``(n_rounds + 1, n_local, ...)`` receive buffers
+    (buffer 0 = the shard's own block).  With no cross-shard edges
+    (n_shards == 1, or a shard-local topology) no collective is issued.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    bufs = [x_local]
+    for perm in plan.rounds:
+        bufs.append(jax.lax.ppermute(
+            x_local, axis_name=axis_name, perm=list(perm)))
+    return jnp.stack(bufs)
+
+
+def gather_tables(plan: ShardMixPlan, topo: Topology, shard_idx):
+    """Runtime-select this shard's gather/weight tables.
+
+    ``shard_idx`` is a traced scalar (``shard_agent_index`` over the
+    population axes), so the same program serves every shard.
+    Returns ``(src_buf, src_row, weights, self_weight)`` local slices.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n_local, k = plan.n_local, topo.k
+    sb = jax.lax.dynamic_slice(
+        jnp.asarray(plan.src_buf), (shard_idx, 0, 0), (1, n_local, k))[0]
+    sr = jax.lax.dynamic_slice(
+        jnp.asarray(plan.src_row), (shard_idx, 0, 0), (1, n_local, k))[0]
+    row0 = shard_idx * n_local
+    w = jax.lax.dynamic_slice(
+        jnp.asarray(topo.weights), (row0, 0), (n_local, k))
+    w_self = jax.lax.dynamic_slice(
+        jnp.asarray(topo.self_weight), (row0,), (n_local,))
+    return sb, sr, w, w_self
+
+
+def combine_local(x_local, bufs, sb, sr, w, w_self, *, use_kernel=False):
+    """The Metropolis–Hastings combine on one shard's rows.
+
+    Mirrors ``GraphMixer._mix_leaf``'s jnp expression term for term so
+    sharded mixing stays bit-identical to the dense gather (padded
+    self-loop slots carry weight 0 and gather the agent's own row, same
+    as the dense path).  ``use_kernel`` routes through the fused
+    ``gossip_mix`` Pallas kernel like ``GraphMixer``'s kernel path.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    n_local, k = sb.shape
+    gathered = bufs[sb, sr]  # (n_local, k, ...)
+    if use_kernel:
+        flat = x_local.reshape(n_local, -1)
+        nbrs = gathered.reshape(n_local, k, -1)
+        out = jax.vmap(ops.gossip_mix)(flat, nbrs, w_self, w)
+        return out.reshape(x_local.shape)
+    tail = (1,) * (x_local.ndim - 1)
+    acc = w_self.reshape((n_local,) + tail) * x_local.astype(jnp.float32)
+    acc = acc + (w.reshape((n_local, k) + tail)
+                 * gathered.astype(jnp.float32)).sum(axis=1)
+    return acc.astype(x_local.dtype)
+
+
+def mix_local(plan: ShardMixPlan, topo: Topology, x_local, axis_name,
+              shard_idx, *, use_kernel=False):
+    """exchange + combine for one leaf's local ``(n_local, ...)`` block."""
+    bufs = exchange_blocks(plan, x_local, axis_name)
+    sb, sr, w, w_self = gather_tables(plan, topo, shard_idx)
+    return combine_local(x_local, bufs, sb, sr, w, w_self,
+                         use_kernel=use_kernel)
